@@ -1,0 +1,71 @@
+"""Shared benchmark scaffolding: data, FL runs, CSV emission."""
+
+from __future__ import annotations
+
+import functools
+import os
+import time
+
+from repro.core.fediac import FediACConfig
+from repro.data import classification, partition_dirichlet, partition_iid
+from repro.switch import SwitchProfile
+from repro.training import FLConfig, run_federated
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results")
+N_CLIENTS = 20
+ROUNDS = 40
+
+
+@functools.lru_cache(maxsize=None)
+def task_data(seed: int = 0, n: int = 8000):
+    data = classification(n=n, dim=48, n_classes=10, seed=seed)
+    return data.test_split(0.2)
+
+
+@functools.lru_cache(maxsize=None)
+def clients_for(dist: str, beta: float = 0.5, seed: int = 0, n_clients: int = N_CLIENTS):
+    train, _ = task_data(seed)
+    if dist == "iid":
+        return tuple(partition_iid(train, n_clients, seed))
+    return tuple(partition_dirichlet(train, n_clients, beta=beta, seed=seed))
+
+
+ALGOS = {
+    "fediac": dict(aggregator="fediac",
+                   agg_kwargs={"cfg": FediACConfig(a=3, bits=12, k_frac=0.05,
+                                                   capacity_frac=0.05)}),
+    "switchml": dict(aggregator="switchml", agg_kwargs={"bits": 12}),
+    "libra": dict(aggregator="libra", agg_kwargs={"k_frac": 0.01, "hot_frac": 0.01}),
+    "omnireduce": dict(aggregator="omnireduce", agg_kwargs={"k_frac": 0.05}),
+    "topk": dict(aggregator="topk", agg_kwargs={"k_frac": 0.01}),
+    "fedavg": dict(aggregator="fedavg", agg_kwargs={}),
+}
+
+
+def run_algo(name: str, *, dist: str = "noniid", beta: float = 0.5,
+             switch: str = "high", rounds: int = ROUNDS, seed: int = 0,
+             n_clients: int = N_CLIENTS, **overrides):
+    _, test = task_data(seed)
+    clients = list(clients_for(dist, beta, seed, n_clients))
+    spec = dict(ALGOS[name])
+    spec["agg_kwargs"] = {**spec["agg_kwargs"], **overrides.pop("agg_kwargs", {})}
+    profile = SwitchProfile.high() if switch == "high" else SwitchProfile.low()
+    cfg = FLConfig(n_clients=n_clients, rounds=rounds, local_steps=5,
+                   switch=profile, local_train_s=0.1, seed=seed,
+                   **spec, **overrides)
+    return run_federated(clients, test, cfg)
+
+
+def emit(rows):
+    """rows: iterable of (name, value, derived-str). Prints the CSV contract."""
+    for name, value, derived in rows:
+        print(f"{name},{value},{derived}")
+
+
+def timed(f, *args, reps: int = 3, **kw):
+    f(*args, **kw)  # warmup / compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = f(*args, **kw)
+    dt = (time.perf_counter() - t0) / reps
+    return out, dt * 1e6  # us

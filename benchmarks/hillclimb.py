@@ -1,0 +1,74 @@
+"""§Perf hillclimb driver: run a (arch x shape) dry-run under config
+variants and report roofline-term deltas vs the recorded baseline.
+
+  PYTHONPATH=src python -m benchmarks.hillclimb --pair yi_6b:train_4k \
+      --variant 'name=chunk64;fediac.vote_chunk=64'
+
+Each --variant is ';'-separated key=value overrides (JSON-parsed values),
+with an optional name= label.  Results print as a markdown table row ready
+for EXPERIMENTS.md §Perf.
+"""
+
+import argparse
+import json
+import sys
+
+
+def parse_variant(spec: str):
+    name, overrides = None, {}
+    for kv in spec.split(";"):
+        k, v = kv.split("=", 1)
+        if k == "name":
+            name = v
+            continue
+        try:
+            v = json.loads(v)
+        except json.JSONDecodeError:
+            pass
+        overrides[k] = v
+    return name or spec, overrides
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--pair", required=True, help="arch:shape")
+    ap.add_argument("--variant", action="append", default=[])
+    ap.add_argument("--multi-pod", action="store_true")
+    args = ap.parse_args(argv)
+
+    from repro.launch.dryrun import run_one  # after XLA_FLAGS side effect
+
+    arch, shape = args.pair.split(":")
+    rows = []
+    base = run_one(arch, shape, multi_pod=args.multi_pod)
+    rows.append(("baseline", base))
+    for spec in args.variant:
+        name, overrides = parse_variant(spec)
+        try:
+            rec = run_one(arch, shape, multi_pod=args.multi_pod,
+                          overrides=overrides)
+        except Exception as e:
+            print(f"| {name} | FAIL {type(e).__name__}: {str(e)[:80]} |")
+            continue
+        rows.append((name, rec))
+
+    bt = base["roofline_s"]
+    print(f"\n### {arch} x {shape} ({'2x16x16' if args.multi_pod else '16x16'})")
+    print("| variant | compute | memory | collective | dominant | peak GiB | Δdominant |")
+    print("|---|---|---|---|---|---|---|")
+    base_dom = max(bt.values())
+    for name, r in rows:
+        t = r["roofline_s"]
+        peak = r.get("memory_analysis", {}).get("peak_bytes_per_device", 0) / 2 ** 30
+        dom_val = t[r["dominant"]]
+        delta = (dom_val - base_dom) / base_dom * 100
+        print(f"| {name} | {t['compute']:.3f} | {t['memory']:.3f} | "
+              f"{t['collective']:.3f} | {r['dominant']} | {peak:.1f} | "
+              f"{delta:+.1f}% |")
+    return 0
+
+
+if __name__ == "__main__":
+    # XLA_FLAGS must be set before jax init — import dryrun for its side effect
+    import repro.launch.dryrun  # noqa: F401
+    sys.exit(main())

@@ -1,0 +1,40 @@
+"""Kernel micro-benchmarks (interpret mode on CPU: correctness-path timing;
+derived column reports the bytes each kernel moves per call on TPU)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops, ref
+
+from .common import emit, timed
+
+
+def run():
+    rows = []
+    d = 1_048_576
+    key = jax.random.PRNGKey(0)
+    mask = (jax.random.uniform(key, (d,)) < 0.05).astype(jnp.uint8)
+    packed = ops.pack_votes(mask)
+    stack = jnp.stack([packed] * 8)
+    u = jax.random.normal(key, (d,))
+    uni = jax.random.uniform(jax.random.PRNGKey(1), (d,))
+
+    _, us = timed(lambda: jax.block_until_ready(ops.pack_votes(mask)))
+    rows.append(("kernel/bitpack_1M", round(us, 1), f"in={d}B_out={d // 8}B"))
+    _, us = timed(lambda: jax.block_until_ready(ops.unpack_votes(packed, d)))
+    rows.append(("kernel/unpack_1M", round(us, 1), f"in={d // 8}B_out={d}B"))
+    _, us = timed(lambda: jax.block_until_ready(ops.count_votes(stack, d)))
+    rows.append(("kernel/popcount8x1M", round(us, 1), f"in={d}B_out={4 * d}B"))
+    _, us = timed(lambda: jax.block_until_ready(ops.quantize_flat(u, uni, 100.0)))
+    rows.append(("kernel/stoch_quant_1M", round(us, 1), f"in={8 * d}B_out={4 * d}B"))
+    # jnp oracles for reference
+    _, us = timed(lambda: jax.block_until_ready(
+        ref.stoch_quant_ref(u, uni, jnp.float32(100.0))))
+    rows.append(("kernel/stoch_quant_ref_1M", round(us, 1), "jnp_oracle"))
+    return rows
+
+
+if __name__ == "__main__":
+    emit(run())

@@ -1,0 +1,61 @@
+"""Render the EXPERIMENTS.md roofline tables from the dry-run JSON records.
+
+  PYTHONPATH=src python -m benchmarks.make_roofline_md [--dir DIR]
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+ORDER_SHAPES = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+ORDER_ARCHS = ["hymba_1p5b", "gemma_2b", "qwen3_0p6b", "yi_6b", "whisper_tiny",
+               "granite_moe_1b", "mamba2_130m", "deepseek_v2_236b",
+               "command_r_plus_104b", "chameleon_34b"]
+
+
+def fmt(x):
+    return f"{x:.2e}" if x else "0"
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="benchmarks/results/dryrun")
+    ap.add_argument("--mesh", default="16x16")
+    args = ap.parse_args()
+
+    recs = {}
+    for p in glob.glob(os.path.join(args.dir, f"*_{args.mesh}.json")):
+        with open(p) as f:
+            r = json.load(f)
+        recs[(r["arch"], r["shape"])] = r
+
+    print(f"### Roofline — mesh {args.mesh} "
+          "(seconds per step; v5e: 197 TF/s bf16, 819 GB/s HBM, 50 GB/s ICI)\n")
+    print("| arch | shape | compute | memory | collective | dominant | "
+          "peak GiB/dev | useful-FLOPs | note |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    for a in ORDER_ARCHS:
+        for s in ORDER_SHAPES:
+            r = recs.get((a, s))
+            if r is None:
+                print(f"| {a} | {s} | - | - | - | - | - | - | MISSING |")
+                continue
+            if "skipped" in r:
+                print(f"| {a} | {s} | - | - | - | - | - | - | SKIP: enc-dec audio, no 524k decode |")
+                continue
+            if "error" in r:
+                print(f"| {a} | {s} | - | - | - | - | - | - | FAIL {r['error'][:40]} |")
+                continue
+            t = r["roofline_s"]
+            peak = r.get("memory_analysis", {}).get("peak_bytes_per_device", 0) / 2 ** 30
+            note = r.get("mode", "")
+            print(f"| {a} | {s} | {fmt(t['compute'])} | {fmt(t['memory'])} | "
+                  f"{fmt(t['collective'])} | **{r['dominant']}** | {peak:.1f} | "
+                  f"{r['useful_flops_ratio']:.3f} | {note} |")
+
+
+if __name__ == "__main__":
+    main()

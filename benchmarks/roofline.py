@@ -1,0 +1,46 @@
+"""Roofline summary: reads the dry-run JSON records and prints the
+three-term table (one row per arch x shape x mesh).  Records are produced
+by ``python -m repro.launch.dryrun --all [--multi-pod]``.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from .common import RESULTS_DIR, emit
+
+DRYRUN_DIR = os.path.join(RESULTS_DIR, "dryrun")
+
+
+def load_records(d: str = DRYRUN_DIR):
+    recs = []
+    for p in sorted(glob.glob(os.path.join(d, "*.json"))):
+        with open(p) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def run():
+    rows = []
+    for r in load_records():
+        tag = f"roofline/{r['arch']}/{r['shape']}/{r.get('mesh', '?')}"
+        if "skipped" in r:
+            rows.append((tag, "SKIP", r["skipped"]))
+            continue
+        if "error" in r:
+            rows.append((tag, "FAIL", r["error"]))
+            continue
+        t = r["roofline_s"]
+        rows.append((tag, round(max(t.values()) * 1e6, 2),
+                     f"dom={r['dominant']};compute={t['compute']:.2e};"
+                     f"memory={t['memory']:.2e};coll={t['collective']:.2e};"
+                     f"useful={r['useful_flops_ratio']:.3f}"))
+    if not rows:
+        rows.append(("roofline/none", 0, "run repro.launch.dryrun first"))
+    return rows
+
+
+if __name__ == "__main__":
+    emit(run())

@@ -1,0 +1,50 @@
+"""Benchmark harness entry point — one section per paper table/figure.
+
+  PYTHONPATH=src python -m benchmarks.run [--only fig2,tables,...]
+
+Prints ``name,value,derived`` CSV rows (see each module's docstring for the
+paper artifact it reproduces).
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+from . import (accuracy_vs_time, aggregation_ops, compression_error,
+               kernel_micro, noniid, roofline, traffic, vote_threshold)
+from .common import emit
+
+SECTIONS = {
+    "fig2": accuracy_vs_time.run,       # accuracy vs wall-clock
+    "tables": traffic.run,              # Tables I/II traffic
+    "fig3": noniid.run,                 # non-IID beta sweep
+    "fig4": vote_threshold.run,         # a x N sweep
+    "prop1": compression_error.run,     # gamma bound + Cor.1
+    "motivation": aggregation_ops.run,  # Sec III-B example
+    "kernels": kernel_micro.run,        # Pallas kernel micro
+    "roofline": roofline.run,           # dry-run roofline table
+}
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated section names " + str(list(SECTIONS)))
+    args = ap.parse_args(argv)
+    names = args.only.split(",") if args.only else list(SECTIONS)
+    print("name,value,derived")
+    for name in names:
+        t0 = time.time()
+        try:
+            rows = SECTIONS[name]()
+        except Exception as e:  # keep the harness running; record the failure
+            rows = [(f"{name}/ERROR", type(e).__name__, str(e)[:120])]
+        emit(rows)
+        print(f"# section {name} done in {time.time() - t0:.1f}s", file=sys.stderr)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

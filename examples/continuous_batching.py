@@ -1,0 +1,48 @@
+"""Continuous-batching serving: ragged requests share one decode batch.
+
+Five requests with different prompt/generation lengths stream through two
+decode slots — each engine tick advances every active slot by one token at
+its own position (prefill and generation interleaved in the same batch),
+finished slots recycle to queued requests.
+
+  PYTHONPATH=src python examples/continuous_batching.py [--arch mamba2-130m]
+"""
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_smoke
+from repro.models.model import init_params
+from repro.serving import Request, ServingEngine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-0.6b")
+    ap.add_argument("--slots", type=int, default=2)
+    args = ap.parse_args()
+
+    cfg = get_smoke(args.arch)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    reqs = [Request(uid=i,
+                    prompt=rng.integers(0, cfg.vocab, size=n).tolist(),
+                    max_new=m)
+            for i, (n, m) in enumerate([(6, 8), (12, 4), (3, 10), (8, 6), (5, 5)])]
+
+    engine = ServingEngine(cfg, params, max_batch=args.slots, cache_len=64)
+    t0 = time.time()
+    engine.run(list(reqs))
+    dt = time.time() - t0
+    total = sum(len(r.prompt) + len(r.out) for r in reqs)
+    print(f"{len(reqs)} requests through {args.slots} slots: "
+          f"{total} tokens in {dt:.2f}s ({total / dt:.1f} tok/s)\n")
+    for r in reqs:
+        print(f"  req {r.uid}: prompt[{len(r.prompt)}] -> {r.out}")
+
+
+if __name__ == "__main__":
+    main()

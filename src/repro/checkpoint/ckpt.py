@@ -1,0 +1,49 @@
+"""Flat-key npz pytree checkpointing (no orbax on the box).
+
+Pytree structure is encoded into '/'-joined key paths; restore rebuilds
+against a reference structure (or returns the raw nested dict).
+"""
+
+from __future__ import annotations
+
+import os
+
+import jax
+import numpy as np
+from jax.tree_util import DictKey, SequenceKey, tree_flatten_with_path, tree_unflatten
+
+
+def _path_str(path) -> str:
+    parts = []
+    for k in path:
+        if isinstance(k, DictKey):
+            parts.append(str(k.key))
+        elif isinstance(k, SequenceKey):
+            parts.append(str(k.idx))
+        else:
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+def save_checkpoint(path: str, tree, step: int | None = None) -> None:
+    leaves, _ = tree_flatten_with_path(tree)
+    arrays = {_path_str(p): np.asarray(v) for p, v in leaves}
+    if step is not None:
+        arrays["__step__"] = np.asarray(step)
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    tmp = path + ".tmp"
+    with open(tmp, "wb") as f:
+        np.savez(f, **arrays)
+    os.replace(tmp, path)
+
+
+def load_checkpoint(path: str, like=None):
+    """Restore a checkpoint.  ``like`` gives the target pytree structure."""
+    with np.load(path) as z:
+        arrays = {k: z[k] for k in z.files}
+    step = int(arrays.pop("__step__")) if "__step__" in arrays else None
+    if like is None:
+        return arrays, step
+    leaves, treedef = tree_flatten_with_path(like)
+    restored = [arrays[_path_str(p)] for p, _ in leaves]
+    return tree_unflatten(treedef, restored), step

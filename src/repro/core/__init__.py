@@ -1,0 +1,17 @@
+"""FediAC core: voting-based consensus model compression (paper Sec. IV)."""
+
+from .fediac import (FediACConfig, TrafficStats, aggregate_stack,
+                     dense_allreduce, fediac_allreduce)
+from .powerlaw import (PowerLawFit, fit_power_law, gamma_compression_error,
+                       expected_uploaded, min_bits, scale_factor)
+from .quantize import dequantize, quantize, stochastic_round
+from .voting import gia_from_counts, vote_mask
+from .baselines import make_aggregator
+
+__all__ = [
+    "FediACConfig", "TrafficStats", "aggregate_stack", "fediac_allreduce",
+    "dense_allreduce", "PowerLawFit", "fit_power_law",
+    "gamma_compression_error", "expected_uploaded", "min_bits", "scale_factor",
+    "quantize", "dequantize", "stochastic_round", "vote_mask",
+    "gia_from_counts", "make_aggregator",
+]

@@ -1,0 +1,178 @@
+"""Baseline in-network aggregation algorithms the paper compares against.
+
+All baselines share one functional interface so the FL simulator and the
+benchmarks can swap them for FediAC:
+
+    delta, residuals, state, TrafficStats, SwitchLoad = agg(u_stack, state, key)
+
+``u_stack``  float32[N, d]  client updates *including* carried residuals.
+``delta``    float32[d]     mean update applied to the global model.
+``SwitchLoad`` carries what the PS simulator needs to price the round
+(aggregation slot-additions, per-client packet counts).
+
+Implemented per paper Sec. V-A3:
+  * SwitchML  [Sapio et al., NSDI'21]  — dense b-bit integer quantization.
+  * Top-k + server ("topk")            — classic sparsification; indices do
+    NOT align at the PS (the motivation example), so every (idx, val) pair
+    costs its own aggregation slot.
+  * OmniReduce [Fei et al., SIGCOMM'21] — non-zero *block* upload.
+  * libra     [Pan et al., 2022]       — hot/cold split; hot set aggregated
+    in-network (aligned), cold redirected to a server.
+  * fedavg                              — uncompressed dense float mean.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from .fediac import FediACConfig, TrafficStats, aggregate_stack
+from .quantize import quantize, dequantize, scale_factor
+
+__all__ = ["SwitchLoad", "fedavg", "switchml", "topk_server", "omnireduce",
+           "libra", "fediac_round", "make_aggregator"]
+
+
+@dataclass(frozen=True)
+class SwitchLoad:
+    """What the PS has to do for one round (drives the queuing model)."""
+
+    slot_adds: int          # integer additions across all clients' uploads
+    packets_per_client: int  # upload packets per client (1500 B MTU)
+    aligned: bool           # True if the PS can add streams blindly in-order
+
+
+def _packets(bytes_per_client: int, mtu: int = 1500) -> int:
+    return max(1, -(-bytes_per_client // mtu))
+
+
+def _topk_mask(u: jax.Array, k: int) -> jax.Array:
+    _, idx = jax.lax.top_k(jnp.abs(u), k)
+    return jnp.zeros(u.shape, jnp.float32).at[idx].set(1.0)
+
+
+# ---------------------------------------------------------------------------
+
+def fedavg(u_stack, state, key, **_):
+    n, d = u_stack.shape
+    delta = u_stack.mean(axis=0)
+    traffic = TrafficStats(phase1_bytes=0, phase2_bytes=4 * d, dense_bytes=4 * d,
+                           selected=d)
+    load = SwitchLoad(slot_adds=n * d, packets_per_client=_packets(4 * d), aligned=True)
+    return delta, jnp.zeros_like(u_stack), state, traffic, load
+
+
+def switchml(u_stack, state, key, *, bits: int = 12, **_):
+    """Dense unbiased integer quantization, aligned pipelined aggregation."""
+    n, d = u_stack.shape
+    m = jnp.clip(jnp.max(jnp.abs(u_stack)), 1e-12, None)
+    f = scale_factor(bits, n, 1.0) / m
+    uni = jax.random.uniform(key, u_stack.shape)
+    q = quantize(u_stack, f, uni)
+    delta = dequantize(q.sum(axis=0), f) / n
+    # SwitchML streams b-bit slots; no error feedback (quantizer is unbiased).
+    bytes_pc = d * bits // 8
+    traffic = TrafficStats(phase1_bytes=0, phase2_bytes=bytes_pc,
+                           dense_bytes=4 * d, selected=d)
+    load = SwitchLoad(slot_adds=n * d, packets_per_client=_packets(bytes_pc), aligned=True)
+    return delta, jnp.zeros_like(u_stack), state, traffic, load
+
+
+def topk_server(u_stack, state, key, *, k_frac: float = 0.01, **_):
+    """Per-client Top-k; indices differ per client -> PS cannot align."""
+    n, d = u_stack.shape
+    k = max(1, int(k_frac * d))
+    masks = jax.vmap(lambda u: _topk_mask(u, k))(u_stack)
+    sparse = u_stack * masks
+    delta = sparse.mean(axis=0)
+    residuals = u_stack - sparse
+    bytes_pc = k * 8  # (int32 index, fp32 value) pairs
+    traffic = TrafficStats(phase1_bytes=0, phase2_bytes=bytes_pc,
+                           dense_bytes=4 * d, selected=k)
+    load = SwitchLoad(slot_adds=n * k, packets_per_client=_packets(bytes_pc), aligned=False)
+    return delta, residuals, state, traffic, load
+
+
+def omnireduce(u_stack, state, key, *, k_frac: float = 0.05, block: int = 256, **_):
+    """Top-k sparsify, then upload any block containing a non-zero."""
+    n, d = u_stack.shape
+    k = max(1, int(k_frac * d))
+    pad = (-d) % block
+    masks = jax.vmap(lambda u: _topk_mask(u, k))(u_stack)
+    sparse = u_stack * masks
+    delta = sparse.mean(axis=0)
+    residuals = u_stack - sparse
+    mp = jnp.pad(masks, ((0, 0), (0, pad)))
+    blocks_nz = (mp.reshape(n, -1, block).max(axis=-1) > 0)
+    blocks_per_client = blocks_nz.sum(axis=-1)
+    avg_blocks = int(jnp.ceil(blocks_per_client.astype(jnp.float32).mean()))
+    bytes_pc = avg_blocks * (block * 4 + 4)  # block payload + block id
+    traffic = TrafficStats(phase1_bytes=0, phase2_bytes=bytes_pc,
+                           dense_bytes=4 * d, selected=avg_blocks * block)
+    load = SwitchLoad(slot_adds=int(blocks_nz.sum()) * block,
+                      packets_per_client=_packets(bytes_pc), aligned=True)
+    return delta, residuals, state, traffic, load
+
+
+def libra(u_stack, state, key, *, k_frac: float = 0.01, hot_frac: float = 0.01, **_):
+    """Hot/cold split: a slowly-updated global hot set is aggregated in-network
+    (aligned, shared indices); per-client cold top-k overflow goes to a server.
+
+    ``state`` is an EMA of coordinate 'heat' |u| used to predict the hot set —
+    standing in for libra's offline pre-training predictor (whose cost the
+    paper also excludes).
+    """
+    n, d = u_stack.shape
+    k = max(1, int(k_frac * d))
+    h = max(1, int(hot_frac * d))
+    heat = jnp.abs(u_stack).mean(axis=0) if state is None else state
+    _, hot_idx = jax.lax.top_k(heat, h)
+    hot_mask = jnp.zeros((d,), jnp.float32).at[hot_idx].set(1.0)
+    # hot coordinates: aggregated at the PS for every client (aligned).
+    hot_part = u_stack * hot_mask
+    # cold: per-client top-k of the remainder, server-aggregated.
+    cold = u_stack * (1.0 - hot_mask)
+    cold_masks = jax.vmap(lambda u: _topk_mask(u, k))(cold)
+    cold_part = cold * cold_masks
+    uploaded = hot_part + cold_part
+    delta = uploaded.mean(axis=0)
+    residuals = u_stack - uploaded
+    new_state = 0.9 * heat + 0.1 * jnp.abs(u_stack).mean(axis=0)
+    bytes_pc = h * 4 + k * 8
+    traffic = TrafficStats(phase1_bytes=0, phase2_bytes=bytes_pc,
+                           dense_bytes=4 * d, selected=h + k)
+    load = SwitchLoad(slot_adds=n * h, packets_per_client=_packets(bytes_pc), aligned=True)
+    return delta, residuals, new_state, traffic, load
+
+
+def fediac_round(u_stack, state, key, *, cfg: FediACConfig = FediACConfig(), **_):
+    """FediAC wrapped in the common interface."""
+    n, d = u_stack.shape
+    delta, residuals, counts, traffic = aggregate_stack(u_stack, cfg, key)
+    load = SwitchLoad(
+        slot_adds=n * (d // cfg.vote_chunk) // 8 + n * traffic.selected,
+        packets_per_client=_packets(traffic.total_bytes), aligned=True)
+    return delta, residuals, state, traffic, load
+
+
+_REGISTRY = {
+    "fedavg": fedavg,
+    "switchml": switchml,
+    "topk": topk_server,
+    "omnireduce": omnireduce,
+    "libra": libra,
+    "fediac": fediac_round,
+}
+
+
+def make_aggregator(name: str, **kwargs):
+    """Bind kwargs onto a registered aggregator."""
+    fn = _REGISTRY[name]
+
+    def agg(u_stack, state, key):
+        return fn(u_stack, state, key, **kwargs)
+
+    agg.__name__ = name
+    return agg

@@ -1,0 +1,108 @@
+"""Consensus compaction: the TPU payoff of FediAC's consensus property.
+
+Because the GIA is *identical on every client* (it is a deterministic
+function of the psum'd vote counts), every client can gather its selected
+values into a fixed-capacity buffer **in the same order** — so the phase-2
+all-reduce runs over ``C << d`` integers with zero index metadata.  This is
+the in-network "index alignment" of the paper translated to collectives: a
+non-consensus Top-k cannot be compacted this way because indices differ per
+client (the motivation example of Sec. III-B).
+
+Selection must depend ONLY on consensus information (the vote counts), never
+on client-local values.  We take the top-C coordinates by
+``count * d + reversed-index`` (a deterministic tiebreak), then zero entries
+whose count is below the threshold ``a``.  If more than C coordinates clear
+the threshold the surplus is dropped and stays in the residual (error
+feedback keeps the scheme convergent; gamma simply grows).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["consensus_indices", "compact", "scatter_compact"]
+
+
+def consensus_indices(counts: jax.Array, a: int, capacity: int):
+    """Deterministic consensus selection from vote counts.
+
+    Returns ``(idx, keep)``: ``idx`` int32[capacity] coordinate indices
+    (identical on every client given identical counts) and ``keep``
+    float32[capacity] in {0,1} marking entries with count >= a.
+    """
+    d = counts.shape[-1]
+    capacity = min(int(capacity), d)
+    # counts are small ints (<= N clients).  lax.top_k is stable (ties keep
+    # the lower index first), which is itself a deterministic consensus
+    # tiebreak — every client computes the identical permutation.
+    top, idx = jax.lax.top_k(counts.astype(jnp.int32), capacity)
+    keep = (top >= a).astype(jnp.float32)
+    return idx.astype(jnp.int32), keep
+
+
+def compact(values: jax.Array, idx: jax.Array, keep: jax.Array) -> jax.Array:
+    """Gather values at consensus indices into the C-sized buffer."""
+    out = jnp.take(values, idx, axis=-1)
+    return (out.astype(jnp.float32) * keep).astype(values.dtype)
+
+
+def scatter_compact(buf: jax.Array, idx: jax.Array, keep: jax.Array, d: int) -> jax.Array:
+    """Scatter the C-sized buffer back into a d-vector (zeros elsewhere)."""
+    flat = jnp.zeros((d,), buf.dtype)
+    vals = (buf.astype(jnp.float32) * keep).astype(buf.dtype)
+    return flat.at[idx].set(vals)
+
+
+# ---------------------------------------------------------------------------
+# Sort-free block compaction (billion-parameter vectors)
+#
+# top-C selection over a 1e9-coordinate vector needs an XLA sort with u64
+# keys — tens of GiB of workspace.  Block compaction partitions coordinates
+# into fixed blocks and keeps the first c_b = capacity_frac * block_size
+# GIA-selected coordinates of each block, located with a cumsum — O(d), no
+# sort, consensus-preserving (a deterministic function of the shared vote
+# counts).  Block overflow stays in the error-feedback residual.
+# ---------------------------------------------------------------------------
+
+def block_plan(d: int, block_size: int, capacity_frac: float):
+    nb = -(-d // block_size)
+    cb = max(1, int(round(capacity_frac * block_size)))
+    return nb, cb, nb * block_size - d  # (blocks, per-block cap, pad)
+
+
+def block_select(counts: jax.Array, a: int, block_size: int, capacity_frac: float):
+    """counts (d,) -> (keep (d,) bool, pos (d,) int32 slot-in-block)."""
+    d = counts.shape[-1]
+    nb, cb, pad = block_plan(d, block_size, capacity_frac)
+    sel = jnp.pad(counts >= a, (0, pad)).reshape(nb, block_size)
+    pos = jnp.cumsum(sel.astype(jnp.int32), axis=1) - sel
+    keep = sel & (pos < cb)
+    return keep.reshape(-1)[:d], pos.reshape(-1)[:d]
+
+
+def block_compact(values: jax.Array, keep: jax.Array, pos: jax.Array,
+                  block_size: int, capacity_frac: float) -> jax.Array:
+    """Gather kept values into the (nb*cb,) consensus buffer."""
+    d = values.shape[-1]
+    nb, cb, pad = block_plan(d, block_size, capacity_frac)
+    vp = jnp.pad(jnp.where(keep, values, 0), (0, pad)).reshape(nb, block_size)
+    pp = jnp.pad(pos, (0, pad)).reshape(nb, block_size)
+    kp = jnp.pad(keep, (0, pad)).reshape(nb, block_size)
+    rows = jax.lax.broadcasted_iota(jnp.int32, (nb, block_size), 0)
+    buf = jnp.zeros((nb, cb), values.dtype)
+    buf = buf.at[rows, jnp.where(kp, pp, 0)].add(jnp.where(kp, vp, 0))
+    return buf.reshape(-1)
+
+
+def block_scatter(buf: jax.Array, keep: jax.Array, pos: jax.Array, d: int,
+                  block_size: int, capacity_frac: float) -> jax.Array:
+    """Inverse of block_compact: (nb*cb,) buffer -> (d,) vector, no scatter
+    (a take_along_axis per block suffices)."""
+    nb, cb, pad = block_plan(d, block_size, capacity_frac)
+    b2 = buf.reshape(nb, cb)
+    pp = jnp.pad(pos, (0, pad)).reshape(nb, block_size)
+    kp = jnp.pad(keep, (0, pad)).reshape(nb, block_size)
+    vals = jnp.take_along_axis(b2, jnp.clip(pp, 0, cb - 1), axis=1)
+    out = jnp.where(kp, vals, 0)
+    return out.reshape(-1)[:d]

@@ -1,0 +1,52 @@
+"""Unbiased stochastic integer quantization (paper Eq. 1).
+
+A model update ``U_l`` is scaled by ``f = (2^{b-1} - N)/(N m)`` and rounded to
+an integer stochastically:
+
+    theta(x) = floor(x)  with prob  ceil(x) - x
+             = ceil(x)   with prob  x - floor(x)
+
+so that E[theta(x)] = x.  The switch (and the TPU all-reduce standing in for
+it) only ever sees int32 values; de-quantization by 1/(N f) happens on the
+clients, exactly as in Algo. 1 line 12.
+
+Random bits are threaded explicitly (either a PRNG key or pre-drawn uniforms)
+so the same math can run inside a Pallas kernel fed by a host random stream.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .powerlaw import scale_factor
+
+__all__ = ["scale_factor", "stochastic_round", "quantize", "dequantize", "global_max"]
+
+
+def stochastic_round(x: jax.Array, uniforms: jax.Array) -> jax.Array:
+    """Unbiased stochastic rounding to the nearest integers (Eq. 1).
+
+    ``uniforms`` are iid U[0,1) of the same shape as ``x``.
+    Returns int32.
+    """
+    lo = jnp.floor(x)
+    frac = x - lo  # in [0, 1): prob of rounding up
+    up = (uniforms < frac).astype(x.dtype)
+    return (lo + up).astype(jnp.int32)
+
+
+def quantize(u: jax.Array, f: jax.Array | float, uniforms: jax.Array) -> jax.Array:
+    """q = theta(f * u) as int32."""
+    return stochastic_round(jnp.asarray(u, jnp.float32) * f, uniforms)
+
+
+def dequantize(q: jax.Array, f: jax.Array | float) -> jax.Array:
+    return q.astype(jnp.float32) / f
+
+
+def global_max(u_abs_max: jax.Array, axis_name: str | tuple[str, ...] | None):
+    """m = max over clients of max|U| — one scalar pmax when under shard_map."""
+    if axis_name is None:
+        return u_abs_max
+    return jax.lax.pmax(u_abs_max, axis_name)

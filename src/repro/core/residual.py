@@ -1,0 +1,27 @@
+"""Error-feedback residual state (paper Algo. 1 lines 4/9).
+
+The residual ``e_t^i = (f U - Pi(Theta(f U)))/f`` is client-local state with
+the same flat shape as the update vector.  In the production runtime it lives
+sharded exactly like one client's parameter slice (per data-shard, per
+model-shard); in the FL simulator it is an [N, d] stack.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["init_residual", "residual_after_upload"]
+
+
+def init_residual(d: int, dtype=jnp.float32) -> jax.Array:
+    return jnp.zeros((d,), dtype)
+
+
+def residual_after_upload(u: jax.Array, uploaded_over_f: jax.Array) -> jax.Array:
+    """e = u - (own uploaded contribution)/f.
+
+    ``uploaded_over_f`` is this client's de-quantized uploaded vector
+    (zeros at unselected coordinates), i.e. Pi(Theta(f u)) / f.
+    """
+    return (u - uploaded_over_f).astype(u.dtype)

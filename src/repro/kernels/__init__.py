@@ -1,0 +1,14 @@
+"""Pallas TPU kernels for the framework's compute hot-spots.
+
+bitpack          pack/unpack 1-bit vote arrays (phase-1 wire format)
+vote_popcount    fused unpack+popcount-accumulate (PS-side vote counting)
+stoch_quant      fused scale + unbiased stochastic rounding (Eq. 1)
+flash_attention  VMEM-resident online-softmax attention (GQA/SWA) — the
+                 TPU answer to the §Perf attention-tile traffic findings
+
+Each kernel has a pure-jnp oracle (ref.py / models.attention) and is
+validated in interpret mode on CPU; compiled path targets TPU VMEM tiles.
+"""
+
+from . import (bitpack, flash_attention, ops, ref, stoch_quant,  # noqa: F401
+               vote_popcount)

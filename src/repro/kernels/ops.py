@@ -1,0 +1,70 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+Handles the flat-vector <-> (rows, LANES) tiling, padding, and the
+CPU-interpret / TPU-compiled dispatch.  ``use_pallas=None`` auto-selects:
+compiled kernels on TPU, interpret mode elsewhere (this box is CPU-only, so
+interpret mode is the validation path; see DESIGN.md).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import bitpack, ref, stoch_quant, vote_popcount
+from .ref import GROUP, LANES
+
+_TILE = GROUP * bitpack.ROWS_PER_BLOCK * LANES  # flat elements per pack grid step
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _to_rows(flat: jax.Array, multiple: int):
+    """Pad a flat vector to a (rows, LANES) matrix with rows % multiple == 0."""
+    d = flat.shape[-1]
+    rows = -(-d // LANES)
+    rows += (-rows) % multiple
+    pad = rows * LANES - d
+    return jnp.pad(flat, (0, pad)).reshape(rows, LANES), d
+
+
+def pack_votes(mask_flat: jax.Array, *, interpret: bool | None = None) -> jax.Array:
+    """Flat 0/1 votes (d,) -> packed uint32 (ceil-padded) words, flat."""
+    interpret = _interpret_default() if interpret is None else interpret
+    m2, _ = _to_rows(mask_flat, GROUP * bitpack.ROWS_PER_BLOCK)
+    return bitpack.pack(m2, interpret=interpret).reshape(-1)
+
+
+def unpack_votes(words_flat: jax.Array, d: int, *, interpret: bool | None = None) -> jax.Array:
+    """Packed uint32 words (flat) -> 0/1 uint8 votes (d,)."""
+    interpret = _interpret_default() if interpret is None else interpret
+    w2 = words_flat.reshape(-1, LANES)
+    out = bitpack.unpack(w2, interpret=interpret).reshape(-1)
+    return out[:d]
+
+
+def count_votes(words_stack_flat: jax.Array, d: int, *, interpret: bool | None = None) -> jax.Array:
+    """(N, W) packed uint32 -> (d,) int32 vote counts (PS phase-1 reduce)."""
+    interpret = _interpret_default() if interpret is None else interpret
+    n = words_stack_flat.shape[0]
+    w3 = words_stack_flat.reshape(n, -1, LANES)
+    out = vote_popcount.popcount_accum(w3, interpret=interpret).reshape(-1)
+    return out[:d]
+
+
+def quantize_flat(u_flat: jax.Array, uniforms_flat: jax.Array, f,
+                  *, interpret: bool | None = None) -> jax.Array:
+    """Flat fp32 (d,) -> flat int32 (d,), Eq. 1 with scale f."""
+    interpret = _interpret_default() if interpret is None else interpret
+    u2, d = _to_rows(u_flat, stoch_quant.BLOCK_ROWS)
+    uni2, _ = _to_rows(uniforms_flat, stoch_quant.BLOCK_ROWS)
+    out = stoch_quant.stoch_quant(u2, uni2, f, interpret=interpret)
+    return out.reshape(-1)[:d]
+
+
+# jnp fallbacks with identical signatures (used in shape-polymorphic paths
+# where Pallas padding would be wasteful, e.g. tiny smoke configs).
+def quantize_flat_ref(u_flat, uniforms_flat, f):
+    return ref.stoch_quant_ref(u_flat, uniforms_flat, jnp.float32(f))

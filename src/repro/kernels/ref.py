@@ -1,0 +1,49 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Layout convention shared by pack/unpack/popcount: a flat 0/1 vector is
+reshaped to rows of ``LANES`` (=1024) lanes; groups of 32 consecutive rows
+are packed into one uint32 row, bit ``r`` of word ``(g, l)`` holding
+``mask[32 g + r, l]``.  Packing along the *sublane* axis keeps every op
+lane-parallel on the VPU (no intra-lane reshapes), which is the TPU-native
+way to build the paper's 1-bit vote arrays.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+LANES = 1024
+GROUP = 32  # rows packed per uint32 word
+
+
+def pack_ref(mask: jax.Array) -> jax.Array:
+    """uint8/int32 0-1 matrix (R, LANES), R % 32 == 0  ->  (R//32, LANES) uint32."""
+    r, l = mask.shape
+    assert r % GROUP == 0
+    x = mask.astype(jnp.uint32).reshape(r // GROUP, GROUP, l)
+    shifts = jnp.arange(GROUP, dtype=jnp.uint32)[None, :, None]
+    return (x << shifts).sum(axis=1).astype(jnp.uint32)
+
+
+def unpack_ref(words: jax.Array) -> jax.Array:
+    """(G, LANES) uint32 -> (G*32, LANES) uint8 of 0/1."""
+    g, l = words.shape
+    shifts = jnp.arange(GROUP, dtype=jnp.uint32)[None, :, None]
+    bits = (words[:, None, :] >> shifts) & jnp.uint32(1)
+    return bits.reshape(g * GROUP, l).astype(jnp.uint8)
+
+
+def popcount_accum_ref(words_stack: jax.Array) -> jax.Array:
+    """(N, G, LANES) uint32 packed votes -> (G*32, LANES) int32 vote counts."""
+    n, g, l = words_stack.shape
+    shifts = jnp.arange(GROUP, dtype=jnp.uint32)[None, None, :, None]
+    bits = (words_stack[:, :, None, :] >> shifts) & jnp.uint32(1)
+    return bits.sum(axis=0).reshape(g * GROUP, l).astype(jnp.int32)
+
+
+def stoch_quant_ref(u: jax.Array, uniforms: jax.Array, f: jax.Array) -> jax.Array:
+    """Unbiased stochastic rounding of f*u to int32 (paper Eq. 1)."""
+    x = u.astype(jnp.float32) * f
+    lo = jnp.floor(x)
+    return (lo + (uniforms < (x - lo)).astype(jnp.float32)).astype(jnp.int32)

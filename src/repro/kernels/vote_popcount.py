@@ -1,0 +1,48 @@
+"""Pallas TPU kernel: fused unpack + popcount-accumulate of packed vote words.
+
+The PS side of FediAC phase 1: given N clients' bit-packed vote arrays
+(uint32 words), produce per-coordinate vote counts.  On TPU this is the
+local reduction stage of the packed-bit all-gather variant (the beyond-paper
+phase-1 schedule: all-gather d/8 bytes of packed bits instead of psum'ing
+d uint8 counts — 8x fewer collective bytes when N is small).
+
+Block geometry: (N, ROWS_PER_BLOCK, LANES) uint32 in -> counts
+(ROWS_PER_BLOCK*32, LANES) int32 out.  N is the client-axis size (<= 64),
+so a block is N*8*1024*4 B = 32 KiB * N — fits VMEM for any realistic N.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import GROUP, LANES
+
+ROWS_PER_BLOCK = 8
+
+
+def _popcount_kernel(words_ref, out_ref):
+    w = words_ref[...]                         # (N, ROWS_PER_BLOCK, LANES)
+    wr = jnp.repeat(w, GROUP, axis=1)          # (N, ROWS*32, LANES)
+    r = jax.lax.broadcasted_iota(jnp.uint32, wr.shape, 1) % jnp.uint32(GROUP)
+    bits = (wr >> r) & jnp.uint32(1)
+    out_ref[...] = bits.sum(axis=0).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def popcount_accum(words_stack: jax.Array, *, interpret: bool = True) -> jax.Array:
+    """(N, G, LANES) uint32 packed votes -> (G*32, LANES) int32 counts."""
+    n, g, l = words_stack.shape
+    assert l == LANES and g % ROWS_PER_BLOCK == 0, (n, g, l)
+    grid = (g // ROWS_PER_BLOCK,)
+    return pl.pallas_call(
+        _popcount_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((n, ROWS_PER_BLOCK, LANES), lambda i: (0, i, 0))],
+        out_specs=pl.BlockSpec((GROUP * ROWS_PER_BLOCK, LANES), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((g * GROUP, LANES), jnp.int32),
+        interpret=interpret,
+    )(words_stack)

@@ -1,0 +1,11 @@
+"""Launchers: mesh construction, multi-pod dry-run, train/serve drivers.
+
+NOTE: do not import .dryrun from here — it sets XLA_FLAGS at import time
+(by design, it must own the process's device count).
+"""
+
+from .mesh import (HBM_BW, ICI_BW, PEAK_FLOPS_BF16, make_production_mesh,
+                   make_test_mesh)
+
+__all__ = ["make_production_mesh", "make_test_mesh",
+           "PEAK_FLOPS_BF16", "HBM_BW", "ICI_BW"]

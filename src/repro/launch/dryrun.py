@@ -1,0 +1,299 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede any jax import: device count locks on first init.
+# The dry-run (and only the dry-run) builds the production 512-chip mesh
+# out of host placeholder devices; nothing is ever executed on them.
+
+# Multi-pod dry-run: lower + compile every (arch x input-shape x mesh)
+# combination, prove it fits, and extract the roofline terms.
+#
+# Usage:
+#   PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-0.6b --shape train_4k
+#   PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--out DIR]
+#
+# Per combination this prints/records:
+#   * compiled.memory_analysis()  — bytes/device: proves the config fits HBM;
+#   * compiled.cost_analysis()    — HLO FLOPs + HBM bytes (per-device program);
+#   * collective bytes parsed from the optimized HLO, per collective kind;
+#   * the three roofline terms (seconds) + dominant term + model-FLOPs ratio.
+
+import argparse
+import json
+import re
+import sys
+import time
+import traceback
+from dataclasses import replace
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import SHAPES_BY_NAME, get, get_smoke
+from repro.configs.registry import ALIASES, ARCH_IDS
+from repro.launch.mesh import (HBM_BW, ICI_BW, PEAK_FLOPS_BF16,
+                               make_production_mesh)
+from repro.models.model import init_params
+from repro.training.dist_step import make_train_step
+from repro.training.serve import make_serve_step
+
+COLLECTIVE_RE = re.compile(
+    r"\b(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(")
+SHAPE_RE = re.compile(r"\b([a-z]+\d+|pred)\[([\d,]*)\]")
+
+_DTYPE_BYTES = {"pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2,
+                "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+                "f64": 8}
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def collective_bytes(hlo_text: str) -> dict[str, int]:
+    """Per-collective-kind bytes from optimized (SPMD-partitioned) HLO.
+
+    For each collective instruction we take the largest shape literal on the
+    line (all-reduce: payload == operand == result; all-gather: the gathered
+    result; reduce-scatter: the unscattered operand) — the conservative
+    per-device payload estimate.
+    """
+    out: dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        m = COLLECTIVE_RE.search(line)
+        if not m or "-done(" in line:
+            continue
+        shapes = [_shape_bytes(d, s) for d, s in SHAPE_RE.findall(line)]
+        if shapes:
+            out[m.group(1)] = out.get(m.group(1), 0) + max(shapes)
+    return out
+
+
+def active_params(cfg) -> tuple[int, int]:
+    """(total, active) parameter counts; active discounts unrouted experts."""
+    shapes = jax.eval_shape(lambda k: init_params(cfg, k), jax.random.PRNGKey(0))
+    total = active = 0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(shapes)[0]:
+        keys = [getattr(k, "key", "") for k in path]
+        n = leaf.size
+        total += n
+        if cfg.n_experts > 0 and any(k in ("we_g", "we_u", "we_d") for k in keys):
+            active += n * cfg.moe_top_k // cfg.n_experts
+        else:
+            active += n
+    return total, active
+
+
+def input_specs(cfg, shape, mesh, bundle=None):
+    """ShapeDtypeStruct stand-ins for every model input (no allocation)."""
+    b, s = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    if shape.kind in ("train", "prefill"):
+        specs = {"tokens": jax.ShapeDtypeStruct((b, s), i32)}
+        if shape.kind == "train":
+            specs["targets"] = jax.ShapeDtypeStruct((b, s), i32)
+        if cfg.is_enc_dec:
+            specs["frames"] = jax.ShapeDtypeStruct((b, cfg.source_len, cfg.d_model),
+                                                   jnp.float32)
+        return specs
+    return {"token": jax.ShapeDtypeStruct((b, 1), i32)}
+
+
+def _ns(mesh, spec_tree):
+    return jax.tree_util.tree_map(lambda s: NamedSharding(mesh, s), spec_tree,
+                                  is_leaf=lambda x: isinstance(x, P))
+
+
+def lower_train(cfg, shape, mesh):
+    bundle = make_train_step(cfg, mesh)
+    pshape = jax.eval_shape(lambda k: init_params(cfg, k), jax.random.PRNGKey(0))
+    if bundle.mode == "plain":
+        res_shape = jax.ShapeDtypeStruct((), jnp.float32)
+    else:
+        res_shape = jax.tree_util.tree_map(
+            lambda l: jax.ShapeDtypeStruct((bundle.n_clients, *l.shape),
+                                           jnp.dtype(cfg.residual_dtype)), pshape)
+    batch = input_specs(cfg, shape, mesh)
+    key = jax.eval_shape(lambda: jax.random.PRNGKey(0))
+    in_sh = (_ns(mesh, bundle.params_spec), _ns(mesh, bundle.residual_spec),
+             {k: _ns(mesh, v) for k, v in bundle.batch_spec.items() if k in batch},
+             None)
+    with mesh:
+        # params/residual are donated (the train loop overwrites them);
+        # memory_analysis then reflects the true steady-state peak.
+        jitted = jax.jit(bundle.step, in_shardings=in_sh, donate_argnums=(0, 1))
+        lowered = jitted.lower(pshape, res_shape, batch, key)
+    return lowered, bundle
+
+
+def lower_serve(cfg, shape, mesh):
+    bundle = make_serve_step(cfg, mesh, shape)
+    pshape = jax.eval_shape(lambda k: init_params(cfg, k), jax.random.PRNGKey(0))
+    inputs = input_specs(cfg, shape, mesh, bundle)
+    with mesh:
+        if shape.kind == "prefill":
+            in_sh = (_ns(mesh, bundle.params_spec), _ns(mesh, bundle.input_spec))
+            batch = {k: v for k, v in inputs.items()}
+            lowered = jax.jit(bundle.step, in_shardings=in_sh).lower(pshape, batch)
+        else:
+            in_sh = (_ns(mesh, bundle.params_spec), _ns(mesh, bundle.cache_spec),
+                     _ns(mesh, bundle.input_spec["token"]), None)
+            pos = jax.ShapeDtypeStruct((), jnp.int32)
+            # caches are donated: the serving loop overwrites them in place
+            lowered = jax.jit(bundle.step, in_shardings=in_sh,
+                              donate_argnums=(1,)).lower(
+                pshape, bundle.cache_shape, inputs["token"], pos)
+    return lowered, bundle
+
+
+def run_one(arch: str, shape_name: str, *, multi_pod: bool = False,
+            smoke: bool = False, overrides: dict | None = None) -> dict:
+    cfg = get_smoke(arch) if smoke else get(arch)
+    if overrides:
+        fediac_over = {k.split(".", 1)[1]: v for k, v in overrides.items()
+                       if k.startswith("fediac.")}
+        plain = {k: v for k, v in overrides.items() if not k.startswith("fediac.")}
+        if fediac_over:
+            plain["fediac"] = replace(cfg.fediac, **fediac_over)
+        cfg = replace(cfg, **plain)
+    shape = SHAPES_BY_NAME[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.size
+
+    if arch in ("whisper_tiny", "whisper-tiny") and shape_name == "long_500k":
+        return {"arch": cfg.name, "shape": shape_name, "skipped":
+                "enc-dec audio model: no 524k-token decode (DESIGN.md §7)"}
+
+    t0 = time.time()
+    if shape.kind == "train":
+        lowered, bundle = lower_train(cfg, shape, mesh)
+    else:
+        lowered, bundle = lower_serve(cfg, shape, mesh)
+    t_lower = time.time() - t0
+
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0]
+
+    # trip-count-corrected analysis (XLA's cost_analysis counts scan bodies
+    # once — wrong by orders of magnitude for layer/microbatch loops).
+    from repro.launch import hlo_cost
+    corrected = hlo_cost.analyze(compiled.as_text())
+    coll = corrected["collectives"]
+    flops_dev = float(corrected["flops"])
+    bytes_dev = float(corrected["bytes"])
+    coll_dev = float(corrected["collective_bytes"])
+
+    total, active = active_params(cfg)
+    tokens = shape.global_batch * (shape.seq_len if shape.kind == "train" else 1)
+    if shape.kind == "train":
+        model_flops = 6.0 * active * tokens
+    elif shape.kind == "prefill":
+        model_flops = 2.0 * active * shape.global_batch * shape.seq_len
+    else:
+        model_flops = 2.0 * active * tokens
+
+    t_compute = flops_dev / PEAK_FLOPS_BF16
+    t_memory = bytes_dev / HBM_BW
+    t_coll = coll_dev / ICI_BW
+    terms = {"compute": t_compute, "memory": t_memory, "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+
+    rec = {
+        "arch": cfg.name, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16", "chips": chips,
+        "mode": getattr(bundle, "mode", "serve"),
+        "aggregator": cfg.aggregator if shape.kind == "train" else None,
+        "params_total": total, "params_active": active,
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "flops_per_device": flops_dev, "hbm_bytes_per_device": bytes_dev,
+        "collective_bytes_per_device": coll_dev, "collectives": coll,
+        "xla_cost_analysis_raw": {"flops": float(cost.get("flops", 0.0)),
+                                  "bytes_accessed": float(cost.get("bytes accessed", 0.0))},
+        "roofline_s": terms, "dominant": dominant,
+        "model_flops": model_flops,
+        "useful_flops_ratio": model_flops / max(flops_dev * chips, 1.0),
+        "memory_analysis": _mem_dict(mem),
+    }
+    return rec
+
+
+def _mem_dict(mem) -> dict:
+    if mem is None:
+        return {}
+    out = {}
+    for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                 "temp_size_in_bytes", "alias_size_in_bytes",
+                 "generated_code_size_in_bytes"):
+        v = getattr(mem, attr, None)
+        if v is not None:
+            out[attr] = int(v)
+    if "argument_size_in_bytes" in out and "temp_size_in_bytes" in out:
+        out["peak_bytes_per_device"] = (out["argument_size_in_bytes"]
+                                        + out["temp_size_in_bytes"]
+                                        - out.get("alias_size_in_bytes", 0)
+                                        + out.get("output_size_in_bytes", 0))
+    return out
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, help="arch id (see configs.registry)")
+    ap.add_argument("--shape", default=None, choices=list(SHAPES_BY_NAME))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true", help="all (arch x shape)")
+    ap.add_argument("--smoke", action="store_true", help="reduced configs")
+    ap.add_argument("--out", default="benchmarks/results/dryrun")
+    ap.add_argument("--set", nargs="*", default=[],
+                    help="ArchConfig overrides, e.g. microbatch=8 aggregator=dense")
+    args = ap.parse_args(argv)
+
+    overrides = {}
+    for kv in args.set:
+        k, v = kv.split("=", 1)
+        try:
+            v = json.loads(v)
+        except json.JSONDecodeError:
+            pass
+        overrides[k] = v
+
+    combos = []
+    archs = ARCH_IDS if args.all or not args.arch else [ALIASES.get(args.arch, args.arch)]
+    shapes = list(SHAPES_BY_NAME) if args.all or not args.shape else [args.shape]
+    for a in archs:
+        for s in shapes:
+            combos.append((a, s))
+
+    os.makedirs(args.out, exist_ok=True)
+    failures = 0
+    for a, s in combos:
+        tag = f"{a}_{s}_{'2x16x16' if args.multi_pod else '16x16'}"
+        try:
+            rec = run_one(a, s, multi_pod=args.multi_pod, smoke=args.smoke,
+                          overrides=overrides)
+            status = rec.get("skipped") and "SKIP" or rec["dominant"]
+            print(f"[dryrun] {tag:55s} {status:10s} "
+                  f"compile={rec.get('compile_s', 0):6.1f}s "
+                  f"roofline={rec.get('roofline_s')}")
+        except Exception as e:
+            failures += 1
+            rec = {"arch": a, "shape": s, "error": f"{type(e).__name__}: {e}",
+                   "traceback": traceback.format_exc()}
+            print(f"[dryrun] {tag:55s} FAIL {type(e).__name__}: {e}")
+        with open(os.path.join(args.out, tag + ".json"), "w") as f:
+            json.dump(rec, f, indent=2, default=str)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,87 @@
+"""Training launcher.
+
+On real hardware this builds the production mesh and runs the distributed
+FL step; on this CPU box it runs reduced (smoke) configs across however
+many devices the session exposes (use XLA_FLAGS=--xla_force_host_platform_device_count=N
+to emulate a mesh).
+
+  PYTHONPATH=src python -m repro.launch.train --arch qwen3-0.6b --smoke \
+      --steps 20 --batch 8 --seq 128
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding
+
+from repro.checkpoint import save_checkpoint
+from repro.configs import SHAPES_BY_NAME, get, get_smoke
+from repro.data.synthetic import lm_batches
+from repro.launch.mesh import make_production_mesh, make_test_mesh
+from repro.models.model import init_params
+from repro.training.dist_step import make_train_step
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--production-mesh", action="store_true",
+                    help="16x16 (needs 256 devices)")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--steps", type=int, default=10)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=0.05)
+    ap.add_argument("--aggregator", default=None, choices=[None, "fediac", "dense"])
+    ap.add_argument("--ckpt", default=None)
+    args = ap.parse_args(argv)
+
+    cfg = get_smoke(args.arch) if args.smoke else get(args.arch)
+    if args.aggregator:
+        cfg = cfg.with_(aggregator=args.aggregator)
+    mesh = (make_production_mesh(multi_pod=args.multi_pod)
+            if args.production_mesh else make_test_mesh(multi_pod=args.multi_pod))
+
+    bundle = make_train_step(cfg, mesh, lr=args.lr)
+    key = jax.random.PRNGKey(0)
+    with mesh:
+        params = jax.jit(
+            lambda k: init_params(cfg, k),
+            out_shardings=jax.tree_util.tree_map(
+                lambda s: NamedSharding(mesh, s), bundle.params_spec))(key)
+        if bundle.mode == "plain":
+            residual = jnp.zeros((), jnp.float32)
+        else:
+            residual = jax.tree_util.tree_map(
+                lambda p: jnp.zeros((bundle.n_clients, *p.shape),
+                                    jnp.dtype(cfg.residual_dtype)), params)
+        step = jax.jit(bundle.step)
+
+        rng = np.random.default_rng(0)
+        t0 = time.time()
+        for i, b in enumerate(lm_batches(rng, cfg.vocab, args.batch, args.seq,
+                                         args.steps)):
+            if cfg.is_enc_dec:
+                b["frames"] = np.asarray(
+                    rng.normal(size=(args.batch, cfg.source_len, cfg.d_model)),
+                    np.float32) * 0.02
+            batch = {k: jnp.asarray(v) for k, v in b.items()}
+            key, sk = jax.random.split(key)
+            params, residual, metrics = step(params, residual, batch, sk)
+            print(f"step {i:4d} loss={float(metrics['loss']):.4f} "
+                  f"|u|={float(metrics['update_norm']):.4f} "
+                  f"({time.time() - t0:.1f}s)")
+    if args.ckpt:
+        save_checkpoint(args.ckpt, jax.device_get(params), step=args.steps)
+        print(f"saved checkpoint to {args.ckpt}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,8 @@
+"""Model zoo substrate: unified trunk covering dense / MoE / SSM / hybrid /
+enc-dec architectures (see repro.configs for the 10 assigned shapes)."""
+
+from .model import decode_step, forward, init_caches, init_params, loss_fn, param_count
+from .shardings import batch_spec, cache_specs, param_specs
+
+__all__ = ["decode_step", "forward", "init_caches", "init_params", "loss_fn",
+           "param_count", "batch_spec", "cache_specs", "param_specs"]

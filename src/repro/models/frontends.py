@@ -1,0 +1,29 @@
+"""Modality frontend STUBS — the one sanctioned carve-out (see task brief).
+
+For the [audio] and [vlm] architectures we implement the language/decoder
+transformer that *consumes* frontend embeddings; the mel-spectrogram+conv
+feature extractor (whisper) and the VQ image tokenizer (chameleon) are
+stubbed:
+
+* whisper-tiny: ``input_specs`` provides precomputed frame embeddings
+  (B, source_len=1500, d_model) — what the two conv layers would emit for
+  a 30 s clip at 50 Hz.
+* chameleon-34b: early fusion means images ARE tokens (VQ codes live in the
+  same 65536 vocab), so its "frontend stub" is simply that we never run a
+  VQ-GAN: token streams arrive pre-tokenized.  No extra inputs needed.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def audio_frames_spec(batch: int, source_len: int, d_model: int,
+                      dtype=jnp.float32) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct((batch, source_len, d_model), dtype)
+
+
+def synth_audio_frames(key, batch: int, source_len: int, d_model: int) -> jax.Array:
+    """Synthetic stand-in frame embeddings for smoke tests / examples."""
+    return jax.random.normal(key, (batch, source_len, d_model)) * 0.02

@@ -1,0 +1,49 @@
+"""Hymba-style hybrid head block (arXiv:2411.13676).
+
+Attention heads and Mamba(SSD) heads run *in parallel* on the same layer
+input; their outputs are independently normalized, scaled by learned
+per-path gains, and averaged.  Attention runs sliding-window (the SSM path
+carries the global summary), which is what makes hymba long_500k-capable.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as attn_mod
+from . import ssm as ssm_mod
+from .layers import init_rms, rms_norm
+
+
+def init_hybrid(key, cfg) -> dict:
+    ka, ks = jax.random.split(key)
+    dt = jnp.dtype(cfg.param_dtype)
+    return {"attn": attn_mod.init_attention(ka, cfg),
+            "ssm": ssm_mod.init_ssm(ks, cfg),
+            "attn_out_norm": init_rms(cfg.d_model, dt),
+            "ssm_out_norm": init_rms(cfg.d_model, dt),
+            "beta1": jnp.ones((), dt), "beta2": jnp.ones((), dt)}
+
+
+def hybrid_forward(p: dict, x: jax.Array, cfg, *, positions) -> jax.Array:
+    ya = attn_mod.multihead_attention(p["attn"], x, cfg, positions=positions)
+    ys = ssm_mod.ssd_forward(p["ssm"], x, cfg)
+    ya = rms_norm(ya, p["attn_out_norm"], cfg.rms_eps)
+    ys = rms_norm(ys, p["ssm_out_norm"], cfg.rms_eps)
+    return 0.5 * (p["beta1"] * ya + p["beta2"] * ys)
+
+
+def init_hybrid_cache(cfg, batch: int, length: int, dtype) -> dict:
+    return {"attn": attn_mod.init_kv_cache(cfg, batch, length, dtype),
+            "ssm": ssm_mod.init_ssm_cache(cfg, batch, dtype)}
+
+
+def decode_hybrid(p: dict, x: jax.Array, cache: dict, pos, cfg, *, ring: bool):
+    ya, new_attn = attn_mod.decode_attention(p["attn"], x, cache["attn"], pos,
+                                             cfg, ring=ring)
+    ys, new_ssm = ssm_mod.decode_ssm(p["ssm"], x, cache["ssm"], cfg)
+    ya = rms_norm(ya, p["attn_out_norm"], cfg.rms_eps)
+    ys = rms_norm(ys, p["ssm_out_norm"], cfg.rms_eps)
+    out = 0.5 * (p["beta1"] * ya + p["beta2"] * ys)
+    return out, {"attn": new_attn, "ssm": new_ssm}

@@ -1,0 +1,77 @@
+"""Shared building blocks: norms, activations, RoPE, embeddings, MLPs.
+
+Pure-functional style: params are nested dicts of jnp arrays; every module
+is an (init, apply) pair.  Weight layout convention: matmul weights are
+(in_dim, out_dim) so sharding rules key off dimension semantics (see
+repro/models/shardings.py).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rms_norm(x: jax.Array, w: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    x32 = x32 * jax.lax.rsqrt(jnp.mean(x32 * x32, axis=-1, keepdims=True) + eps)
+    return (x32 * w.astype(jnp.float32)).astype(dt)
+
+
+def init_rms(d: int, dtype) -> jax.Array:
+    return jnp.ones((d,), dtype)
+
+
+def dense_init(key, d_in: int, d_out: int, dtype, scale: float | None = None):
+    scale = (1.0 / d_in) ** 0.5 if scale is None else scale
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * scale).astype(dtype)
+
+
+def activation(name: str):
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu,
+            "geglu": jax.nn.gelu, "relu": jax.nn.relu}[name]
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_freqs(dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, D) with D even; positions: broadcastable to (..., S)."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                      # (D/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, D/2)
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(seq: int, d: int) -> jax.Array:
+    """Whisper-style sinusoidal embeddings (S, d)."""
+    pos = jnp.arange(seq, dtype=jnp.float32)[:, None]
+    inv = 1.0 / (10_000.0 ** (jnp.arange(0, d, 2, dtype=jnp.float32) / d))
+    ang = pos * inv[None, :]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Gated MLP (SwiGLU / GeGLU)
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, d: int, f: int, dtype) -> dict:
+    kg, ku, kd = jax.random.split(key, 3)
+    return {"wg": dense_init(kg, d, f, dtype),
+            "wu": dense_init(ku, d, f, dtype),
+            "wd": dense_init(kd, f, d, dtype)}
+
+
+def apply_mlp(p: dict, x: jax.Array, act: str) -> jax.Array:
+    fn = activation(act)
+    h = fn(x @ p["wg"]) * (x @ p["wu"])
+    return h @ p["wd"]

@@ -1,0 +1,150 @@
+"""Multi-head Latent Attention (DeepSeek-V2, arXiv:2405.04434).
+
+KV state is compressed into a rank-``kv_lora_rank`` latent ``c_kv`` plus a
+small shared RoPE key (``qk_rope_dim``); queries go through their own
+low-rank path.  The decode cache stores only ``(c_kv, k_rope)`` —
+(512+64) floats/token for the assigned config versus 128 heads * 2 * 128
+for vanilla GQA: a 57x cache compression.  We implement the *naive* decode
+(reconstruct per-head K/V from the latent each step); the matrix-absorbed
+variant is a §Perf hillclimb (see EXPERIMENTS.md).
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .attention import NEG_INF, _blockwise_attention, _dense_attention, DENSE_MAX_SEQ
+from .layers import apply_rope, dense_init, init_rms, rms_norm
+
+
+def init_mla(key, cfg) -> dict:
+    d, h = cfg.d_model, cfg.n_heads
+    r_kv, r_q = cfg.kv_lora_rank, cfg.q_lora_rank
+    dn, dr, dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    ks = jax.random.split(key, 8)
+    dt = jnp.dtype(cfg.param_dtype)
+    p = {
+        "wdkv": dense_init(ks[0], d, r_kv, dt),          # x -> latent
+        "wkr": dense_init(ks[1], d, dr, dt),             # x -> shared rope key
+        "wuk": dense_init(ks[2], r_kv, h * dn, dt),      # latent -> K_nope
+        "wuv": dense_init(ks[3], r_kv, h * dv, dt),      # latent -> V
+        "wo": dense_init(ks[4], h * dv, d, dt),
+        "kv_norm": init_rms(r_kv, dt),
+    }
+    if r_q > 0:
+        p["wdq"] = dense_init(ks[5], d, r_q, dt)
+        p["wuq"] = dense_init(ks[6], r_q, h * (dn + dr), dt)
+        p["q_norm"] = init_rms(r_q, dt)
+    else:
+        p["wq"] = dense_init(ks[7], d, h * (dn + dr), dt)
+    return p
+
+
+def _queries(p, x, cfg, positions):
+    b, s, _ = x.shape
+    h, dn, dr = cfg.n_heads, cfg.qk_nope_dim, cfg.qk_rope_dim
+    if "wdq" in p:
+        q = rms_norm(x @ p["wdq"], p["q_norm"], cfg.rms_eps) @ p["wuq"]
+    else:
+        q = x @ p["wq"]
+    q = q.reshape(b, s, h, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    return jnp.concatenate([q_nope, q_rope], axis=-1)
+
+
+def _keys_values(p, x, cfg, positions):
+    b, s, _ = x.shape
+    h, dn, dr, dv = cfg.n_heads, cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    c_kv = rms_norm(x @ p["wdkv"], p["kv_norm"], cfg.rms_eps)
+    k_rope = apply_rope((x @ p["wkr"]).reshape(b, s, 1, dr), positions,
+                        cfg.rope_theta)
+    k_nope = (c_kv @ p["wuk"]).reshape(b, s, h, dn)
+    v = (c_kv @ p["wuv"]).reshape(b, s, h, dv)
+    k = jnp.concatenate([k_nope, jnp.broadcast_to(k_rope, (b, s, h, dr))], axis=-1)
+    return k, v, c_kv, k_rope
+
+
+def mla_attention(p: dict, x: jax.Array, cfg, *, positions) -> jax.Array:
+    """Full-sequence MLA (train / prefill)."""
+    b, s, _ = x.shape
+    h, dv = cfg.n_heads, cfg.v_head_dim
+    q = _queries(p, x, cfg, positions)
+    k, v, _, _ = _keys_values(p, x, cfg, positions)
+    scale = 1.0 / math.sqrt(cfg.qk_dim)
+    if s <= DENSE_MAX_SEQ:
+        out = _dense_attention(q, k, v, positions, positions, True,
+                               cfg.sliding_window, scale)
+    else:
+        out = _blockwise_attention(q, k, v, positions, positions, True,
+                                   cfg.sliding_window, scale,
+                                   cfg.attn_q_block, cfg.attn_kv_block)
+    return out.reshape(b, s, h * dv).astype(x.dtype) @ p["wo"]
+
+
+# ---------------------------------------------------------------------------
+# Decode with the compressed latent cache
+# ---------------------------------------------------------------------------
+
+def init_mla_cache(cfg, batch: int, length: int, dtype) -> dict:
+    return {"c_kv": jnp.zeros((batch, length, cfg.kv_lora_rank), dtype),
+            "k_rope": jnp.zeros((batch, length, cfg.qk_rope_dim), dtype)}
+
+
+def decode_mla(p: dict, x: jax.Array, cache: dict, pos, cfg,
+               *, ring: bool = False, absorbed: bool = False):
+    """One-token MLA decode.  ``absorbed=True`` keeps attention in the latent
+    space (W_uk folded into the query, W_uv into the output projection): the
+    per-step cost stops scaling with h*dn reconstructions of the whole cache
+    — this is the matrix-absorption optimization from the paper, our §Perf
+    hillclimb for decode_32k."""
+    b, _, _ = x.shape
+    h, dn, dr, dv = cfg.n_heads, cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    r_kv = cfg.kv_lora_rank
+    t = cache["c_kv"].shape[1]
+    posb = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))
+    posv = posb[:, None]
+    q = _queries(p, x, cfg, posv)                     # (B,1,H,dn+dr)
+    c_kv = rms_norm(x @ p["wdkv"], p["kv_norm"], cfg.rms_eps)  # (B,1,r)
+    k_rope = apply_rope((x @ p["wkr"]).reshape(b, 1, 1, dr), posv,
+                        cfg.rope_theta).reshape(b, 1, dr)
+    slot = jnp.where(ring, posb % t, jnp.minimum(posb, t - 1))
+    bidx = jnp.arange(b)
+    cc = cache["c_kv"].at[bidx, slot].set(c_kv[:, 0].astype(cache["c_kv"].dtype))
+    cr = cache["k_rope"].at[bidx, slot].set(k_rope[:, 0].astype(cache["k_rope"].dtype))
+    slots = jnp.arange(t)[None, :]
+    if ring:
+        kpos = posb[:, None] - ((posb[:, None] - slots) % t)
+    else:
+        kpos = jnp.broadcast_to(slots, (b, t))
+    valid = (kpos <= posb[:, None]) & (kpos >= 0)
+    scale = 1.0 / math.sqrt(cfg.qk_dim)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    if absorbed:
+        # fold W_uk into q: q_lat (B,1,H,r) = q_nope @ W_uk^T (per head)
+        wuk = p["wuk"].reshape(r_kv, h, dn)
+        q_lat = jnp.einsum("bqhd,rhd->bqhr", q_nope.astype(jnp.float32),
+                           wuk.astype(jnp.float32))
+        sc = jnp.einsum("bqhr,btr->bhqt", q_lat, cc.astype(jnp.float32))
+        sc += jnp.einsum("bqhd,btd->bhqt", q_rope.astype(jnp.float32),
+                         cr.astype(jnp.float32))
+        sc = jnp.where(valid[:, None, None, :], sc * scale, NEG_INF)
+        w = jax.nn.softmax(sc, axis=-1)
+        ctx = jnp.einsum("bhqt,btr->bqhr", w, cc.astype(jnp.float32))  # latent ctx
+        wuv = p["wuv"].reshape(r_kv, h, dv)
+        out = jnp.einsum("bqhr,rhd->bqhd", ctx, wuv.astype(jnp.float32))
+    else:
+        k_nope = (cc @ p["wuk"]).reshape(b, t, h, dn)
+        v = (cc @ p["wuv"]).reshape(b, t, h, dv)
+        k = jnp.concatenate([k_nope, jnp.broadcast_to(cr[:, :, None, :], (b, t, h, dr))],
+                            axis=-1)
+        sc = jnp.einsum("bqhd,bthd->bhqt", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+        sc = jnp.where(valid[:, None, None, :], sc, NEG_INF)
+        w = jax.nn.softmax(sc, axis=-1)
+        out = jnp.einsum("bhqt,bthd->bqhd", w, v.astype(jnp.float32))
+    out = out.reshape(b, 1, h * dv).astype(x.dtype)
+    return out @ p["wo"], {"c_kv": cc, "k_rope": cr}

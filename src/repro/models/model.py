@@ -1,0 +1,139 @@
+"""Public model API: init / loss / forward / decode for every ArchConfig.
+
+``batch`` dict convention:
+  train/prefill : {"tokens": (B,S) int32, "targets": (B,S) int32,
+                   ["frames": (B,src,D) float]}          (frames: enc-dec only)
+  decode        : {"token": (B,1) int32, "pos": () int32, caches...}
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import transformer as tr
+from .layers import dense_init, init_rms, rms_norm, sinusoidal_positions
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def init_params(cfg, key) -> dict:
+    dt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 8)
+    p: dict = {
+        "embed": (jax.random.normal(ks[0], (cfg.vocab, cfg.d_model), jnp.float32)
+                  * 0.02).astype(dt),
+        "final_norm": init_rms(cfg.d_model, dt),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = dense_init(ks[1], cfg.d_model, cfg.vocab, dt, scale=0.02)
+    for i, spec in enumerate(tr.group_plan(cfg)):
+        p[f"group{i}"] = tr.init_group(ks[2 + i], cfg, spec)
+    if cfg.is_enc_dec:
+        p["enc_group0"] = tr.init_group(ks[6], cfg, tr.encoder_plan(cfg)[0])
+        p["enc_norm"] = init_rms(cfg.d_model, dt)
+    return p
+
+
+def param_count(params) -> int:
+    return sum(x.size for x in jax.tree_util.tree_leaves(params))
+
+
+# ---------------------------------------------------------------------------
+# forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+def cast_params(params, cfg):
+    """Mixed precision: run the forward pass in compute_dtype (grads still
+    flow to the original-precision leaves through the cast)."""
+    ct = jnp.dtype(cfg.compute_dtype)
+    return jax.tree_util.tree_map(
+        lambda p: p.astype(ct) if p.dtype in (jnp.float32, jnp.bfloat16) else p,
+        params)
+
+
+def _embed(params, cfg, tokens):
+    x = jnp.take(params["embed"], tokens, axis=0).astype(jnp.dtype(cfg.compute_dtype))
+    return x * (cfg.d_model ** 0.5) if cfg.scale_embed else x
+
+
+def _encode(params, cfg, frames):
+    x = frames.astype(jnp.dtype(cfg.compute_dtype))
+    x = x + sinusoidal_positions(x.shape[1], cfg.d_model).astype(x.dtype)[None]
+    pos = jnp.arange(x.shape[1], dtype=jnp.int32)
+    x, _ = tr.apply_group(params["enc_group0"], x, cfg, tr.encoder_plan(cfg)[0],
+                          positions=pos)
+    return rms_norm(x, params["enc_norm"], cfg.rms_eps)
+
+
+def forward(params, cfg, batch, *, last_only: bool = False) -> tuple[jax.Array, jax.Array]:
+    """Full-sequence forward.  Returns (logits (B,S,V), aux_loss).
+
+    ``last_only=True`` computes logits for the final position only (prefill
+    serving): at 32k x 50k-vocab the full logits tensor is tens of GiB."""
+    params = cast_params(params, cfg)
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    from .shardings import constrain_residual
+    x = constrain_residual(_embed(params, cfg, tokens))
+    pos = jnp.arange(s, dtype=jnp.int32)
+    enc_out, enc_pos = None, None
+    if cfg.is_enc_dec:
+        enc_out = _encode(params, cfg, batch["frames"])
+        enc_pos = jnp.arange(enc_out.shape[1], dtype=jnp.int32)
+    elif cfg.arch_type == "audio" or cfg.frontend == "audio_stub":
+        pass
+    aux = jnp.zeros((), jnp.float32)
+    for i, spec in enumerate(tr.group_plan(cfg)):
+        x, aux_g = tr.apply_group(params[f"group{i}"], x, cfg, spec, positions=pos,
+                                  enc_out=enc_out, enc_positions=enc_pos)
+        aux = aux + aux_g
+    if last_only:
+        x = x[:, -1:, :]
+    x = rms_norm(x, params["final_norm"], cfg.rms_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = x @ head.astype(x.dtype)
+    return logits, aux
+
+
+def loss_fn(params, cfg, batch) -> jax.Array:
+    """Next-token cross entropy (+ MoE aux), microbatch-safe."""
+    logits, aux = forward(params, cfg, batch)
+    logits = logits.astype(jnp.float32)
+    targets = batch["targets"]
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    ce = (logz - gold).mean()
+    return ce + 0.01 * aux
+
+
+# ---------------------------------------------------------------------------
+# decode (serving)
+# ---------------------------------------------------------------------------
+
+def init_caches(cfg, batch: int, cache_len: int, dtype=None) -> dict:
+    dtype = jnp.dtype(cfg.compute_dtype) if dtype is None else dtype
+    caches = {}
+    for i, spec in enumerate(tr.group_plan(cfg)):
+        one = lambda: tr.init_block_cache(cfg, spec, batch, cache_len, dtype)
+        caches[f"group{i}"] = jax.tree_util.tree_map(
+            lambda *xs: jnp.stack(xs), *[one() for _ in range(spec.n_layers)])
+    return caches
+
+
+def decode_step(params, cfg, token, caches, pos, *, ring: bool = False):
+    """One-token decode: token (B,1) int32, pos scalar int32.
+
+    Returns (logits (B,1,V), new caches)."""
+    params = cast_params(params, cfg)
+    x = _embed(params, cfg, token)
+    new_caches = {}
+    for i, spec in enumerate(tr.group_plan(cfg)):
+        x, new_caches[f"group{i}"] = tr.decode_group(
+            params[f"group{i}"], caches[f"group{i}"], x, pos, cfg, spec, ring=ring)
+    x = rms_norm(x, params["final_norm"], cfg.rms_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = x @ head.astype(x.dtype)
+    return logits, new_caches

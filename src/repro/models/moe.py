@@ -1,0 +1,120 @@
+"""Mixture-of-Experts FFN with top-k routing and capacity-based dispatch.
+
+Covers both assigned MoE shapes:
+  * granite-moe-1b-a400m — 32 experts, top-8, no shared experts.
+  * deepseek-v2-236b    — 160 routed experts top-6 + 2 shared experts,
+    leading dense layer(s).
+
+Dispatch is scatter-based and **slot-looped**: the k routing slots are
+processed one at a time, so no (T*k, d_model) token-copy tensor ever
+exists (at deepseek scale that intermediate is 15 GiB/device).  Tokens
+scatter into an (E, capacity, d) buffer — sharded over ``model`` on the
+expert axis — experts run one batched SwiGLU, and results gather back
+weighted by router probability.  With tokens data-sharded and experts
+model-sharded, GSPMD lowers the scatter/gather pair into the all-to-all
+pattern of expert parallelism.  FLOPs scale with tokens*top_k*capacity
+— active parameters, not total — so the roofline reflects 6*N_active*D.
+
+Token dropping beyond capacity is standard (and mirrors FediAC's own
+philosophy: the dropped remainder is exactly an error-feedback residual);
+the aux load-balance loss keeps the router near-uniform.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import apply_mlp, dense_init, init_mlp
+from .shardings import constrain_spec
+
+
+def init_moe(key, cfg) -> dict:
+    d, e, fe = cfg.d_model, cfg.n_experts, cfg.d_ff_expert
+    ks = jax.random.split(key, 5)
+    dt = jnp.dtype(cfg.param_dtype)
+    p = {"router": dense_init(ks[0], d, e, dt),
+         "we_g": (jax.random.normal(ks[1], (e, d, fe), jnp.float32) / d ** 0.5).astype(dt),
+         "we_u": (jax.random.normal(ks[2], (e, d, fe), jnp.float32) / d ** 0.5).astype(dt),
+         "we_d": (jax.random.normal(ks[3], (e, fe, d), jnp.float32) / fe ** 0.5).astype(dt)}
+    if cfg.n_shared_experts > 0:
+        p["shared"] = init_mlp(ks[4], d, cfg.d_ff_expert * cfg.n_shared_experts, dt)
+    return p
+
+
+MOE_TOKEN_CHUNK = 32_768  # chunked dispatch above this (prefill-scale) count
+
+
+def apply_moe(p: dict, x: jax.Array, cfg) -> tuple[jax.Array, jax.Array]:
+    """x: (B, S, D) -> (out, aux_loss).
+
+    Above MOE_TOKEN_CHUNK tokens (32k prefill), dispatch runs in sequential
+    token chunks (lax.map): the (E, capacity, d) buffers and their scatter
+    upcasts stay bounded — the MoE analogue of chunked prefill."""
+    b, s, d = x.shape
+    t = b * s
+    xt = constrain_spec(x.reshape(t, d), "batch", None)
+    if t > MOE_TOKEN_CHUNK and t % MOE_TOKEN_CHUNK == 0:
+        n_chunks = t // MOE_TOKEN_CHUNK
+        y, aux = jax.lax.map(
+            lambda c: _moe_core(p, c, cfg),
+            xt.reshape(n_chunks, MOE_TOKEN_CHUNK, d))
+        return y.reshape(b, s, d).astype(x.dtype), aux.mean()
+    y, aux = _moe_core(p, xt, cfg)
+    return y.reshape(b, s, d).astype(x.dtype), aux
+
+
+def _moe_core(p: dict, xt: jax.Array, cfg) -> tuple[jax.Array, jax.Array]:
+    t, d = xt.shape
+    e, k = cfg.n_experts, cfg.moe_top_k
+
+    logits = (xt @ p["router"]).astype(jnp.float32)          # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, k)                   # (T, k)
+    top_p = top_p / jnp.clip(top_p.sum(-1, keepdims=True), 1e-9)
+
+    # exact (dropless) capacity for small token counts (decode steps, smoke
+    # tests); factor-based capacity for full training shapes.
+    if t <= 256:
+        capacity = t
+    else:
+        capacity = max(1, int(cfg.capacity_factor * t * k / e))
+
+    buf = constrain_spec(jnp.zeros((e, capacity, d), xt.dtype), "model", None, None)
+    tokens_per_e = jnp.zeros((e,), jnp.float32)
+    offset = jnp.zeros((e,), jnp.int32)      # slots already taken per expert
+    slot_meta = []
+    for j in range(k):                       # k is small (6-8): static unroll
+        ej = top_e[:, j]                                        # (T,)
+        oh = jax.nn.one_hot(ej, e, dtype=jnp.int32)             # (T, E)
+        within = jnp.cumsum(oh, axis=0) - oh
+        pos = jnp.take_along_axis(within, ej[:, None], axis=1)[:, 0] + offset[ej]
+        keep = pos < capacity
+        pos_safe = jnp.where(keep, pos, 0)
+        buf = buf.at[ej, pos_safe].add(
+            jnp.where(keep[:, None], xt, 0).astype(xt.dtype))
+        offset = offset + oh.sum(axis=0)
+        tokens_per_e = tokens_per_e + oh.sum(axis=0).astype(jnp.float32)
+        slot_meta.append((ej, pos_safe, keep))
+
+    # load-balance aux loss (Switch-style)
+    aux = e * jnp.sum((tokens_per_e / (t * k)) * probs.mean(axis=0))
+
+    # expert compute: batched SwiGLU over the (E, C, d) buffer
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, p["we_g"])) * \
+        jnp.einsum("ecd,edf->ecf", buf, p["we_u"])
+    y_buf = jnp.einsum("ecf,efd->ecd", h, p["we_d"])         # (E, C, d)
+    y_buf = constrain_spec(y_buf, "model", None, None)
+
+    # combine: per-slot gather, weighted by router prob (compute dtype —
+    # an f32 accumulator here costs gigabytes at (T, d) scale)
+    y = jnp.zeros((t, d), xt.dtype)
+    for j, (ej, pos_safe, keep) in enumerate(slot_meta):
+        yj = y_buf[ej, pos_safe]                             # (T, d)
+        w = (top_p[:, j] * keep).astype(xt.dtype)[:, None]
+        y = y + yj * w
+    y = constrain_spec(y, "batch", None)
+
+    if "shared" in p:
+        y = y + apply_mlp(p["shared"], xt, cfg.act)
+    return y, aux

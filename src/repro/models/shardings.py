@@ -1,0 +1,214 @@
+"""PartitionSpec rules for parameters, batches, and decode caches.
+
+Axis convention (launch/mesh.py): ``data`` = clients / batch, ``model`` =
+within-client tensor parallelism, ``pod`` (multi-pod only) = hierarchical
+client groups (one PS per pod, see DESIGN.md).
+
+Rules are name-based over the param tree.  A dimension is sharded over
+``model`` only when it divides evenly AND the split is semantically clean
+(head-aligned for attention, expert-aligned for MoE).  ``fsdp=True``
+additionally shards a weight dimension (usually d_model) over ``data`` —
+only valid for E=1 archs (params never diverge across clients; DESIGN.md §2).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+from jax.tree_util import DictKey, tree_map_with_path
+
+
+def _keys(path) -> list[str]:
+    return [k.key for k in path if isinstance(k, DictKey)]
+
+
+# ---------------------------------------------------------------------------
+# Activation sharding context
+#
+# GSPMD propagates *weight* shardings into activations; under FSDP that makes
+# the residual stream inherit the feature-dim (data-axis) sharding and lose
+# its batch partitioning entirely (observed: 24 GiB/device checkpoint
+# buffers).  The step factories install this context so the model constrains
+# its residual stream to P(batch_axes, None, feat_axis) — batch over the
+# data axes, features over `model` (Megatron sequence-parallel style storage,
+# applied to the feature dim).  No-op when unset (unit tests, single device).
+# ---------------------------------------------------------------------------
+
+_ACT_CTX: dict = {"mesh": None, "batch": None, "feat": None, "seq": None}
+
+
+def set_activation_sharding(mesh, batch_axes, feat_axis=None,
+                            seq_axis=None) -> None:
+    _ACT_CTX.update(mesh=mesh, batch=batch_axes, feat=feat_axis, seq=seq_axis)
+
+
+def clear_activation_sharding() -> None:
+    _ACT_CTX.update(mesh=None, batch=None, feat=None, seq=None)
+
+
+import functools as _functools
+
+import jax as _jax
+
+
+@_functools.lru_cache(maxsize=None)
+def _ct_cast(dtype_name: str):
+    """Identity in forward; casts the cotangent to ``dtype`` in backward.
+
+    The loss upcasts logits to f32, so the residual-stream cotangent flows
+    back through 64 layers in f32 — doubling every activation all-gather /
+    all-reduce on the wire.  This barrier pins the backward stream to the
+    compute dtype (the standard mixed-precision contract)."""
+    import jax.numpy as _jnp
+    dt = _jnp.dtype(dtype_name)
+
+    @_jax.custom_vjp
+    def f(x):
+        return x
+
+    def fwd(x):
+        return x, None
+
+    def bwd(_, g):
+        return (g.astype(dt),)
+
+    f.defvjp(fwd, bwd)
+    return f
+
+
+def constrain_spec(x, *entries):
+    """Constrain with literal axis entries; "batch" expands to the context's
+    batch axes.  No-op without an active context (unit tests, 1 device)."""
+    mesh = _ACT_CTX["mesh"]
+    if mesh is None:
+        return x
+    resolved = tuple(_ACT_CTX["batch"] if e == "batch" else e for e in entries)
+    import jax as _jax
+    from jax.sharding import NamedSharding as _NS
+    return _jax.lax.with_sharding_constraint(x, _NS(mesh, P(*resolved)))
+
+
+def constrain_residual(x):
+    """Constrain a (B, S, D) residual-stream tensor (no-op without context),
+    and pin its backward cotangent to the forward dtype."""
+    mesh = _ACT_CTX["mesh"]
+    if mesh is None or x.ndim != 3:
+        return x
+    spec = P(_ACT_CTX["batch"], _ACT_CTX["seq"], _ACT_CTX["feat"])
+    import jax as _jax
+    from jax.sharding import NamedSharding as _NS
+    # constraint first, cast barrier second: in the backward pass the
+    # cotangent is then cast to the compute dtype BEFORE the constraint's
+    # resharding collectives run.
+    x = _jax.lax.with_sharding_constraint(x, _NS(mesh, spec))
+    return _ct_cast(str(x.dtype))(x)
+
+
+def param_specs(params, cfg, *, model_size: int, data_size: int = 1):
+    """PartitionSpec pytree matching ``params`` (works on ShapeDtypeStructs)."""
+    ms = model_size
+    fsdp = cfg.fsdp
+
+    def div(n: int) -> bool:
+        return ms > 1 and n % ms == 0
+
+    def fdiv(n: int) -> bool:
+        return fsdp and data_size > 1 and n % data_size == 0
+
+    heads_ok = div(cfg.n_heads) and ms > 0
+    kv_ok = div(cfg.n_kv_heads)
+    ssm_ok = div(cfg.ssm_heads) if cfg.ssm_heads else False
+    vocab_ok = div(cfg.vocab)
+    dmodel_f = "data" if fdiv(cfg.d_model) else None
+    # when the output can't shard cleanly (head count, odd vocab), shard the
+    # *contraction* dim over model instead — the matmul partial-sums with a
+    # psum, and no weight sits fully replicated on 256 chips.
+    dmodel_m = "model" if div(cfg.d_model) and not fsdp else None
+    dinner_m = "model" if cfg.ssm_heads and div(cfg.d_inner) else None
+
+    def rule(keys: list[str], leaf) -> P:
+        name = keys[-1]
+        stacked = any(k.startswith(("group", "enc_group")) for k in keys)
+        in_moe = "ffn" in keys and cfg.n_experts > 0 and "shared" not in keys
+
+        if name == "embed":
+            spec = ("model" if vocab_ok else None,
+                    dmodel_f if vocab_ok else (dmodel_f or dmodel_m))
+        elif name == "lm_head":
+            spec = (dmodel_f, "model" if vocab_ok else None)
+        elif in_moe and name in ("we_g", "we_u"):
+            spec = ("model" if div(cfg.n_experts) else None, dmodel_f, None)
+        elif in_moe and name == "we_d":
+            spec = ("model" if div(cfg.n_experts) else None, None, dmodel_f)
+        elif in_moe and name == "router":
+            spec = (dmodel_f, None)
+        elif name in ("wg", "wu"):
+            f_dim = leaf.shape[-1]
+            spec = (dmodel_f, "model" if div(f_dim) else None)
+        elif name == "wd":
+            spec = ("model" if div(leaf.shape[-2]) else None, dmodel_f)
+        elif name == "wq":
+            spec = (dmodel_f or (None if heads_ok else dmodel_m),
+                    "model" if heads_ok else None)
+        elif name in ("wk", "wv"):
+            spec = (dmodel_f or (None if kv_ok else dmodel_m),
+                    "model" if kv_ok else None)
+        elif name == "wo":
+            if heads_ok:
+                spec = ("model", dmodel_f)
+            else:  # contraction over the flat H*dh dim is always sound
+                hd = leaf.shape[-2]
+                spec = ("model" if div(hd) else None, dmodel_f)
+        # --- MLA ---
+        elif name in ("wdkv", "wkr", "wdq"):
+            spec = (dmodel_f, None)
+        elif name in ("wuq", "wuk", "wuv"):
+            spec = (None, "model" if heads_ok else None)
+        # --- SSM ---
+        elif name in ("w_x", "w_z"):
+            spec = (dmodel_f or (None if ssm_ok else dmodel_m),
+                    "model" if ssm_ok else None)
+        elif name in ("w_B", "w_C", "w_dt"):
+            spec = (dmodel_f or dmodel_m, None)
+        elif name == "out_proj":
+            spec = ("model" if (ssm_ok or dinner_m) else None, dmodel_f)
+        else:  # norms, biases, convs, scalars, A_log, D, dt_bias, beta*
+            spec = (None,) * (leaf.ndim - (1 if stacked else 0))
+
+        if stacked:
+            spec = (None,) + tuple(spec)
+        spec = spec[:leaf.ndim] if leaf.ndim else ()
+        return P(*spec)
+
+    return tree_map_with_path(lambda p, l: rule(_keys(p), l), params)
+
+
+def batch_spec(kind: str, *, batch_divisible: bool, data_axes) -> dict:
+    """Specs for the input batch dict."""
+    da = data_axes if batch_divisible else None
+    if kind in ("train", "prefill"):
+        return {"tokens": P(da, None), "targets": P(da, None)}
+    return {"token": P(da, None)}
+
+
+def cache_specs(caches, *, batch_divisible: bool, data_axes,
+                model_size: int = 16):
+    """Decode-cache specs.  Batch over data (when divisible); attention-cache
+    *length* over ``model`` — kv-head counts (1-8) never divide the model
+    axis, but the 2k-32k cache length always does, and length-sharding is
+    what keeps a 1 TB KV cache within HBM (softmax over the sharded length
+    lowers to a max/sum all-reduce)."""
+    da = data_axes if batch_divisible else None
+
+    def rule(path, leaf):
+        keys = _keys(path)
+        name = keys[-1]
+        # all caches are stacked over layers: (L, B, ...)
+        if name in ("k", "v", "cross_k", "cross_v", "c_kv", "k_rope"):
+            t = leaf.shape[2]
+            tm = "model" if model_size > 1 and t % model_size == 0 else None
+            return P(None, da, tm, *([None] * (leaf.ndim - 3)))
+        return P(None, da, *([None] * (leaf.ndim - 2)))
+
+    return tree_map_with_path(rule, caches)

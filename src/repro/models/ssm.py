@@ -1,0 +1,166 @@
+"""Mamba-2 (SSD — state-space duality, arXiv:2405.21060).
+
+Chunked SSD forward: within chunks of Q tokens the recurrence is expanded
+into a masked (semiseparable) attention-like matmul; across chunks a
+sequential ``lax.scan`` carries the (H, P, N) state.  This is the
+TPU-friendly formulation — all chunk math is MXU einsums, the only
+sequential dependency is S/Q scan steps.
+
+Decode is the exact recurrence: ``S <- a S + dt (B ⊗ x)``, ``y = C·S + D x``
+— O(1) per token, which is what makes the long_500k shape lowerable.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense_init, init_rms, rms_norm
+
+
+def init_ssm(key, cfg) -> dict:
+    d, h, p_dim = cfg.d_model, cfg.ssm_heads, cfg.ssm_head_dim
+    din = h * p_dim
+    g, n, w = cfg.ssm_groups, cfg.ssm_state, cfg.conv_width
+    ks = jax.random.split(key, 8)
+    dt = jnp.dtype(cfg.param_dtype)
+    return {
+        "w_x": dense_init(ks[0], d, din, dt),
+        "w_z": dense_init(ks[1], d, din, dt),
+        "w_B": dense_init(ks[2], d, g * n, dt),
+        "w_C": dense_init(ks[3], d, g * n, dt),
+        "w_dt": dense_init(ks[4], d, h, dt),
+        "conv": (jax.random.normal(ks[5], (w, din + 2 * g * n), jnp.float32)
+                 / w ** 0.5).astype(dt),
+        "A_log": jnp.zeros((h,), dt),          # A = -exp(A_log) = -1 at init
+        "D": jnp.ones((h,), dt),
+        "dt_bias": jnp.zeros((h,), dt),
+        "norm": init_rms(din, dt),
+        "out_proj": dense_init(ks[6], din, d, dt),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array) -> jax.Array:
+    """x: (B,S,C), w: (W,C) depthwise causal conv + SiLU."""
+    width = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (width - 1, 0), (0, 0)))
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i][None, None, :] for i in range(width))
+    return jax.nn.silu(out)
+
+
+def _project(p: dict, x: jax.Array, cfg):
+    """Shared projections for both train and decode paths."""
+    g, n = cfg.ssm_groups, cfg.ssm_state
+    xin = x @ p["w_x"]
+    z = x @ p["w_z"]
+    braw = x @ p["w_B"]
+    craw = x @ p["w_C"]
+    dt_raw = x @ p["w_dt"]
+    conv_in = jnp.concatenate([xin, braw, craw], axis=-1)
+    return conv_in, z, dt_raw
+
+
+def _split_conv(conv_out: jax.Array, cfg):
+    din = cfg.d_inner
+    g, n = cfg.ssm_groups, cfg.ssm_state
+    xin = conv_out[..., :din]
+    braw = conv_out[..., din:din + g * n]
+    craw = conv_out[..., din + g * n:]
+    return xin, braw, craw
+
+
+def ssd_forward(p: dict, x: jax.Array, cfg) -> jax.Array:
+    """x: (B, S, D) -> (B, S, D); S must be a multiple of ssm_chunk."""
+    b, s, d = x.shape
+    h, pd = cfg.ssm_heads, cfg.ssm_head_dim
+    g, n, q = cfg.ssm_groups, cfg.ssm_state, cfg.ssm_chunk
+    assert s % q == 0, (s, q)
+    nc = s // q
+
+    conv_in, z, dt_raw = _project(p, x, cfg)
+    xin, braw, craw = _split_conv(_causal_conv(conv_in, p["conv"]), cfg)
+
+    # full-sequence tensors stay in the compute dtype (an f32 upcast here
+    # costs gigabytes at (B, S, H, P) scale); per-chunk state math runs f32.
+    xh = xin.reshape(b, s, h, pd)
+    bh = jnp.repeat(braw.reshape(b, s, g, n), h // g, axis=2)
+    ch = jnp.repeat(craw.reshape(b, s, g, n), h // g, axis=2)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    a_log = dt * (-jnp.exp(p["A_log"].astype(jnp.float32)))      # (B,S,H), <= 0
+
+    # chunk views: (nc, B, Q, ...)
+    def chunked(t):
+        return t.reshape(b, nc, q, *t.shape[2:]).swapaxes(0, 1)
+
+    xh_c, bh_c, ch_c, dt_c, al_c = map(chunked, (xh, bh, ch, dt, a_log))
+
+    def chunk_step(state, inp):
+        xq, bq, cq, dtq, alq = inp                 # (B,Q,H,*) / (B,Q,H)
+        wdt = xq.dtype                             # compute dtype for the
+        cum = jnp.cumsum(alq, axis=1)              # quadratic intra-chunk
+        # intra-chunk: y[t] = sum_{j<=t} (C_t·B_j) exp(cum_t - cum_j) dt_j x_j
+        # — the (Q, Q) tiles run in the compute dtype (same trade as bf16
+        # flash attention); the state recurrence below stays f32.
+        cb = jnp.einsum("bthn,bjhn->bhtj", cq, bq)             # wdt
+        seg = cum[:, :, None, :] - cum[:, None, :, :]          # (B,t,j,H) f32
+        mask = jnp.tril(jnp.ones((q, q), bool))
+        L = jnp.where(mask[None, :, :, None], jnp.exp(seg), 0.0)
+        m = cb * (L.transpose(0, 3, 1, 2)
+                  * dtq[:, None, :, :].transpose(0, 3, 1, 2)).astype(wdt)
+        y_intra = jnp.einsum("bhtj,bjhp->bthp", m, xq,
+                             preferred_element_type=jnp.float32)
+        # inter-chunk: y[t] += exp(cum_t) C_t · S_prev
+        y_inter = jnp.einsum("bthn,bhpn->bthp", cq.astype(jnp.float32),
+                             state) * jnp.exp(cum)[..., None]
+        # state: S_new = exp(cum_last) S + sum_j exp(cum_last - cum_j) dt_j B_j x_j^T
+        decay = jnp.exp(cum[:, -1:, :] - cum) * dtq            # (B,Q,H)
+        s_new = jnp.exp(cum[:, -1, :])[:, :, None, None] * state + \
+            jnp.einsum("bjhn,bjhp,bjh->bhpn", bq.astype(jnp.float32),
+                       xq.astype(jnp.float32), decay)
+        return s_new, (y_intra + y_inter).astype(x.dtype)
+
+    s0 = jnp.zeros((b, h, pd, n), jnp.float32)
+    _, y = jax.lax.scan(chunk_step, s0, (xh_c, bh_c, ch_c, dt_c, al_c))
+    y = y.swapaxes(0, 1).reshape(b, s, h, pd)
+    y = y + (p["D"].astype(x.dtype)[None, None, :, None] * xh)
+    y = y.reshape(b, s, h * pd)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"], cfg.rms_eps)
+    return y.astype(x.dtype) @ p["out_proj"]
+
+
+# ---------------------------------------------------------------------------
+# Decode: exact recurrence, O(1) per token
+# ---------------------------------------------------------------------------
+
+def init_ssm_cache(cfg, batch: int, dtype) -> dict:
+    h, pd, n, g = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state, cfg.ssm_groups
+    chans = cfg.d_inner + 2 * g * n
+    return {"state": jnp.zeros((batch, h, pd, n), jnp.float32),
+            "conv": jnp.zeros((batch, cfg.conv_width - 1, chans), dtype)}
+
+
+def decode_ssm(p: dict, x: jax.Array, cache: dict, cfg):
+    """x: (B,1,D) -> (out (B,1,D), new cache)."""
+    b = x.shape[0]
+    h, pd = cfg.ssm_heads, cfg.ssm_head_dim
+    g, n = cfg.ssm_groups, cfg.ssm_state
+    conv_in, z, dt_raw = _project(p, x, cfg)       # (B,1,C)
+    hist = jnp.concatenate([cache["conv"], conv_in.astype(cache["conv"].dtype)], axis=1)
+    w = p["conv"]
+    conv_out = jax.nn.silu((hist * w[None]).sum(axis=1, keepdims=True))
+    xin, braw, craw = _split_conv(conv_out, cfg)
+
+    xh = xin.reshape(b, h, pd).astype(jnp.float32)
+    bh = jnp.repeat(braw.reshape(b, g, n), h // g, axis=1).astype(jnp.float32)
+    ch = jnp.repeat(craw.reshape(b, g, n), h // g, axis=1).astype(jnp.float32)
+    dt = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    a = jnp.exp(dt * (-jnp.exp(p["A_log"].astype(jnp.float32))))   # (B,H)
+
+    state = cache["state"] * a[:, :, None, None] + \
+        jnp.einsum("bhn,bhp,bh->bhpn", bh, xh, dt)
+    y = jnp.einsum("bhn,bhpn->bhp", ch, state) + \
+        p["D"].astype(jnp.float32)[None, :, None] * xh
+    y = y.reshape(b, 1, h * pd)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)), p["norm"], cfg.rms_eps)
+    new_cache = {"state": state, "conv": hist[:, 1:, :]}
+    return y.astype(x.dtype) @ p["out_proj"], new_cache

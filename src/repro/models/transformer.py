@@ -1,0 +1,222 @@
+"""The model trunk: grouped, scanned layer stacks + embeddings + heads.
+
+Layers are organized into *groups* of identical structure (so each group is
+one stacked-parameter ``lax.scan`` — compile time stays O(#groups), not
+O(#layers)).  Heterogeneous stacks (DeepSeek's leading dense layer before
+the MoE stack; whisper's encoder + decoder) are just multiple groups.
+
+Every group body is optionally ``jax.checkpoint``-ed (remat) so the stored
+residual-stream activations are one per layer per microbatch.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as attn_mod
+from . import hybrid as hybrid_mod
+from . import mla as mla_mod
+from . import moe as moe_mod
+from . import ssm as ssm_mod
+from .layers import (apply_mlp, dense_init, init_mlp, init_rms, rms_norm,
+                     sinusoidal_positions)
+
+
+@dataclass(frozen=True)
+class GroupSpec:
+    mixer: str          # attn | mla | ssm | hybrid
+    ffn: str            # mlp | moe | none
+    n_layers: int
+    causal: bool = True
+    cross_attn: bool = False
+    d_ff: int = 0       # mlp width for this group
+
+
+def group_plan(cfg) -> list[GroupSpec]:
+    """Decoder-side layer grouping for an ArchConfig."""
+    if cfg.arch_type == "ssm":
+        return [GroupSpec("ssm", "none" if cfg.d_ff == 0 else "mlp",
+                          cfg.n_layers, d_ff=cfg.d_ff)]
+    if cfg.arch_type == "hybrid":
+        return [GroupSpec("hybrid", "mlp", cfg.n_layers, d_ff=cfg.d_ff)]
+    mixer = "mla" if cfg.attn_kind == "mla" else "attn"
+    groups: list[GroupSpec] = []
+    if cfg.n_experts > 0:
+        if cfg.first_dense_layers > 0:
+            groups.append(GroupSpec(mixer, "mlp", cfg.first_dense_layers,
+                                    d_ff=cfg.d_ff_dense or cfg.d_ff))
+        groups.append(GroupSpec(mixer, "moe", cfg.n_layers - cfg.first_dense_layers))
+        return groups
+    cross = cfg.is_enc_dec
+    return [GroupSpec(mixer, "mlp", cfg.n_layers, cross_attn=cross, d_ff=cfg.d_ff)]
+
+
+def encoder_plan(cfg) -> list[GroupSpec]:
+    return [GroupSpec("attn", "mlp", cfg.encoder_layers, causal=False,
+                      d_ff=cfg.d_ff)]
+
+
+# ---------------------------------------------------------------------------
+# Single block init/apply
+# ---------------------------------------------------------------------------
+
+def init_block(key, cfg, spec: GroupSpec) -> dict:
+    dt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 4)
+    p: dict = {"ln1": init_rms(cfg.d_model, dt)}
+    if spec.mixer == "attn":
+        p["mix"] = attn_mod.init_attention(ks[0], cfg)
+    elif spec.mixer == "mla":
+        p["mix"] = mla_mod.init_mla(ks[0], cfg)
+    elif spec.mixer == "ssm":
+        p["mix"] = ssm_mod.init_ssm(ks[0], cfg)
+    elif spec.mixer == "hybrid":
+        p["mix"] = hybrid_mod.init_hybrid(ks[0], cfg)
+    if spec.cross_attn:
+        p["cross"] = attn_mod.init_attention(ks[2], cfg)
+        p["ln_cross"] = init_rms(cfg.d_model, dt)
+    if spec.ffn != "none":
+        p["ln2"] = init_rms(cfg.d_model, dt)
+        if spec.ffn == "moe":
+            p["ffn"] = moe_mod.init_moe(ks[1], cfg)
+        else:
+            p["ffn"] = init_mlp(ks[1], cfg.d_model, spec.d_ff, dt)
+    return p
+
+
+def apply_block(p: dict, x: jax.Array, cfg, spec: GroupSpec, *, positions,
+                enc_out=None, enc_positions=None):
+    """Full-sequence block (train / prefill).  Returns (x, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    h = rms_norm(x, p["ln1"], cfg.rms_eps)
+    if spec.mixer == "attn":
+        mix = attn_mod.multihead_attention(p["mix"], h, cfg, positions=positions,
+                                           causal=spec.causal)
+    elif spec.mixer == "mla":
+        mix = mla_mod.mla_attention(p["mix"], h, cfg, positions=positions)
+    elif spec.mixer == "ssm":
+        mix = ssm_mod.ssd_forward(p["mix"], h, cfg)
+    else:
+        mix = hybrid_mod.hybrid_forward(p["mix"], h, cfg, positions=positions)
+    x = x + mix
+    if spec.cross_attn:
+        hc = rms_norm(x, p["ln_cross"], cfg.rms_eps)
+        x = x + attn_mod.multihead_attention(
+            p["cross"], hc, cfg, positions=positions, kv_x=enc_out,
+            causal=False, kv_positions=enc_positions)
+    if spec.ffn != "none":
+        h2 = rms_norm(x, p["ln2"], cfg.rms_eps)
+        if spec.ffn == "moe":
+            y, aux_l = moe_mod.apply_moe(p["ffn"], h2, cfg)
+            aux = aux + aux_l
+        else:
+            y = apply_mlp(p["ffn"], h2, cfg.act)
+        x = x + y
+    return x, aux
+
+
+# ---------------------------------------------------------------------------
+# Grouped stacks
+# ---------------------------------------------------------------------------
+
+def init_group(key, cfg, spec: GroupSpec) -> dict:
+    keys = jax.random.split(key, spec.n_layers)
+    return jax.vmap(lambda k: init_block(k, cfg, spec))(keys)
+
+
+def apply_group(stacked: dict, x: jax.Array, cfg, spec: GroupSpec, *,
+                positions, enc_out=None, enc_positions=None):
+    from .shardings import constrain_residual
+
+    def body(carry, layer_p):
+        xc, aux = carry
+        xc, aux_l = apply_block(layer_p, xc, cfg, spec, positions=positions,
+                                enc_out=enc_out, enc_positions=enc_positions)
+        return (constrain_residual(xc), aux + aux_l), None
+
+    if cfg.remat:
+        policy = (jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+                  if cfg.remat_policy == "dots" else None)
+        body = jax.checkpoint(body, prevent_cse=False, policy=policy)
+    (x, aux), _ = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)), stacked)
+    return x, aux
+
+
+# ---------------------------------------------------------------------------
+# Decode blocks (single token, cached)
+# ---------------------------------------------------------------------------
+
+def init_block_cache(cfg, spec: GroupSpec, batch: int, length: int, dtype) -> dict:
+    c: dict = {}
+    if spec.mixer in ("attn",):
+        c["mix"] = attn_mod.init_kv_cache(cfg, batch, length, dtype)
+    elif spec.mixer == "mla":
+        c["mix"] = mla_mod.init_mla_cache(cfg, batch, length, dtype)
+    elif spec.mixer == "ssm":
+        c["mix"] = ssm_mod.init_ssm_cache(cfg, batch, dtype)
+    elif spec.mixer == "hybrid":
+        c["mix"] = hybrid_mod.init_hybrid_cache(cfg, batch, length, dtype)
+    if spec.cross_attn:
+        # precomputed cross K/V from the encoder output
+        c["cross_k"] = jnp.zeros((batch, cfg.source_len, cfg.n_kv_heads, cfg.head_dim), dtype)
+        c["cross_v"] = jnp.zeros((batch, cfg.source_len, cfg.n_kv_heads, cfg.head_dim), dtype)
+    return c
+
+
+def decode_block(p: dict, x: jax.Array, cache: dict, pos, cfg, spec: GroupSpec,
+                 *, ring: bool):
+    new_cache = dict(cache)
+    h = rms_norm(x, p["ln1"], cfg.rms_eps)
+    if spec.mixer == "attn":
+        mix, new_cache["mix"] = attn_mod.decode_attention(p["mix"], h, cache["mix"],
+                                                          pos, cfg, ring=ring)
+    elif spec.mixer == "mla":
+        mix, new_cache["mix"] = mla_mod.decode_mla(p["mix"], h, cache["mix"], pos,
+                                                   cfg, ring=ring,
+                                                   absorbed=cfg.mla_absorbed)
+    elif spec.mixer == "ssm":
+        mix, new_cache["mix"] = ssm_mod.decode_ssm(p["mix"], h, cache["mix"], cfg)
+    else:
+        mix, new_cache["mix"] = hybrid_mod.decode_hybrid(p["mix"], h, cache["mix"],
+                                                         pos, cfg, ring=ring)
+    x = x + mix
+    if spec.cross_attn:
+        hc = rms_norm(x, p["ln_cross"], cfg.rms_eps)
+        x = x + _cross_decode(p["cross"], hc, cache["cross_k"], cache["cross_v"], cfg)
+    if spec.ffn != "none":
+        h2 = rms_norm(x, p["ln2"], cfg.rms_eps)
+        if spec.ffn == "moe":
+            y, _ = moe_mod.apply_moe(p["ffn"], h2, cfg)
+        else:
+            y = apply_mlp(p["ffn"], h2, cfg.act)
+        x = x + y
+    return x, new_cache
+
+
+def _cross_decode(p, x, ck, cv, cfg):
+    """Single-query cross attention against precomputed encoder K/V."""
+    import math
+    b, _, _ = x.shape
+    h, hk, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    g = h // hk
+    qg = (x @ p["wq"]).reshape(b, hk, g, dh)
+    sc = jnp.einsum("bkgd,btkd->bkgt", qg.astype(jnp.float32),
+                    ck.astype(jnp.float32)) / math.sqrt(dh)
+    w = jax.nn.softmax(sc, axis=-1)
+    out = jnp.einsum("bkgt,btkd->bkgd", w, cv.astype(jnp.float32))
+    return out.reshape(b, 1, h * dh).astype(x.dtype) @ p["wo"]
+
+
+def decode_group(stacked: dict, caches: dict, x: jax.Array, pos, cfg,
+                 spec: GroupSpec, *, ring: bool):
+    def body(xc, inp):
+        layer_p, layer_c = inp
+        xc, new_c = decode_block(layer_p, xc, layer_c, pos, cfg, spec, ring=ring)
+        return xc, new_c
+
+    x, new_caches = jax.lax.scan(body, x, (stacked, caches))
+    return x, new_caches

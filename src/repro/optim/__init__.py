@@ -1,0 +1,5 @@
+"""Optimizers (no optax on the box: implemented natively)."""
+
+from .optimizers import adam, momentum, sgd, apply_updates
+
+__all__ = ["sgd", "momentum", "adam", "apply_updates"]

@@ -1,0 +1,124 @@
+"""Continuous-batching serving engine.
+
+A fixed pool of ``max_batch`` decode slots shares one jitted decode step
+(the serve_step the decode_32k / long_500k dry-run shapes lower).  Requests
+join free slots as they open; every engine step advances ALL active slots
+by one token with **per-slot positions** (the vector-``pos`` decode path) —
+a new request prefilling its prompt rides in the same batched step as a
+request 500 tokens into generation.  Finished slots are recycled without
+disturbing neighbours (their cache rows are simply overwritten).
+
+This is the slot-level core of a vLLM-style scheduler adapted to fixed
+JAX shapes: no paging (caches are dense per slot), but admission,
+interleaved prefill/decode, and eviction are real.
+"""
+
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.model import decode_step, init_caches
+
+
+@dataclass
+class Request:
+    uid: int
+    prompt: list            # token ids
+    max_new: int = 16
+    eos: int | None = None
+    out: list = field(default_factory=list)
+
+    @property
+    def done(self) -> bool:
+        if self.eos is not None and self.eos in self.out:
+            return True
+        return len(self.out) >= self.max_new
+
+
+class ServingEngine:
+    def __init__(self, cfg, params, *, max_batch: int = 8, cache_len: int = 256,
+                 ring: bool = False):
+        self.cfg = cfg
+        self.params = params
+        self.max_batch = max_batch
+        self.cache_len = cache_len
+        self.ring = ring
+        self.caches = init_caches(cfg, max_batch, cache_len)
+        self.queue: deque[Request] = deque()
+        self.slots: list[Request | None] = [None] * max_batch
+        self.pos = np.zeros(max_batch, np.int32)        # next position per slot
+        self.cursor = np.zeros(max_batch, np.int32)     # prompt cursor per slot
+        self._step = jax.jit(
+            lambda p, tok, caches, pos: decode_step(p, cfg, tok, caches, pos,
+                                                    ring=ring))
+
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def _admit(self) -> None:
+        for i in range(self.max_batch):
+            if self.slots[i] is None and self.queue:
+                self.slots[i] = self.queue.popleft()
+                self.pos[i] = 0
+                self.cursor[i] = 0
+                # reset the slot's cache row: attention rows are position-
+                # masked anyway, but SSM recurrent state and conv history
+                # carry no positions and MUST be zeroed on recycle.
+                self.caches = jax.tree_util.tree_map(
+                    lambda c: c.at[:, i].set(jnp.zeros_like(c[:, i])),
+                    self.caches)
+
+    def _next_tokens(self, last_logits) -> jnp.ndarray:
+        """Choose each slot's next input token: prompt feed or greedy."""
+        toks = np.zeros((self.max_batch, 1), np.int32)
+        for i, req in enumerate(self.slots):
+            if req is None:
+                continue
+            if self.cursor[i] < len(req.prompt):
+                toks[i, 0] = req.prompt[self.cursor[i]]
+            elif last_logits is not None:
+                toks[i, 0] = int(np.argmax(last_logits[i, -1]))
+        return jnp.asarray(toks)
+
+    def step(self, last_logits=None):
+        """One engine tick: admit, build the token batch, decode, collect."""
+        self._admit()
+        if all(r is None for r in self.slots) and not self.queue:
+            return None
+        toks = self._next_tokens(last_logits)
+        logits, self.caches = self._step(self.params, toks, self.caches,
+                                         jnp.asarray(self.pos))
+        np_logits = np.asarray(logits, np.float32)
+        for i, req in enumerate(self.slots):
+            if req is None:
+                continue
+            in_prefill = self.cursor[i] < len(req.prompt)
+            if in_prefill:
+                self.cursor[i] += 1
+                if self.cursor[i] == len(req.prompt):
+                    # last prompt token's logits produce the first new token
+                    req.out.append(int(np.argmax(np_logits[i, -1])))
+            else:
+                req.out.append(int(np.argmax(np_logits[i, -1])))
+            self.pos[i] += 1
+            if req.done or self.pos[i] >= self.cache_len:
+                self.slots[i] = None   # recycle the slot; cache row reused
+        return np_logits
+
+    def run(self, requests: list[Request], max_ticks: int = 10_000):
+        for r in requests:
+            self.submit(r)
+        logits = None
+        ticks = 0
+        while (any(s is not None for s in self.slots) or self.queue) and \
+                ticks < max_ticks:
+            logits = self.step(logits)
+            ticks += 1
+            if logits is None:
+                break
+        return requests

@@ -1,0 +1,6 @@
+from .packets import MTU, RoundTraffic, n_packets
+from .psim import ProgrammableSwitch, PSStats
+from .queueing import SwitchProfile, client_rates, round_wall_clock
+
+__all__ = ["MTU", "RoundTraffic", "n_packets", "ProgrammableSwitch", "PSStats",
+           "SwitchProfile", "client_rates", "round_wall_clock"]

@@ -1,0 +1,24 @@
+"""Packetization and traffic accounting (paper Sec. V-A2: 1500 B MTU)."""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+MTU = 1500
+
+
+def n_packets(n_bytes: int, mtu: int = MTU) -> int:
+    return max(1, -(-int(n_bytes) // mtu))
+
+
+@dataclass
+class RoundTraffic:
+    """Per-round system-wide traffic (upload + download), bytes."""
+
+    upload_per_client: int
+    download_per_client: int
+    n_clients: int
+
+    @property
+    def total(self) -> int:
+        return (self.upload_per_client + self.download_per_client) * self.n_clients

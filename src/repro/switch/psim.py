@@ -1,0 +1,67 @@
+"""Programmable-switch semantics simulator.
+
+Models the two constraints the paper designs around (Sec. I / III-B):
+  1. integer-only arithmetic — ``aggregate_stream`` only accepts ints;
+  2. scarce memory — the PS owns ``memory_slots`` int32 registers; a round
+     that needs more *live* aligned slots than that must run in multiple
+     sequential passes ("aggregations" in the paper's counting).
+
+``aligned`` streams (identical index order on every client — FediAC's GIA,
+SwitchML's dense slots, OmniReduce's block ids) are added blindly slot by
+slot.  Unaligned streams (per-client Top-k indices) must keep an
+(index -> slot) map: every miss evicts to the server, which is the paper's
+motivation example — we count those as extra aggregation ops.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+
+@dataclass
+class PSStats:
+    aggregation_ops: int      # slot additions executed on the PS
+    passes: int               # sequential memory-limited passes
+    server_redirects: int     # values the PS could not align (sent upstream)
+
+
+class ProgrammableSwitch:
+    def __init__(self, memory_slots: int = 262_144):
+        # 1 MB of int32 registers by default (paper Sec. I example)
+        self.memory_slots = int(memory_slots)
+
+    def aggregate_aligned(self, streams: np.ndarray) -> tuple[np.ndarray, PSStats]:
+        """streams: int array (N, d) in identical coordinate order."""
+        if not np.issubdtype(streams.dtype, np.integer):
+            raise TypeError("PS only performs integer arithmetic")
+        n, d = streams.shape
+        passes = -(-d // self.memory_slots)
+        out = streams.sum(axis=0, dtype=np.int64)
+        # paper's counting (Sec. III-B): aggregating N aligned streams of d
+        # values takes (N-1)*d additions.
+        return out, PSStats(aggregation_ops=(n - 1) * d, passes=passes,
+                            server_redirects=0)
+
+    def aggregate_sparse(self, indices: list[np.ndarray],
+                         values: list[np.ndarray], d: int) -> tuple[np.ndarray, PSStats]:
+        """Per-client (index, value) streams with arbitrary alignment."""
+        out = np.zeros(d, np.int64)
+        slot_map: dict[int, int] = {}
+        ops = redirects = 0
+        for idx, val in zip(indices, values):
+            if not np.issubdtype(val.dtype, np.integer):
+                raise TypeError("PS only performs integer arithmetic")
+            for i, v in zip(idx.tolist(), val.tolist()):
+                if i in slot_map:
+                    ops += 1
+                elif len(slot_map) < self.memory_slots:
+                    slot_map[i] = len(slot_map)
+                    ops += 1
+                else:
+                    redirects += 1  # no free slot: redirect to server
+                out[i] += v
+        passes = 1
+        return out, PSStats(aggregation_ops=ops, passes=passes,
+                            server_redirects=redirects)

@@ -1,0 +1,7 @@
+from .dist_step import TrainStepBundle, client_axes_for, make_train_step
+from .fl_loop import FLConfig, FLHistory, run_federated
+from .serve import ServeBundle, make_serve_step
+
+__all__ = ["TrainStepBundle", "client_axes_for", "make_train_step",
+           "FLConfig", "FLHistory", "run_federated",
+           "ServeBundle", "make_serve_step"]

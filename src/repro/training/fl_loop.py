@@ -1,0 +1,173 @@
+"""The federated-learning simulator: N clients, E local steps, a pluggable
+in-network aggregator, and the M/G/1 switch wall-clock model.
+
+This is the engine behind every paper-reproduction benchmark (Fig. 2-4,
+Tables I-II).  The task model is a small MLP classifier over the synthetic
+non-IID classification data (DESIGN.md §6 — the box is offline, no
+CIFAR/FEMNIST); learning dynamics, compression behaviour and the queuing
+model are the paper's.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.baselines import make_aggregator
+from repro.switch import SwitchProfile, client_rates, n_packets, round_wall_clock
+
+
+# ---------------------------------------------------------------------------
+# task model: MLP classifier
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, dims: tuple[int, ...]):
+    ks = jax.random.split(key, len(dims) - 1)
+    return [{"w": jax.random.normal(k, (a, b)) * (2.0 / a) ** 0.5,
+             "b": jnp.zeros((b,))}
+            for k, a, b in zip(ks, dims[:-1], dims[1:])]
+
+
+def mlp_apply(params, x):
+    for i, lyr in enumerate(params):
+        x = x @ lyr["w"] + lyr["b"]
+        if i < len(params) - 1:
+            x = jax.nn.relu(x)
+    return x
+
+
+def _ce_loss(params, x, y):
+    logits = mlp_apply(params, x)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, y[:, None], axis=-1)[:, 0]
+    return (logz - gold).mean()
+
+
+def accuracy(params, x, y) -> float:
+    pred = jnp.argmax(mlp_apply(params, x), axis=-1)
+    return float((pred == y).mean())
+
+
+# ---------------------------------------------------------------------------
+# the FL loop
+# ---------------------------------------------------------------------------
+
+@dataclass
+class FLConfig:
+    n_clients: int = 20
+    rounds: int = 60
+    local_steps: int = 5           # E
+    batch: int = 32
+    lr0: float = 0.1
+    lr_tau: float = 20.0           # lr_t = lr0 / (1 + sqrt(t)/tau)   (paper V-A1)
+    aggregator: str = "fediac"
+    agg_kwargs: dict = field(default_factory=dict)
+    switch: SwitchProfile = field(default_factory=SwitchProfile.high)
+    local_train_s: float = 0.1     # paper: 0.1 (FEMNIST) .. 3 (CIFAR-100)
+    seed: int = 0
+
+
+@dataclass
+class FLHistory:
+    acc: list
+    wall_clock: list       # cumulative seconds
+    traffic_mb: list       # cumulative MB (upload + download, all clients)
+    loss: list
+
+    def acc_at_time(self, t: float) -> float:
+        """Final accuracy achieved within a wall-clock budget (Fig. 2 readout)."""
+        best = 0.0
+        for a, w in zip(self.acc, self.wall_clock):
+            if w <= t:
+                best = max(best, a)
+        return best
+
+    def traffic_to_accuracy(self, target: float) -> float | None:
+        """MB consumed until the target test accuracy (Tables I/II readout)."""
+        for a, mb in zip(self.acc, self.traffic_mb):
+            if a >= target:
+                return mb
+        return None
+
+
+def _stack_clients(clients, batch: int, rng: np.random.Generator):
+    """Pad client datasets to a common size (resampling) for vmap."""
+    size = max(max(len(c.y) for c in clients), batch)
+    xs, ys = [], []
+    for c in clients:
+        idx = np.arange(len(c.y))
+        if len(idx) < size:
+            idx = np.concatenate([idx, rng.choice(len(c.y), size - len(idx))])
+        xs.append(c.x[idx])
+        ys.append(c.y[idx])
+    return jnp.asarray(np.stack(xs)), jnp.asarray(np.stack(ys))
+
+
+def run_federated(clients, test, flcfg: FLConfig, *, hidden=(128, 64)) -> FLHistory:
+    rng = np.random.default_rng(flcfg.seed)
+    dim = clients[0].x.shape[1]
+    n_classes = clients[0].n_classes
+    key = jax.random.PRNGKey(flcfg.seed)
+    params = init_mlp(key, (dim, *hidden, n_classes))
+    flat0, unravel = jax.flatten_util.ravel_pytree(params)
+    d = flat0.size
+
+    cx, cy = _stack_clients(clients, flcfg.batch, rng)
+    n, size = cy.shape
+    assert n == flcfg.n_clients, (n, flcfg.n_clients)
+
+    agg = make_aggregator(flcfg.aggregator, **flcfg.agg_kwargs)
+    rates = client_rates(n, flcfg.seed)
+
+    grad_fn = jax.grad(_ce_loss)
+
+    @jax.jit
+    def local_round(flat_params, key, lr):
+        """E local SGD steps on every client (vmapped). Returns U stack."""
+        def per_client(cxi, cyi, k):
+            w = unravel(flat_params)
+
+            def step(w, k):
+                idx = jax.random.randint(k, (flcfg.batch,), 0, size)
+                g = grad_fn(w, cxi[idx], cyi[idx])
+                w = jax.tree_util.tree_map(lambda p, gg: p - lr * gg, w, g)
+                return w, _ce_loss(w, cxi[idx], cyi[idx])
+
+            ks = jax.random.split(k, flcfg.local_steps)
+            w, losses = jax.lax.scan(step, w, ks)
+            u = flat_params - jax.flatten_util.ravel_pytree(w)[0]
+            return u, losses.mean()
+
+        ks = jax.random.split(key, n)
+        return jax.vmap(per_client)(cx, cy, ks)
+
+    e_stack = jnp.zeros((n, d))
+    flat = flat0
+    agg_state = None
+    hist = FLHistory([], [], [], [])
+    t_cum = 0.0
+    mb_cum = 0.0
+    xt, yt = jnp.asarray(test.x), jnp.asarray(test.y)
+
+    for t in range(1, flcfg.rounds + 1):
+        lr = flcfg.lr0 / (1.0 + np.sqrt(t) / flcfg.lr_tau)
+        key, k1, k2 = jax.random.split(key, 3)
+        u_stack, losses = local_round(flat, k1, lr)
+        u_stack = u_stack + e_stack
+        delta, e_stack, agg_state, traffic, load = agg(u_stack, agg_state, k2)
+        flat = flat - delta
+
+        down_packets = n_packets(traffic.total_bytes)
+        t_cum += round_wall_clock(
+            packets_per_client=load.packets_per_client,
+            download_packets=down_packets, rates=rates, profile=flcfg.switch,
+            local_train_s=flcfg.local_train_s, aligned=load.aligned)
+        mb_cum += traffic.total_bytes * n / 1e6 + traffic.total_bytes * n / 1e6
+        hist.acc.append(accuracy(unravel(flat), xt, yt))
+        hist.wall_clock.append(t_cum)
+        hist.traffic_mb.append(mb_cum)
+        hist.loss.append(float(losses.mean()))
+    return hist

@@ -1,0 +1,83 @@
+"""Serving steps: prefill (full-sequence forward) and single-token decode.
+
+Shape semantics (task brief): ``decode_32k`` / ``long_500k`` lower
+``serve_step`` — ONE new token against a ``seq_len`` KV cache.  For
+long_500k the attention caches are ring buffers of ``cfg.long_decode_window``
+(sub-quadratic + sub-linear memory); SSM/hybrid archs additionally carry
+their O(1) recurrent state.  whisper (enc-dec) skips long_500k entirely
+(DESIGN.md §7).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models import cache_specs, forward, init_caches, param_specs
+from repro.models.model import decode_step, init_params
+from repro.training.dist_step import data_axes_for
+
+
+@dataclass
+class ServeBundle:
+    step: callable
+    params_spec: object
+    cache_shape: object      # ShapeDtypeStructs of the cache pytree
+    cache_spec: object
+    input_spec: dict         # PartitionSpecs of the token inputs
+    ring: bool
+    cache_len: int
+
+
+def cache_len_for(cfg, shape) -> tuple[int, bool]:
+    """(cache length, ring?) for a decode shape."""
+    if shape.seq_len > 65536 or (0 < cfg.sliding_window < shape.seq_len):
+        window = cfg.long_decode_window if shape.seq_len > 65536 else cfg.sliding_window
+        return min(window, shape.seq_len), True
+    return shape.seq_len, False
+
+
+def make_serve_step(cfg, mesh, shape) -> ServeBundle:
+    model_size = mesh.shape["model"]
+    data_size = mesh.shape["data"]
+    dax = data_axes_for(mesh)
+    n_data = 1
+    for ax in dax:
+        n_data *= mesh.shape[ax]
+    batch = shape.global_batch
+    divisible = batch % n_data == 0
+
+    pshape = jax.eval_shape(lambda k: init_params(cfg, k), jax.random.PRNGKey(0))
+    pspec = param_specs(pshape, cfg, model_size=model_size, data_size=data_size)
+
+    # serve runs under plain jit: constrain activations (batch over data,
+    # features over model for FSDP archs) — same rationale as training.
+    from repro.models.shardings import set_activation_sharding
+    feat = "model" if (cfg.fsdp and cfg.act_shard == "feature") else None
+    seq = "model" if (cfg.fsdp and cfg.act_shard == "sequence") else None
+    set_activation_sharding(mesh, dax if divisible else None, feat, seq)
+
+    if shape.kind == "prefill":
+        def step(params, batch_d):
+            logits, _ = forward(params, cfg, batch_d, last_only=True)
+            return logits[:, -1, :]
+
+        ispec = {"tokens": P(dax if divisible else None, None)}
+        if cfg.is_enc_dec:
+            ispec["frames"] = P(dax if divisible else None, None, None)
+        return ServeBundle(step, pspec, None, None, ispec, False, shape.seq_len)
+
+    clen, ring = cache_len_for(cfg, shape)
+    cshape = jax.eval_shape(lambda: init_caches(cfg, batch, clen))
+    cspec = cache_specs(cshape, batch_divisible=divisible, data_axes=dax,
+                        model_size=model_size)
+
+    def step(params, caches, token, pos):
+        logits, new_caches = decode_step(params, cfg, token, caches, pos, ring=ring)
+        return logits, new_caches
+
+    ispec = {"token": P(dax if divisible else None, None)}
+    return ServeBundle(step, pspec, cshape, cspec, ispec, ring, clen)

@@ -1,0 +1,8 @@
+import os
+
+# Tests see the real single CPU device (the dry-run owns its own process).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax  # noqa: E402
+
+jax.config.update("jax_threefry_partitionable", True)

@@ -1,0 +1,153 @@
+"""Properties of the FediAC core (paper Sec. IV invariants)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.compaction import compact, consensus_indices, scatter_compact
+from repro.core.fediac import FediACConfig, aggregate_stack
+from repro.core.quantize import dequantize, quantize, scale_factor, stochastic_round
+from repro.core.voting import chunk_scores, expand_chunk_mask, gia_from_counts, vote_mask
+
+KEY = jax.random.PRNGKey(0)
+
+
+# ---------------------------------------------------------------------------
+# Eq. 1: unbiased stochastic quantization
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(st.floats(-50.0, 50.0), st.integers(0, 1000))
+def test_stochastic_round_unbiased(x, seed):
+    n = 4000
+    uni = jax.random.uniform(jax.random.PRNGKey(seed), (n,))
+    q = stochastic_round(jnp.full((n,), x, jnp.float32), uni)
+    assert abs(float(q.mean()) - x) < 0.05  # E[theta(x)] = x
+    # values only ever floor/ceil
+    assert set(np.unique(np.asarray(q))) <= {int(np.floor(x)), int(np.ceil(x))}
+
+
+def test_quantize_dequantize_error_bound():
+    u = jax.random.normal(KEY, (4096,))
+    m = float(jnp.abs(u).max())
+    f = scale_factor(12, 16, m)
+    q = quantize(u, f, jax.random.uniform(jax.random.PRNGKey(1), u.shape))
+    # |dequant - u| <= 1/f elementwise (one integer step)
+    assert float(jnp.abs(dequantize(q, f) - u).max()) <= 1.0 / f + 1e-6
+
+
+def test_scale_factor_formula():
+    # f = (2^{b-1} - N) / (N m)
+    assert scale_factor(12, 20, 2.0) == pytest.approx((2 ** 11 - 20) / 40.0)
+
+
+# ---------------------------------------------------------------------------
+# Phase 1: voting + GIA
+# ---------------------------------------------------------------------------
+
+def test_vote_mask_counts_and_bias():
+    d, k = 2048, 100
+    u = jnp.concatenate([100.0 * jnp.ones(64), 0.01 * jnp.ones(d - 64)])
+    mask = vote_mask(u, k, KEY)
+    assert int(mask.sum()) == k                # exactly k votes
+    assert int(mask[:64].sum()) >= 60          # magnitude-proportional odds
+
+
+def test_gia_threshold():
+    counts = jnp.array([0, 1, 2, 3, 4], jnp.int32)
+    assert gia_from_counts(counts, 3).tolist() == [0, 0, 0, 1, 1]
+
+
+def test_chunk_scores_roundtrip():
+    u = jax.random.normal(KEY, (64,))
+    s = chunk_scores(u, 8)
+    assert s.shape == (8,)
+    mask = (s > jnp.median(s)).astype(jnp.uint8)
+    full = expand_chunk_mask(mask, 8)
+    assert full.shape == (64,)
+    assert bool(jnp.all(full.reshape(8, 8).max(1) == mask))
+
+
+# ---------------------------------------------------------------------------
+# Consensus compaction
+# ---------------------------------------------------------------------------
+
+def test_consensus_indices_deterministic_and_thresholded():
+    counts = jnp.array([5, 1, 3, 3, 0, 2], jnp.int32)
+    idx, keep = consensus_indices(counts, a=3, capacity=4)
+    idx2, keep2 = consensus_indices(counts, a=3, capacity=4)
+    assert idx.tolist() == idx2.tolist()          # consensus: deterministic
+    kept = {int(i) for i, kp in zip(idx, keep) if kp > 0}
+    assert kept == {0, 2, 3}                      # exactly counts >= 3
+
+
+def test_compact_scatter_roundtrip():
+    d = 64
+    counts = jnp.zeros(d, jnp.int32).at[jnp.arange(0, d, 7)].set(5)
+    vals = jax.random.normal(KEY, (d,))
+    idx, keep = consensus_indices(counts, a=2, capacity=16)
+    buf = compact(vals, idx, keep)
+    back = scatter_compact(buf, idx, keep, d)
+    sel = np.asarray(counts) >= 2
+    np.testing.assert_allclose(np.asarray(back)[sel], np.asarray(vals)[sel], rtol=1e-6)
+    assert np.all(np.asarray(back)[~sel] == 0)
+
+
+# ---------------------------------------------------------------------------
+# Algo. 1 end-to-end invariants
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(2, 12), st.integers(1, 4), st.integers(0, 100))
+def test_residual_conservation(n, a, seed):
+    """e_i + uploaded_i == u_i exactly (error feedback conserves mass)."""
+    d = 512
+    u = jax.random.normal(jax.random.PRNGKey(seed), (n, d)) ** 3
+    cfg = FediACConfig(k_frac=0.1, a=min(a, n), bits=14, capacity_frac=0.1)
+    delta, res, counts, traffic = aggregate_stack(u, cfg, jax.random.PRNGKey(seed + 1))
+    recon = (u - res).mean(axis=0)
+    np.testing.assert_allclose(np.asarray(recon), np.asarray(delta), atol=2e-3)
+
+
+def test_consensus_across_clients():
+    """Every client's uploaded index set is identical (the GIA property)."""
+    n, d = 6, 1024
+    u = jax.random.normal(KEY, (n, d)) ** 3
+    cfg = FediACConfig(k_frac=0.1, a=2, bits=12, capacity_frac=0.05)
+    _, res, counts, _ = aggregate_stack(u, cfg, jax.random.PRNGKey(2))
+    uploaded = np.asarray(u - res)  # nonzero exactly at uploaded coordinates
+    pattern = np.abs(uploaded) > 1e-9
+    # quantization can stochastically send a 0 for a selected coord; compare
+    # against the GIA-selected set instead of client-to-client equality.
+    gia = np.asarray(counts) >= 2
+    for i in range(n):
+        assert not np.any(pattern[i] & ~gia), "client uploaded outside the GIA"
+
+
+def test_fedavg_limit():
+    """a=1, k=d, C=d, high bits: FediAC == FedAvg up to quantization eps."""
+    n, d = 4, 512
+    u = jax.random.normal(KEY, (n, d))
+    cfg = FediACConfig(k_frac=1.0, a=1, bits=24, capacity_frac=1.0)
+    delta, res, _, _ = aggregate_stack(u, cfg, jax.random.PRNGKey(3))
+    np.testing.assert_allclose(np.asarray(delta), np.asarray(u.mean(0)), atol=1e-3)
+
+
+def test_traffic_accounting():
+    n, d = 8, 4096
+    u = jax.random.normal(KEY, (n, d))
+    cfg = FediACConfig(k_frac=0.05, a=2, bits=12, capacity_frac=0.05)
+    *_, traffic = aggregate_stack(u, cfg, KEY)
+    assert traffic.phase1_bytes == d          # uint8 votes
+    assert traffic.phase2_bytes == cfg.capacity(d) * 2  # 12-bit -> 2 B
+    assert traffic.total_bytes < traffic.dense_bytes
+    assert 0.0 < traffic.reduction < 1.0
+
+
+def test_threshold_resolution():
+    cfg = FediACConfig()          # a=None -> ceil(0.15 N)
+    assert cfg.threshold(20) == 3
+    assert cfg.threshold(2) == 1
+    assert FediACConfig(a=4).threshold(2) == 2   # clamped to N

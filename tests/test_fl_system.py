@@ -1,0 +1,121 @@
+"""End-to-end behaviour of the FL system + switch simulator (paper Sec. V)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.fediac import FediACConfig
+from repro.data import classification, partition_dirichlet, partition_iid
+from repro.switch import ProgrammableSwitch, SwitchProfile, client_rates, round_wall_clock
+from repro.training import FLConfig, run_federated
+
+
+@pytest.fixture(scope="module")
+def fl_setup():
+    data = classification(n=3000, dim=32, n_classes=10, seed=0)
+    train, test = data.test_split(0.25)
+    clients = partition_dirichlet(train, 10, beta=0.5, seed=0)
+    return clients, test
+
+
+def _run(fl_setup, name, rounds=15, **kw):
+    clients, test = fl_setup
+    cfg = FLConfig(n_clients=10, rounds=rounds, local_steps=3, aggregator=name,
+                   agg_kwargs=kw, seed=0)
+    return run_federated(clients, test, cfg)
+
+
+def test_fediac_learns(fl_setup):
+    h = _run(fl_setup, "fediac", cfg=FediACConfig(a=2, bits=12))
+    assert h.acc[-1] > 0.55                     # learns
+    assert h.loss[-1] < h.loss[0]               # loss decreases
+    assert all(np.diff(h.wall_clock) > 0)       # clock advances
+
+
+def test_fediac_approaches_fedavg(fl_setup):
+    h_avg = _run(fl_setup, "fedavg")
+    h_fed = _run(fl_setup, "fediac", cfg=FediACConfig(a=2, bits=12, k_frac=0.1,
+                                                      capacity_frac=0.1))
+    assert h_fed.acc[-1] > h_avg.acc[-1] - 0.12  # compressed stays close
+
+
+def test_fediac_traffic_beats_baselines(fl_setup):
+    """The paper's headline: FediAC shrinks traffic vs SwitchML/Top-k."""
+    h_fed = _run(fl_setup, "fediac", cfg=FediACConfig(a=2, bits=12))
+    h_sml = _run(fl_setup, "switchml", bits=12)
+    h_avg = _run(fl_setup, "fedavg")
+    assert h_fed.traffic_mb[-1] < h_sml.traffic_mb[-1] < h_avg.traffic_mb[-1]
+
+
+def test_noniid_degree_ordering(fl_setup):
+    """Milder non-IID (larger beta) should not hurt accuracy (Fig. 3 trend)."""
+    data = classification(n=3000, dim=32, n_classes=10, seed=1)
+    train, test = data.test_split(0.25)
+    accs = {}
+    for beta in (0.3, 5.0):
+        clients = partition_dirichlet(train, 10, beta=beta, seed=0)
+        cfg = FLConfig(n_clients=10, rounds=15, local_steps=3, aggregator="fediac",
+                       agg_kwargs={"cfg": FediACConfig(a=2, bits=12)}, seed=0)
+        accs[beta] = run_federated(clients, test, cfg).acc[-1]
+    assert accs[5.0] >= accs[0.3] - 0.05
+
+
+# ---------------------------------------------------------------------------
+# switch simulator
+# ---------------------------------------------------------------------------
+
+def test_ps_integer_only():
+    ps = ProgrammableSwitch()
+    with pytest.raises(TypeError):
+        ps.aggregate_aligned(np.ones((2, 8), np.float32))
+
+
+def test_ps_motivation_example():
+    """Sec. III-B worked example: Top-2 costs 4 PS aggregations; FediAC costs
+    3 (1 vote-array aggregation + 2 aligned value additions)."""
+    ps = ProgrammableSwitch(memory_slots=2)
+    u1 = np.array([5, 4, 3, 2, 1]); u2 = np.array([1, 3, 4, 5, 2])
+    # Top-2 without consensus: clients upload disjoint indices
+    _, stats_sparse = ps.aggregate_sparse(
+        [np.array([0, 1]), np.array([3, 2])],
+        [u1[[0, 1]], u2[[3, 2]]], d=5)
+    topk_cost = stats_sparse.aggregation_ops + stats_sparse.server_redirects
+    assert topk_cost == 4                     # the paper's "4 aggregations"
+    assert stats_sparse.server_redirects > 0  # PS could not align all of it
+    # FediAC: 1-bit votes (1 aggregation: 5 bits fit one slot) -> GIA {1,2}
+    votes = np.stack([np.array([1, 1, 1, 0, 0]), np.array([0, 1, 1, 1, 0])])
+    _, stats_votes = ps.aggregate_aligned(votes.astype(np.int64))
+    gia = np.flatnonzero(votes.sum(0) >= 2)[:2]
+    out2, stats_aligned = ps.aggregate_aligned(np.stack([u1[gia], u2[gia]]))
+    fediac_cost = 1 + stats_aligned.aggregation_ops   # 1 vote op + 2 adds
+    assert fediac_cost == 3 < topk_cost
+    assert stats_aligned.server_redirects == 0
+    np.testing.assert_array_equal(out2, u1[gia] + u2[gia])
+
+
+def test_queuing_low_perf_slower():
+    rates = client_rates(20, 0)
+    kw = dict(packets_per_client=500, download_packets=500, rates=rates,
+              local_train_s=0.1)
+    t_hi = round_wall_clock(profile=SwitchProfile.high(), **kw)
+    t_lo = round_wall_clock(profile=SwitchProfile.low(), **kw)
+    assert t_lo >= t_hi > 0
+
+
+def test_queuing_unaligned_penalty():
+    rates = client_rates(20, 0)
+    kw = dict(packets_per_client=2000, download_packets=500, rates=rates,
+              local_train_s=0.0, profile=SwitchProfile.low())
+    assert round_wall_clock(aligned=False, **kw) > round_wall_clock(aligned=True, **kw)
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    from repro.checkpoint import load_checkpoint, save_checkpoint
+    tree = {"a": jnp.arange(6).reshape(2, 3), "b": [jnp.ones(4), {"c": jnp.zeros(2)}]}
+    p = str(tmp_path / "ck.npz")
+    save_checkpoint(p, tree, step=7)
+    back, step = load_checkpoint(p, like=tree)
+    assert step == 7
+    for x, y in zip(jax.tree_util.tree_leaves(tree), jax.tree_util.tree_leaves(back)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))

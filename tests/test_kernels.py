@@ -1,0 +1,75 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret mode) vs the jnp oracle."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import bitpack, ops, ref, stoch_quant, vote_popcount
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.mark.parametrize("rows", [256, 512, 1024])
+@pytest.mark.parametrize("density", [0.0, 0.05, 0.5, 1.0])
+def test_pack_matches_ref(rows, density):
+    mask = (jax.random.uniform(KEY, (rows, ref.LANES)) < density).astype(jnp.int32)
+    got = bitpack.pack(mask)
+    want = ref.pack_ref(mask)
+    assert got.dtype == jnp.uint32
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("groups", [8, 16, 32])
+def test_unpack_matches_ref_and_roundtrips(groups):
+    words = jax.random.bits(KEY, (groups, ref.LANES), jnp.uint32)
+    got = bitpack.unpack(words)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(ref.unpack_ref(words)))
+    # pack(unpack(w)) == w
+    back = bitpack.pack(got.astype(jnp.int32))
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(words))
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(1, 500_000), st.integers(0, 50))
+def test_flat_pack_roundtrip_any_d(d, seed):
+    mask = (jax.random.uniform(jax.random.PRNGKey(seed), (d,)) < 0.1).astype(jnp.uint8)
+    packed = ops.pack_votes(mask)
+    back = ops.unpack_votes(packed, d)
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(mask))
+
+
+@pytest.mark.parametrize("n", [1, 2, 7, 32])
+def test_popcount_accum(n):
+    d = 70_000
+    masks = (jax.random.uniform(KEY, (n, d)) < 0.07).astype(jnp.uint8)
+    packs = jnp.stack([ops.pack_votes(m) for m in masks])
+    counts = ops.count_votes(packs, d)
+    np.testing.assert_array_equal(np.asarray(counts),
+                                  np.asarray(masks.astype(jnp.int32).sum(0)))
+    w3 = packs.reshape(n, -1, ref.LANES)
+    np.testing.assert_array_equal(np.asarray(vote_popcount.popcount_accum(w3)),
+                                  np.asarray(ref.popcount_accum_ref(w3)))
+
+
+@pytest.mark.parametrize("f", [1.0, 17.5, 1000.0])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_stoch_quant_matches_ref(f, dtype):
+    rows = 16
+    u = (jax.random.normal(KEY, (rows, ref.LANES)) * 3).astype(dtype)
+    uni = jax.random.uniform(jax.random.PRNGKey(1), (rows, ref.LANES))
+    got = stoch_quant.stoch_quant(u, uni, jnp.float32(f))
+    want = ref.stoch_quant_ref(u, uni, jnp.float32(f))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@settings(max_examples=6, deadline=None)
+@given(st.integers(1, 100_000), st.floats(0.5, 500.0))
+def test_quantize_flat_unbiased_vs_ref(d, f):
+    u = jax.random.normal(jax.random.PRNGKey(d % 97), (d,))
+    uni = jax.random.uniform(jax.random.PRNGKey(d % 89), (d,))
+    got = ops.quantize_flat(u, uni, f)
+    want = ref.stoch_quant_ref(u, uni, jnp.float32(f))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    assert float(jnp.abs(got / f - u).max()) <= 1.0 / f + 1e-5

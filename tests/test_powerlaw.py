@@ -1,0 +1,74 @@
+"""Paper Sec. IV-B analysis machinery (Def. 1, Eqs. 2-6)."""
+
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.powerlaw import (client_vote_probability, expected_uploaded,
+                                 fit_power_law, gamma_compression_error,
+                                 gia_selection_probability, min_bits,
+                                 scale_factor, vote_probability)
+
+
+def test_fit_recovers_powerlaw():
+    d, alpha, phi = 5000, -0.8, 2.0
+    mags = phi * np.arange(1, d + 1) ** alpha
+    rng = np.random.default_rng(0)
+    signs = rng.choice([-1, 1], d)
+    fit = fit_power_law(rng.permutation(mags * signs))
+    assert fit.alpha == pytest.approx(alpha, abs=0.05)
+    assert fit.phi == pytest.approx(phi, rel=0.1)
+
+
+def test_vote_probability_normalized_and_decreasing():
+    p = vote_probability(1000, -1.2)
+    assert p.sum() == pytest.approx(1.0)
+    assert np.all(np.diff(p) <= 1e-15)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(2, 40), st.integers(1, 8), st.floats(-2.5, -0.3))
+def test_r_l_monotonic_in_threshold(n, k, alpha):
+    d = 256
+    k = k * 8
+    r_low = gia_selection_probability(d, alpha, k, n, a=1)
+    r_high = gia_selection_probability(d, alpha, k, n, a=min(n, 3))
+    assert np.all(r_high <= r_low + 1e-12)        # stricter a selects less
+    assert np.all((0 <= r_low) & (r_low <= 1))
+
+
+def test_expected_uploaded_bounds():
+    d = 1024
+    e = expected_uploaded(d, -1.0, k=int(0.05 * d), n_clients=20, a=3)
+    assert 0 < e < d
+
+
+def test_gamma_in_unit_interval_for_sane_settings():
+    d = 4096
+    g = gamma_compression_error(d, alpha=-1.1, phi=1.0, k=int(0.05 * d),
+                                n_clients=20, a=3, b=12)
+    assert 0.0 < g < 1.0, g
+
+
+def test_min_bits_guarantees_gamma_below_one():
+    """Cor. 1: using b >= b_min keeps gamma < 1 (convergence condition)."""
+    d, alpha, phi, k, n, a = 2048, -1.0, 1.0, int(0.05 * 2048), 20, 3
+    b = min_bits(d, alpha, phi, k, n, a)
+    g = gamma_compression_error(d, alpha, phi, k, n, a, b)
+    assert 0.0 < g < 1.0
+    # one bit fewer must be strictly worse
+    g_less = gamma_compression_error(d, alpha, phi, k, n, a, max(b - 2, 2))
+    assert g_less > g
+
+
+def test_min_bits_grows_with_clients():
+    d, alpha, phi, k, a = 2048, -1.0, 1.0, 100, 2
+    bs = [min_bits(d, alpha, phi, k, n, a) for n in (4, 16, 64)]
+    assert bs == sorted(bs)
+
+
+def test_scale_factor_positive_needs_enough_bits():
+    assert scale_factor(12, 20, 1.0) > 0
+    assert scale_factor(4, 20, 1.0) < 0   # 2^{b-1} < N: b too small for N

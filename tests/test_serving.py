@@ -1,0 +1,58 @@
+"""Continuous-batching engine: batched slot decoding with per-slot positions
+must reproduce each request's independent greedy decode exactly."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke
+from repro.models.model import decode_step, init_caches, init_params
+from repro.serving import Request, ServingEngine
+
+
+def _reference_greedy(cfg, params, prompt, max_new, cache_len=64):
+    caches = init_caches(cfg, 1, cache_len)
+    logits = None
+    for t, tok in enumerate(prompt):
+        logits, caches = decode_step(params, cfg,
+                                     jnp.asarray([[tok]], jnp.int32), caches,
+                                     jnp.int32(t))
+    out = []
+    pos = len(prompt)
+    for _ in range(max_new):
+        nxt = int(jnp.argmax(logits[0, -1]))
+        out.append(nxt)
+        logits, caches = decode_step(params, cfg,
+                                     jnp.asarray([[nxt]], jnp.int32), caches,
+                                     jnp.int32(pos))
+        pos += 1
+    return out
+
+
+@pytest.mark.parametrize("arch", ["qwen3_0p6b", "mamba2_130m"])
+def test_continuous_batching_matches_independent_decode(arch):
+    cfg = get_smoke(arch)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    # ragged prompts + ragged generation lengths -> slots desynchronize
+    reqs = [Request(uid=i, prompt=rng.integers(0, cfg.vocab, size=n).tolist(),
+                    max_new=m)
+            for i, (n, m) in enumerate([(5, 6), (9, 4), (3, 8)])]
+    engine = ServingEngine(cfg, params, max_batch=2, cache_len=64)
+    engine.run([r for r in reqs])
+
+    for r in reqs:
+        want = _reference_greedy(cfg, params, r.prompt, r.max_new)
+        assert r.out == want, (r.uid, r.out, want)
+
+
+def test_slot_recycling_and_queueing():
+    cfg = get_smoke("qwen3_0p6b")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(1)
+    reqs = [Request(uid=i, prompt=rng.integers(0, cfg.vocab, size=4).tolist(),
+                    max_new=3) for i in range(5)]
+    engine = ServingEngine(cfg, params, max_batch=2, cache_len=32)
+    engine.run(list(reqs))
+    assert all(len(r.out) == 3 for r in reqs)   # queue drained through 2 slots

@@ -1,0 +1,79 @@
+"""Sort-free FediAC modes for billion-parameter shards (DESIGN.md §2):
+threshold voting, cumsum block compaction, chunked voting with padding."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.compaction import block_compact, block_scatter, block_select
+from repro.core.fediac import FediACConfig, aggregate_stack
+from repro.core.voting import threshold_vote_mask
+
+KEY = jax.random.PRNGKey(0)
+
+
+def test_threshold_vote_matches_powerlaw_budget():
+    """On exactly power-law data, tau = m*k^alpha selects exactly k coords."""
+    d, alpha, k = 4096, -1.0, 200
+    mags = jnp.arange(1, d + 1, dtype=jnp.float32) ** alpha  # m = 1
+    perm = jax.random.permutation(KEY, d)
+    u = mags[perm]
+    mask = threshold_vote_mask(u, k, jnp.float32(1.0), alpha)
+    assert int(mask.sum()) == k
+    # and it selected exactly the k largest
+    top = set(np.argsort(-np.asarray(jnp.abs(u)))[:k].tolist())
+    assert set(np.flatnonzero(np.asarray(mask)).tolist()) == top
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(1, 2000), st.integers(1, 6), st.integers(32, 512))
+def test_block_compact_scatter_roundtrip(d, a, block):
+    counts = jax.random.randint(jax.random.PRNGKey(d), (d,), 0, 8)
+    vals = jax.random.normal(jax.random.PRNGKey(d + 1), (d,))
+    keep, pos = block_select(counts, a, block, capacity_frac=0.25)
+    buf = block_compact(vals, keep, pos, block, 0.25)
+    back = block_scatter(buf, keep, pos, d, block, 0.25)
+    kn = np.asarray(keep)
+    np.testing.assert_allclose(np.asarray(back)[kn], np.asarray(vals)[kn],
+                               rtol=1e-6)
+    assert np.all(np.asarray(back)[~kn] == 0)
+    # selection is a subset of the GIA and bounded per block
+    assert np.all(kn <= (np.asarray(counts) >= a))
+
+
+def test_block_mode_residual_conservation():
+    n, d = 6, 5000
+    u = jax.random.normal(KEY, (n, d)) ** 3
+    cfg = FediACConfig(k_frac=0.1, a=2, bits=14, capacity_frac=0.1,
+                       vote_mode="threshold", compact_mode="block",
+                       block_size=256)
+    delta, res, counts, traffic = aggregate_stack(u, cfg, jax.random.PRNGKey(1))
+    recon = (u - res).mean(axis=0)
+    np.testing.assert_allclose(np.asarray(recon), np.asarray(delta), atol=2e-3)
+    assert 0.0 < traffic.reduction < 1.0
+
+
+def test_block_compaction_fedavg_limit_with_topk_votes():
+    """topk voting + block compaction at full capacity and a=1 == FedAvg."""
+    n, d = 4, 512
+    u = jax.random.normal(KEY, (n, d))
+    cfg = FediACConfig(k_frac=1.0, a=1, bits=24, capacity_frac=1.0,
+                       compact_mode="block", block_size=128)
+    delta, *_ = aggregate_stack(u, cfg, jax.random.PRNGKey(3))
+    np.testing.assert_allclose(np.asarray(delta), np.asarray(u.mean(0)),
+                               atol=1e-3)
+
+
+def test_chunked_stack_aggregation():
+    """Chunked voting (the giant-arch mode) conserves mass in the reference
+    stacked aggregator too."""
+    n, d = 5, 4096
+    u = jax.random.normal(KEY, (n, d)) ** 3
+    cfg = FediACConfig(k_frac=0.1, a=2, bits=14, capacity_frac=0.1,
+                       vote_chunk=64)
+    delta, res, counts, traffic = aggregate_stack(u, cfg, jax.random.PRNGKey(2))
+    recon = (u - res).mean(axis=0)
+    np.testing.assert_allclose(np.asarray(recon), np.asarray(delta), atol=2e-3)
+    # phase-1 wire shrinks by the chunk factor
+    assert traffic.phase1_bytes == d // 64

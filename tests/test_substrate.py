@@ -1,0 +1,92 @@
+"""Optimizers, data pipeline, and config registry."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, INPUT_SHAPES, get, get_smoke
+from repro.data import classification, lm_batches, partition_dirichlet, partition_iid
+from repro.optim import adam, apply_updates, momentum, sgd
+
+
+def _quadratic(opt, steps=200):
+    target = jnp.array([3.0, -2.0, 0.5])
+    params = jnp.zeros(3)
+    state = opt.init(params)
+    for _ in range(steps):
+        g = 2 * (params - target)
+        upd, state = opt.update(g, state, params)
+        params = apply_updates(params, upd)
+    return float(jnp.abs(params - target).max())
+
+
+@pytest.mark.parametrize("opt", [sgd(0.1), momentum(0.05), adam(0.1)])
+def test_optimizers_converge(opt):
+    assert _quadratic(opt) < 1e-2
+
+
+def test_dirichlet_partition_skew():
+    data = classification(n=4000, dim=16, n_classes=10, seed=0)
+    iid = partition_iid(data, 10)
+    skew = partition_dirichlet(data, 10, beta=0.1, seed=0)
+    assert sum(len(c.y) for c in skew) >= len(data.y) * 0.98
+
+    def label_entropy(clients):
+        ents = []
+        for c in clients:
+            p = np.bincount(c.y, minlength=10) / len(c.y)
+            ents.append(-(p[p > 0] * np.log(p[p > 0])).sum())
+        return np.mean(ents)
+
+    assert label_entropy(skew) < label_entropy(iid) - 0.3  # beta=0.1 skews
+
+
+def test_lm_batches_shapes_and_structure():
+    rng = np.random.default_rng(0)
+    batches = list(lm_batches(rng, vocab=512, batch=4, seq=32, n_batches=3))
+    assert len(batches) == 3
+    for b in batches:
+        assert b["tokens"].shape == (4, 32)
+        # next-token alignment
+        np.testing.assert_array_equal(b["tokens"][:, 1:], b["targets"][:, :-1])
+
+
+def test_registry_covers_assignment():
+    assert len(ARCH_IDS) == 10
+    types = {get(a).arch_type for a in ARCH_IDS}
+    assert types == {"dense", "moe", "ssm", "hybrid", "audio", "vlm"}
+    assert len(INPUT_SHAPES) == 4
+    for a in ARCH_IDS:
+        smoke = get_smoke(a)
+        assert smoke.n_layers <= 2 and smoke.d_model <= 512
+        assert smoke.n_experts <= 4
+
+
+def test_exact_assigned_shapes():
+    """The configs carry the exact shapes from the assignment table."""
+    c = get("hymba-1.5b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff, c.vocab,
+            c.ssm_state) == (32, 1600, 25, 5, 5504, 32001, 16)
+    c = get("deepseek-v2-236b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.vocab, c.n_experts,
+            c.moe_top_k, c.kv_lora_rank) == (60, 5120, 128, 102400, 160, 6, 512)
+    c = get("command-r-plus-104b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff,
+            c.vocab) == (64, 12288, 96, 8, 33792, 256000)
+    c = get("granite-moe-1b-a400m")
+    assert (c.n_experts, c.moe_top_k, c.d_ff_expert) == (32, 8, 512)
+    c = get("mamba2-130m")
+    assert (c.n_layers, c.d_model, c.ssm_state) == (24, 768, 128)
+    c = get("whisper-tiny")
+    assert (c.n_layers, c.encoder_layers, c.d_model, c.vocab) == (4, 4, 384, 51865)
+    c = get("gemma-2b")
+    assert (c.n_kv_heads, c.head_dim, c.d_ff, c.vocab) == (1, 256, 16384, 256000)
+    c = get("qwen3-0.6b")
+    assert c.qk_norm and (c.n_heads, c.n_kv_heads, c.vocab) == (16, 8, 151936)
+    c = get("yi-6b")
+    assert (c.n_layers, c.d_model, c.n_kv_heads, c.d_ff, c.vocab) == \
+        (32, 4096, 4, 11008, 64000)
+    c = get("chameleon-34b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.d_ff, c.vocab) == \
+        (48, 8192, 64, 22016, 65536)
