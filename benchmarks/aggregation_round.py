@@ -1,0 +1,120 @@
+"""End-to-end ``aggregate_stack`` wall-clock: the round-plan engine vs the
+kept-alive seed path, measured in the same run.
+
+Grid: d in {1e5, 1e6} x N in {8, 32} x both selection-mode pairs
+(topk/topk — paper-faithful — and threshold/block — the sort-free
+billion-parameter mode).  Timings interleave engine and seed reps so
+machine drift cancels; the engine output is also checked **bit-identical**
+to the seed on every cell (the round-plan engine's core guarantee).
+
+Writes ``BENCH_aggregation.json`` at the repo root so the perf trajectory
+is tracked from this PR onward; emits the usual CSV rows for
+``benchmarks.run``.
+
+  PYTHONPATH=src python -m benchmarks.aggregation_round [--no-compare-seed]
+                                                        [--out PATH]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.fediac import FediACConfig, aggregate_stack
+from repro.core.seed_ref import aggregate_stack_seed
+
+from .common import emit
+
+OUT_PATH = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                        "BENCH_aggregation.json")
+
+GRID = [(100_000, 8), (100_000, 32), (1_000_000, 8), (1_000_000, 32)]
+MODES = [("topk", "topk"), ("threshold", "block")]
+REPS = 5
+
+
+def _time_once(fn, u, key) -> float:
+    t0 = time.perf_counter()
+    jax.block_until_ready(fn(u, key))
+    return time.perf_counter() - t0
+
+
+def bench_cell(d: int, n: int, vote_mode: str, compact_mode: str,
+               *, compare_seed: bool = True, reps: int = REPS) -> dict:
+    cfg = FediACConfig(vote_mode=vote_mode, compact_mode=compact_mode)
+    key = jax.random.PRNGKey(0)
+    u = jax.block_until_ready(
+        jax.random.normal(jax.random.PRNGKey(1), (n, d)) ** 3)
+    engine = jax.jit(lambda u, k: aggregate_stack(u, cfg, k)[:3])
+    seed = jax.jit(lambda u, k: aggregate_stack_seed(u, cfg, k))
+
+    # compile + warm both before any timing
+    out_e = jax.block_until_ready(engine(u, key))
+    t_engine = t_seed = 0.0
+    identical = True
+    if compare_seed:
+        out_s = jax.block_until_ready(seed(u, key))
+        identical = all(bool(jnp.all(a == b)) for a, b in zip(out_e, out_s))
+        for _ in range(reps):  # interleave: machine drift hits both equally
+            t_seed += _time_once(seed, u, key)
+            t_engine += _time_once(engine, u, key)
+    else:
+        for _ in range(reps):
+            t_engine += _time_once(engine, u, key)
+    cell = {
+        "d": d, "n_clients": n, "vote_mode": vote_mode,
+        "compact_mode": compact_mode, "reps": reps,
+        "engine_s": round(t_engine / reps, 4),
+    }
+    if compare_seed:
+        cell["seed_s"] = round(t_seed / reps, 4)
+        cell["speedup"] = round(t_seed / max(t_engine, 1e-9), 3)
+        cell["bit_identical"] = identical
+    return cell
+
+
+def run(*, compare_seed: bool = True):
+    cells = []
+    rows = []
+    for vote_mode, compact_mode in MODES:
+        for d, n in GRID:
+            cell = bench_cell(d, n, vote_mode, compact_mode,
+                              compare_seed=compare_seed)
+            cells.append(cell)
+            tag = f"agg/{vote_mode}-{compact_mode}/d{d}/n{n}"
+            if compare_seed:
+                rows.append((tag, cell["speedup"],
+                             f"engine={cell['engine_s']}s_seed={cell['seed_s']}s_"
+                             f"bitident={cell['bit_identical']}"))
+            else:
+                rows.append((tag, cell["engine_s"], "engine_only"))
+    payload = {
+        "benchmark": "aggregation_round",
+        "backend": jax.default_backend(),
+        "unit": "seconds_per_round",
+        "cells": cells,
+    }
+    with open(OUT_PATH, "w") as fh:
+        json.dump(payload, fh, indent=2)
+        fh.write("\n")
+    rows.append(("agg/json", OUT_PATH, "written"))
+    return rows
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--no-compare-seed", dest="compare_seed",
+                    action="store_false", default=True,
+                    help="time only the engine (skip the seed reference)")
+    args = ap.parse_args(argv)
+    emit(run(compare_seed=args.compare_seed))
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

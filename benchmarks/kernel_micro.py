@@ -29,6 +29,14 @@ def run():
     rows.append(("kernel/popcount8x1M", round(us, 1), f"in={d}B_out={4 * d}B"))
     _, us = timed(lambda: jax.block_until_ready(ops.quantize_flat(u, uni, 100.0)))
     rows.append(("kernel/stoch_quant_1M", round(us, 1), f"in={8 * d}B_out={4 * d}B"))
+    # fused kernels of the round-plan engine (DESIGN.md §3)
+    _, us = timed(lambda: jax.block_until_ready(
+        ops.pack_votes_threshold(jnp.abs(u), 1.5)))
+    rows.append(("kernel/vote_pack_1M", round(us, 1), f"in={4 * d}B_out={d // 8}B"))
+    sel = mask
+    _, us = timed(lambda: jax.block_until_ready(
+        ops.gather_quant_flat(u, uni, sel, 100.0)))
+    rows.append(("kernel/gather_quant_1M", round(us, 1), f"in={9 * d}B_out={8 * d}B"))
     # jnp oracles for reference
     _, us = timed(lambda: jax.block_until_ready(
         ref.stoch_quant_ref(u, uni, jnp.float32(100.0))))

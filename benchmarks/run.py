@@ -12,8 +12,9 @@ import argparse
 import sys
 import time
 
-from . import (accuracy_vs_time, aggregation_ops, compression_error,
-               kernel_micro, noniid, roofline, traffic, vote_threshold)
+from . import (accuracy_vs_time, aggregation_ops, aggregation_round,
+               compression_error, kernel_micro, noniid, roofline, traffic,
+               vote_threshold)
 from .common import emit
 
 SECTIONS = {
@@ -24,6 +25,7 @@ SECTIONS = {
     "prop1": compression_error.run,     # gamma bound + Cor.1
     "motivation": aggregation_ops.run,  # Sec III-B example
     "kernels": kernel_micro.run,        # Pallas kernel micro
+    "aggregation": aggregation_round.run,  # round-plan engine vs seed
     "roofline": roofline.run,           # dry-run roofline table
 }
 

@@ -1,16 +1,18 @@
 """FediAC core: voting-based consensus model compression (paper Sec. IV)."""
 
-from .fediac import (FediACConfig, TrafficStats, aggregate_stack,
-                     dense_allreduce, fediac_allreduce)
+from .fediac import (FediACConfig, RoundPlan, TrafficStats, aggregate_stack,
+                     build_round_plan, dense_allreduce, fediac_allreduce)
 from .powerlaw import (PowerLawFit, fit_power_law, gamma_compression_error,
                        expected_uploaded, min_bits, scale_factor)
 from .quantize import dequantize, quantize, stochastic_round
+from .seed_ref import aggregate_stack_seed
 from .voting import gia_from_counts, vote_mask
 from .baselines import make_aggregator
 
 __all__ = [
     "FediACConfig", "TrafficStats", "aggregate_stack", "fediac_allreduce",
-    "dense_allreduce", "PowerLawFit", "fit_power_law",
+    "dense_allreduce", "RoundPlan", "build_round_plan", "aggregate_stack_seed",
+    "PowerLawFit", "fit_power_law",
     "gamma_compression_error", "expected_uploaded", "min_bits", "scale_factor",
     "quantize", "dequantize", "stochastic_round", "vote_mask",
     "gia_from_counts", "make_aggregator",

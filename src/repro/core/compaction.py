@@ -21,22 +21,30 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from . import selection
+
 __all__ = ["consensus_indices", "compact", "scatter_compact"]
 
 
-def consensus_indices(counts: jax.Array, a: int, capacity: int):
+def consensus_indices(counts: jax.Array, a: int, capacity: int,
+                      n_max: int = 65535):
     """Deterministic consensus selection from vote counts.
 
     Returns ``(idx, keep)``: ``idx`` int32[capacity] coordinate indices
     (identical on every client given identical counts) and ``keep``
     float32[capacity] in {0,1} marking entries with count >= a.
+
+    The selection order is the stable top-k permutation (count descending,
+    ties keep the lower index first) — a deterministic consensus tiebreak
+    every client computes identically.  ``selection.consensus_topk``
+    replicates it bit-for-bit from ~log2(n_max) threshold-count passes and
+    one C-sized sort instead of a d-sized partial sort; ``n_max`` is the
+    largest possible count (the client-round size N).
     """
     d = counts.shape[-1]
     capacity = min(int(capacity), d)
-    # counts are small ints (<= N clients).  lax.top_k is stable (ties keep
-    # the lower index first), which is itself a deterministic consensus
-    # tiebreak — every client computes the identical permutation.
-    top, idx = jax.lax.top_k(counts.astype(jnp.int32), capacity)
+    top, idx = selection.consensus_topk(counts.astype(jnp.int32), capacity,
+                                        n_max=n_max)
     keep = (top >= a).astype(jnp.float32)
     return idx.astype(jnp.int32), keep
 

@@ -13,6 +13,15 @@ Two entry points:
   ``C << d`` entries.  Both psums are integer adds — the in-network
   aggregation semantics of the switch, executed hop-by-hop by the ICI ring.
 
+Both entry points run the **round-plan engine** (DESIGN.md §3): the
+consensus selection is computed exactly once per round from the shared
+vote counts (:func:`repro.core.round_plan.build_round_plan`) and the
+resulting plan is passed into every client's compress step — never
+recomputed inside the per-client vmap.  All d-sized selections go through
+:mod:`repro.core.selection` (single small sort instead of k-sized partial
+sorts) and remain bit-identical to the seed formulation, which is kept
+alive in :mod:`repro.core.seed_ref` as the regression oracle.
+
 Multi-pod: pass ``client_axes=("pod", "data")``; XLA lowers the psum
 hierarchically (intra-pod reduce, inter-pod exchange) which is exactly the
 paper's future-work "multiple collaborative PSes" topology — each pod's
@@ -22,18 +31,20 @@ reduction stage is one PS.
 from __future__ import annotations
 
 import math
-from dataclasses import dataclass, field, replace
-from functools import partial
+from dataclasses import dataclass
 from typing import Sequence
 
 import jax
 import jax.numpy as jnp
 
+from repro.compat import axis_size
+
 from . import compaction, voting
 from .quantize import dequantize, quantize, scale_factor
+from .round_plan import RoundPlan, build_round_plan
 
 __all__ = ["FediACConfig", "TrafficStats", "aggregate_stack", "fediac_allreduce",
-           "dense_allreduce", "client_compress"]
+           "dense_allreduce", "client_compress", "RoundPlan", "build_round_plan"]
 
 
 @dataclass(frozen=True)
@@ -51,7 +62,9 @@ class FediACConfig:
                                   # packed: bit-packed all-gather + popcount
                                   # (N*d/8 bytes — wins for few clients,
                                   # e.g. 4x at N=2 pods)
-    use_pallas: bool = False      # route quantize/pack through Pallas kernels
+    use_pallas: bool = False      # route the client round through the fused
+                                  # Pallas kernels (gather_quant/vote_pack,
+                                  # DESIGN.md §3)
     # sort-free mode for billion-parameter vectors (DESIGN.md §2): threshold
     # voting from the Def.1 power-law fit + cumsum block compaction.  The
     # exact top-k machinery needs O(d log d) sorts with ~20 GiB of workspace
@@ -76,7 +89,6 @@ class FediACConfig:
         """Resolved vote threshold a for an N-client round."""
         if self.a is not None:
             return max(1, min(int(self.a), n_clients))
-        import math
         return max(1, min(n_clients, math.ceil(self.a_frac * n_clients)))
 
     def capacity(self, d: int) -> int:
@@ -117,12 +129,16 @@ def _traffic(cfg: FediACConfig, d: int) -> TrafficStats:
 # Client-local compression pieces (shared by both entry points)
 # ---------------------------------------------------------------------------
 
+def _vote_scores(u: jax.Array, cfg: FediACConfig) -> jax.Array:
+    """What each client ranks in phase 1 (per chunk if vote_chunk > 1)."""
+    if cfg.vote_chunk > 1:
+        return voting.chunk_scores(u, cfg.vote_chunk)
+    return u
+
+
 def _client_votes(u: jax.Array, cfg: FediACConfig, key: jax.Array) -> jax.Array:
     """Phase-1 client side: 0/1 vote array (per chunk if vote_chunk > 1)."""
-    if cfg.vote_chunk > 1:
-        scores = voting.chunk_scores(u, cfg.vote_chunk)
-    else:
-        scores = u
+    scores = _vote_scores(u, cfg)
     k = cfg.k(scores.shape[-1])
     if cfg.vote_mode == "threshold":
         m = jnp.max(jnp.abs(scores))
@@ -130,35 +146,53 @@ def _client_votes(u: jax.Array, cfg: FediACConfig, key: jax.Array) -> jax.Array:
     return voting.vote_mask(scores, k, key)
 
 
-def _block_compress(u: jax.Array, counts: jax.Array, cfg: FediACConfig,
-                    f: jax.Array, key: jax.Array, a: int):
-    """Sort-free phase 2: cumsum block compaction (compact_mode='block')."""
-    d = u.shape[-1]
-    keep, pos = compaction.block_select(counts, a, cfg.block_size,
-                                        cfg.capacity_frac)
+def _vote_counts_stack(u_stack: jax.Array, cfg: FediACConfig,
+                       keys: jax.Array) -> jax.Array:
+    """Phase 1 over all clients at once: int32 vote counts, bit-identical
+    to summing per-client vote arrays.  In topk mode the counts accumulate
+    without materializing the [N, d] vote arrays and the selection
+    certificate stays at batch level; the threshold branch is a plain
+    vmapped indicator (already one cheap pass) summed as the seed did."""
+    scores = jax.vmap(lambda u: _vote_scores(u, cfg))(u_stack)
+    k = cfg.k(scores.shape[-1])
+    if cfg.vote_mode == "threshold":
+        votes = jax.vmap(
+            lambda s: voting.threshold_vote_mask(s, k, jnp.max(jnp.abs(s)),
+                                                 cfg.alpha))(scores)
+        return votes.astype(jnp.int32).sum(axis=0)
+    return voting.vote_counts_stack(scores, k, keys)
+
+
+def _block_compress(u: jax.Array, cfg: FediACConfig, f: jax.Array,
+                    key: jax.Array, plan: RoundPlan):
+    """Sort-free phase 2: cumsum block compaction (compact_mode='block').
+
+    The block selection lives in the shared round plan; per-client work is
+    one fused quantize/compact/residual pass.
+    """
+    keep, pos = plan.keep_dense, plan.pos
     uniforms = jax.random.uniform(key, u.shape, jnp.float32)
     q = quantize(jnp.where(keep, u, 0.0), f, uniforms)
     q_buf = compaction.block_compact(q, keep, pos, cfg.block_size,
                                      cfg.capacity_frac)
-    uploaded = jnp.where(keep, dequantize(q, f), 0.0)
-    residual = (u - uploaded).astype(u.dtype)
-    return q_buf, keep, pos, residual
+    residual = (u - jnp.where(keep, dequantize(q, f), 0.0)).astype(u.dtype)
+    return q_buf, residual
 
 
-def client_compress(u: jax.Array, counts: jax.Array, cfg: FediACConfig,
-                    f: jax.Array, key: jax.Array, a: int):
-    """Phase-2 client side given the consensus vote counts.
+def client_compress(u: jax.Array, cfg: FediACConfig, f: jax.Array,
+                    key: jax.Array, plan: RoundPlan):
+    """Phase-2 client side against the shared consensus round plan.
 
-    Returns (q_buf int32[Cg], idx, keep, residual) where q_buf is the
-    compacted quantized upload and residual is the new error-feedback state.
+    Returns ``(q_buf int32[Cg], residual)``: the compacted quantized upload
+    and the new error-feedback state.  The residual update is a fused
+    scatter-subtract at the C consensus coordinates — no d-sized zeros
+    buffer, bit-identical to ``u - scatter(dequantized)``.
     """
-    d = u.shape[-1]
-    n_chunks = d // cfg.vote_chunk
-    capacity = cfg.capacity(n_chunks)
-    idx_c, keep_c = compaction.consensus_indices(counts, a, capacity)
+    idx_c, keep_c = plan.idx, plan.keep
+    capacity = idx_c.shape[0]
     if cfg.vote_chunk > 1:
         # gather whole chunks: buffer is [C, g] flattened.
-        u2 = u.reshape(n_chunks, cfg.vote_chunk)
+        u2 = u.reshape(-1, cfg.vote_chunk)
         gathered = jnp.take(u2, idx_c, axis=0).astype(jnp.float32) * keep_c[:, None]
         gathered = gathered.reshape(-1)
     else:
@@ -169,18 +203,47 @@ def client_compress(u: jax.Array, counts: jax.Array, cfg: FediACConfig,
         q_buf = kops.quantize_flat(gathered, uniforms, f)
     else:
         q_buf = quantize(gathered, f, uniforms)
-    # own uploaded contribution, de-quantized and scattered back to d
-    # (in u's working dtype: these are d-sized tensors).
+    # own uploaded contribution, de-quantized and subtracted in place at the
+    # consensus coordinates (in u's working dtype).
     up = dequantize(q_buf, f).astype(u.dtype)
     if cfg.vote_chunk > 1:
-        up2 = jnp.zeros((n_chunks, cfg.vote_chunk), u.dtype)
-        up2 = up2.at[idx_c].set(up.reshape(capacity, cfg.vote_chunk)
-                                * keep_c[:, None].astype(u.dtype))
-        uploaded = up2.reshape(-1)
+        vals = up.reshape(capacity, cfg.vote_chunk) * keep_c[:, None].astype(u.dtype)
+        residual = u2.at[idx_c].add(-vals).reshape(u.shape).astype(u.dtype)
     else:
-        uploaded = compaction.scatter_compact(up, idx_c, keep_c, d)
-    residual = (u - uploaded).astype(u.dtype)
-    return q_buf, idx_c, keep_c, residual
+        vals = (up.astype(jnp.float32) * keep_c).astype(u.dtype)
+        residual = u.at[idx_c].add(-vals).astype(u.dtype)
+    return q_buf, residual
+
+
+def _client_compress_fused(u: jax.Array, cfg: FediACConfig, f: jax.Array,
+                           key: jax.Array, plan: RoundPlan):
+    """Pallas phase 2: one ``gather_quant`` pass over u computes the masked
+    stochastic quantization *and* the residual (DESIGN.md §3); the C-sized
+    consensus gather then reads the already-quantized dense buffer.
+
+    Draws d uniforms (one per coordinate) instead of the jnp path's C — the
+    kernel is bit-identical to ``ref.gather_quant_ref``, statistically
+    identical to (but a different random stream than) the jnp path.
+    """
+    from repro.kernels import ops as kops
+    uniforms = jax.random.uniform(key, u.shape, jnp.float32)
+    q_dense, residual = kops.gather_quant_flat(u, uniforms, plan.sel, f)
+    q_buf = jnp.take(q_dense, plan.idx)
+    return q_buf, residual.astype(u.dtype)
+
+
+def _phase2_compress(cfg: FediACConfig):
+    """Pick the per-client phase-2 implementation for this config."""
+    if cfg.compact_mode == "block":
+        return _block_compress
+    if cfg.use_pallas and cfg.vote_chunk == 1:
+        return _client_compress_fused
+    return client_compress
+
+
+def _plan_wants_dense_mask(cfg: FediACConfig) -> bool:
+    return (cfg.use_pallas and cfg.vote_chunk == 1
+            and cfg.compact_mode != "block")
 
 
 def _scatter_sum(summed_q: jax.Array, idx_c: jax.Array, keep_c: jax.Array,
@@ -210,26 +273,25 @@ def aggregate_stack(u_stack: jax.Array, cfg: FediACConfig, key: jax.Array):
     keys = jax.random.split(key, 2 * n)
     vote_keys, q_keys = keys[:n], keys[n:]
     # Phase 1: every client votes; the PS sums 0/1 arrays.
-    votes = jax.vmap(lambda u, k: _client_votes(u, cfg, k))(u_stack, vote_keys)
-    counts = votes.astype(jnp.int32).sum(axis=0)
+    counts = _vote_counts_stack(u_stack, cfg, vote_keys)
     # Scale factor from the global max magnitude (SwitchML-style).
     m = jnp.max(jnp.abs(u_stack))
     f = scale_factor(cfg.bits, n, 1.0) / jnp.clip(m, 1e-12, None)
-    # Phase 2: clients compress against the identical consensus GIA.
-    a = cfg.threshold(n)
+    # Phase 2: the consensus plan is built ONCE from the shared counts and
+    # passed into every client's compress (the round-plan engine) — never
+    # recomputed inside the vmap.
+    plan = build_round_plan(counts, cfg, n,
+                            with_dense_mask=_plan_wants_dense_mask(cfg))
+    compress = _phase2_compress(cfg)
+    q_bufs, residuals = jax.vmap(
+        lambda u, k: compress(u, cfg, f, k, plan))(u_stack, q_keys)
+    summed = q_bufs.sum(axis=0)        # the PS's pipelined integer addition
     if cfg.compact_mode == "block":
-        q_bufs, keeps, poss, residuals = jax.vmap(
-            lambda u, k: _block_compress(u, counts, cfg, f, k, a))(u_stack, q_keys)
-        summed = q_bufs.sum(axis=0)
-        delta = compaction.block_scatter(summed, keeps[0], poss[0], d,
+        delta = compaction.block_scatter(summed, plan.keep_dense, plan.pos, d,
                                          cfg.block_size, cfg.capacity_frac)
         delta = delta.astype(jnp.float32) / (n * f)
         return delta, residuals, counts, _traffic(cfg, d)
-    q_bufs, idxs, keeps, residuals = jax.vmap(
-        lambda u, k: client_compress(u, counts, cfg, f, k, a))(u_stack, q_keys)
-    idx_c, keep_c = idxs[0], keeps[0]  # identical across clients by consensus
-    summed = q_bufs.sum(axis=0)        # the PS's pipelined integer addition
-    delta = _scatter_sum(summed, idx_c, keep_c, cfg, d).astype(jnp.float32) / (n * f)
+    delta = _scatter_sum(summed, plan.idx, plan.keep, cfg, d).astype(jnp.float32) / (n * f)
     return delta, residuals, counts, _traffic(cfg, d)
 
 
@@ -261,27 +323,36 @@ def fediac_allreduce(u: jax.Array, residual: jax.Array, key: jax.Array,
     # per-client key: fold in the client's linear index along the client axes.
     lin = jnp.int32(0)
     for ax in axes:
-        lin = lin * jax.lax.axis_size(ax) + jax.lax.axis_index(ax)
+        lin = lin * axis_size(ax) + jax.lax.axis_index(ax)
     key = jax.random.fold_in(key, lin)
     kv, kq = jax.random.split(key)
     n = 1
     for ax in axes:
-        n *= jax.lax.axis_size(ax)
+        n *= axis_size(ax)
 
     # ---- Phase 1: vote, then the "switch" sums 0/1 arrays.
-    votes = _client_votes(u, cfg, kv)
     if cfg.vote_wire == "packed":
         # bit-packed wire: all-gather N x d/8 bytes of packed words, then a
         # local popcount-accumulate (the Pallas vote_popcount kernel's job
         # on real TPU).  Wins when the client count is small (pods).
         from repro.kernels import ops as kops
-        packed = kops.pack_votes(votes, interpret=True)
+        n_chunks = d // cfg.vote_chunk
+        if cfg.use_pallas and cfg.vote_mode == "threshold":
+            # fully fused wire build: |score| >= tau -> packed words in one
+            # pass, no intermediate uint8 vote array (kernels/vote_pack).
+            scores = jnp.abs(_vote_scores(u, cfg))
+            k = max(1, min(cfg.k(n_chunks), n_chunks))
+            tau = voting.vote_tau(jnp.max(scores), k, cfg.alpha)
+            packed = kops.pack_votes_threshold(scores, tau)
+        else:
+            packed = kops.pack_votes(_client_votes(u, cfg, kv))
         gathered = packed
         for ax in axes:
             gathered = jax.lax.all_gather(gathered, ax)
         gathered = gathered.reshape(-1, packed.shape[-1])
-        counts = kops.count_votes(gathered, votes.shape[-1], interpret=True)
+        counts = kops.count_votes(gathered, n_chunks)
     else:
+        votes = _client_votes(u, cfg, kv)
         counts = jax.lax.psum(votes.astype(jnp.dtype(cfg.vote_dtype)),
                               axes).astype(jnp.int32)
 
@@ -289,22 +360,23 @@ def fediac_allreduce(u: jax.Array, residual: jax.Array, key: jax.Array,
     m = jax.lax.pmax(jnp.max(jnp.abs(u)), axes)
     f = scale_factor(cfg.bits, n, 1.0) / jnp.clip(m, 1e-12, None)
 
-    # ---- Phase 2: consensus compaction + integer psum of C entries.
-    a = cfg.threshold(n)
+    # ---- Phase 2: the consensus plan is a deterministic function of the
+    # psum'd counts, so every client builds the identical plan (this IS the
+    # paper's GIA broadcast); compress + integer psum of C entries.
+    plan = build_round_plan(counts, cfg, n,
+                            with_dense_mask=_plan_wants_dense_mask(cfg))
+    compress = _phase2_compress(cfg)
+    q_buf, new_residual = compress(u, cfg, f, kq, plan)
+    summed = jax.lax.psum(q_buf, axes)
     if cfg.compact_mode == "block":
-        q_buf, keep, pos, new_residual = _block_compress(u, counts, cfg, f, kq, a)
-        summed = jax.lax.psum(q_buf, axes)
-        mean = compaction.block_scatter(summed, keep, pos, d, cfg.block_size,
-                                        cfg.capacity_frac)
+        mean = compaction.block_scatter(summed, plan.keep_dense, plan.pos, d,
+                                        cfg.block_size, cfg.capacity_frac)
         mean = mean.astype(jnp.float32) / (n * f)
     else:
-        q_buf, idx_c, keep_c, new_residual = client_compress(u, counts, cfg, f,
-                                                             kq, a)
-        summed = jax.lax.psum(q_buf, axes)
         # de-quantize the compact buffer first: the d-sized scatter result
         # then lives in the working dtype, not int32.
         mean_buf = (summed.astype(jnp.float32) / (n * f)).astype(wdt)
-        mean = _scatter_sum(mean_buf, idx_c, keep_c, cfg, d)
+        mean = _scatter_sum(mean_buf, plan.idx, plan.keep, cfg, d)
     if pad:
         mean = mean[:d0]
         new_residual = new_residual[:d0]

@@ -1,0 +1,77 @@
+"""The per-round consensus plan: FediAC's GIA as a first-class object.
+
+FediAC's central invariant (paper Sec. III-B) is that phase-2 selection is
+a *deterministic function of the psum'd vote counts* — identical on every
+client.  The seed implementation recomputed that selection inside each
+client's compress call and leaned on XLA CSE to dedupe it; the round-plan
+engine makes the invariant structural: :func:`build_round_plan` runs the
+selection **exactly once per round**, and every client-side compress/
+de-compact step takes the resulting :class:`RoundPlan`.  This guarantees
+the single-sort property (no N-1 redundant d-sized selections can creep
+back in under a refactor), shares one plan object between the ``topk`` and
+``block`` compact modes, and gives the fused Pallas path (DESIGN.md §3)
+the dense selection mask it needs without per-client rebuilds.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import compaction
+
+__all__ = ["RoundPlan", "build_round_plan"]
+
+
+class RoundPlan(NamedTuple):
+    """Consensus selection for one round, shared by all N clients.
+
+    topk mode:  ``idx`` int32[C] consensus coordinate order (count-desc,
+    index-asc — the stable top_k permutation), ``keep`` float32[C] in
+    {0,1} flagging entries whose count reached the vote threshold.
+
+    block mode: ``keep_dense`` bool[d] selected coordinates, ``pos``
+    int32[d] slot-in-block for the cumsum compaction.
+
+    ``sel`` uint8[d] is the dense 0/1 selection mask; always present in
+    block mode (it *is* ``keep_dense``), built on demand in topk mode for
+    the fused gather-quant kernel.
+    """
+
+    idx: Optional[jax.Array]
+    keep: Optional[jax.Array]
+    keep_dense: Optional[jax.Array]
+    pos: Optional[jax.Array]
+    sel: Optional[jax.Array]
+
+    @property
+    def capacity(self) -> int:
+        return self.idx.shape[-1] if self.idx is not None else 0
+
+
+def build_round_plan(counts: jax.Array, cfg, n_clients: int,
+                     *, with_dense_mask: bool = False) -> RoundPlan:
+    """Run the once-per-round consensus selection from the vote counts.
+
+    ``counts`` int32[d//g] psum'd votes; ``cfg`` a FediACConfig; the result
+    is identical on every client because its inputs are (paper Sec. IV
+    step 2 — the switch broadcasting the GIA).
+    """
+    a = cfg.threshold(n_clients)
+    n_chunks = counts.shape[-1]
+    if cfg.compact_mode == "block":
+        keep_dense, pos = compaction.block_select(counts, a, cfg.block_size,
+                                                  cfg.capacity_frac)
+        sel = keep_dense.astype(jnp.uint8) if with_dense_mask else None
+        return RoundPlan(idx=None, keep=None, keep_dense=keep_dense, pos=pos,
+                         sel=sel)
+    capacity = cfg.capacity(n_chunks)
+    idx, keep = compaction.consensus_indices(counts, a, capacity,
+                                             n_max=n_clients)
+    sel = None
+    if with_dense_mask:
+        sel = jnp.zeros((n_chunks,), jnp.uint8).at[idx].set(
+            keep.astype(jnp.uint8))
+    return RoundPlan(idx=idx, keep=keep, keep_dense=None, pos=None, sel=sel)

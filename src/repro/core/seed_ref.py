@@ -1,0 +1,141 @@
+"""Frozen seed-revision FediAC aggregation — the regression/benchmark oracle.
+
+This is the pre-round-plan ``aggregate_stack`` hot path, kept alive
+verbatim so that (a) the regression suite can assert the engine is
+**bit-identical** to it, and (b) ``benchmarks/aggregation_round.py`` can
+measure the engine against the true seed wall-clock in the same run (the
+``--compare-seed`` path behind ``BENCH_aggregation.json``).
+
+Every d-sized selection here is the original ``lax.top_k`` formulation —
+including the per-client consensus recomputation inside the vmap — so do
+NOT "optimize" this module; its slowness is the point.  The engine lives
+in :mod:`repro.core.fediac` / :mod:`repro.core.selection`.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import compaction
+from .quantize import dequantize, quantize, scale_factor
+
+__all__ = ["aggregate_stack_seed"]
+
+
+def _vote_mask_seed(u: jax.Array, k: int, key: jax.Array) -> jax.Array:
+    d = u.shape[-1]
+    k = min(int(k), d)
+    logw = jnp.log(jnp.clip(jnp.abs(u).astype(jnp.float32), 1e-30, None))
+    gumbel = jax.random.gumbel(key, (d,), dtype=jnp.float32)
+    _, idx = jax.lax.top_k(logw + gumbel, k)
+    return jnp.zeros((d,), jnp.uint8).at[idx].set(jnp.uint8(1))
+
+
+def _threshold_vote_mask_seed(u, k, m, alpha):
+    d = u.shape[-1]
+    k = max(1, min(int(k), d))
+    tau = m * jnp.float32(k) ** jnp.float32(alpha)
+    return (jnp.abs(u) >= tau).astype(jnp.uint8)
+
+
+def _chunk_scores_seed(u, chunk):
+    d = u.shape[-1]
+    return jnp.max(jnp.abs(u).reshape(d // chunk, chunk), axis=-1)
+
+
+def _consensus_indices_seed(counts: jax.Array, a: int, capacity: int):
+    d = counts.shape[-1]
+    capacity = min(int(capacity), d)
+    top, idx = jax.lax.top_k(counts.astype(jnp.int32), capacity)
+    keep = (top >= a).astype(jnp.float32)
+    return idx.astype(jnp.int32), keep
+
+
+def _client_votes_seed(u, cfg, key):
+    if cfg.vote_chunk > 1:
+        scores = _chunk_scores_seed(u, cfg.vote_chunk)
+    else:
+        scores = u
+    k = cfg.k(scores.shape[-1])
+    if cfg.vote_mode == "threshold":
+        m = jnp.max(jnp.abs(scores))
+        return _threshold_vote_mask_seed(scores, k, m, cfg.alpha)
+    return _vote_mask_seed(scores, k, key)
+
+
+def _block_compress_seed(u, counts, cfg, f, key, a):
+    keep, pos = compaction.block_select(counts, a, cfg.block_size,
+                                        cfg.capacity_frac)
+    uniforms = jax.random.uniform(key, u.shape, jnp.float32)
+    q = quantize(jnp.where(keep, u, 0.0), f, uniforms)
+    q_buf = compaction.block_compact(q, keep, pos, cfg.block_size,
+                                     cfg.capacity_frac)
+    uploaded = jnp.where(keep, dequantize(q, f), 0.0)
+    residual = (u - uploaded).astype(u.dtype)
+    return q_buf, keep, pos, residual
+
+
+def _client_compress_seed(u, counts, cfg, f, key, a):
+    d = u.shape[-1]
+    n_chunks = d // cfg.vote_chunk
+    capacity = cfg.capacity(n_chunks)
+    idx_c, keep_c = _consensus_indices_seed(counts, a, capacity)
+    if cfg.vote_chunk > 1:
+        u2 = u.reshape(n_chunks, cfg.vote_chunk)
+        gathered = jnp.take(u2, idx_c, axis=0).astype(jnp.float32) * keep_c[:, None]
+        gathered = gathered.reshape(-1)
+    else:
+        gathered = compaction.compact(u, idx_c, keep_c).astype(jnp.float32)
+    uniforms = jax.random.uniform(key, gathered.shape, jnp.float32)
+    q_buf = quantize(gathered, f, uniforms)
+    up = dequantize(q_buf, f).astype(u.dtype)
+    if cfg.vote_chunk > 1:
+        up2 = jnp.zeros((n_chunks, cfg.vote_chunk), u.dtype)
+        up2 = up2.at[idx_c].set(up.reshape(capacity, cfg.vote_chunk)
+                                * keep_c[:, None].astype(u.dtype))
+        uploaded = up2.reshape(-1)
+    else:
+        uploaded = compaction.scatter_compact(up, idx_c, keep_c, d)
+    residual = (u - uploaded).astype(u.dtype)
+    return q_buf, idx_c, keep_c, residual
+
+
+def _scatter_sum_seed(summed_q, idx_c, keep_c, cfg, d):
+    n_chunks = d // cfg.vote_chunk
+    capacity = idx_c.shape[0]
+    if cfg.vote_chunk > 1:
+        out = jnp.zeros((n_chunks, cfg.vote_chunk), summed_q.dtype)
+        vals = summed_q.reshape(capacity, cfg.vote_chunk) * keep_c[:, None].astype(summed_q.dtype)
+        return out.at[idx_c].set(vals).reshape(-1)
+    return compaction.scatter_compact(summed_q, idx_c, keep_c.astype(jnp.float32), d)
+
+
+def aggregate_stack_seed(u_stack: jax.Array, cfg, key: jax.Array):
+    """Seed-revision Algo. 1 over stacked [N, d] updates.
+
+    Returns (delta, residuals, counts) — the TrafficStats accounting is
+    static and identical to the engine's, so it is omitted here.
+    """
+    n, d = u_stack.shape
+    keys = jax.random.split(key, 2 * n)
+    vote_keys, q_keys = keys[:n], keys[n:]
+    votes = jax.vmap(lambda u, k: _client_votes_seed(u, cfg, k))(u_stack, vote_keys)
+    counts = votes.astype(jnp.int32).sum(axis=0)
+    m = jnp.max(jnp.abs(u_stack))
+    f = scale_factor(cfg.bits, n, 1.0) / jnp.clip(m, 1e-12, None)
+    a = cfg.threshold(n)
+    if cfg.compact_mode == "block":
+        q_bufs, keeps, poss, residuals = jax.vmap(
+            lambda u, k: _block_compress_seed(u, counts, cfg, f, k, a))(u_stack, q_keys)
+        summed = q_bufs.sum(axis=0)
+        delta = compaction.block_scatter(summed, keeps[0], poss[0], d,
+                                         cfg.block_size, cfg.capacity_frac)
+        delta = delta.astype(jnp.float32) / (n * f)
+        return delta, residuals, counts
+    q_bufs, idxs, keeps, residuals = jax.vmap(
+        lambda u, k: _client_compress_seed(u, counts, cfg, f, k, a))(u_stack, q_keys)
+    idx_c, keep_c = idxs[0], keeps[0]
+    summed = q_bufs.sum(axis=0)
+    delta = _scatter_sum_seed(summed, idx_c, keep_c, cfg, d).astype(jnp.float32) / (n * f)
+    return delta, residuals, counts

@@ -20,7 +20,11 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-__all__ = ["vote_mask", "chunk_scores", "expand_chunk_mask", "gia_from_counts"]
+from . import selection
+
+__all__ = ["vote_mask", "vote_scores", "vote_mask_stack", "vote_counts_stack",
+           "vote_tau", "threshold_vote_mask", "chunk_scores",
+           "expand_chunk_mask", "gia_from_counts"]
 
 
 def chunk_scores(u: jax.Array, chunk: int) -> jax.Array:
@@ -35,34 +39,63 @@ def expand_chunk_mask(mask: jax.Array, chunk: int) -> jax.Array:
     return jnp.repeat(mask, chunk, axis=-1, total_repeat_length=mask.shape[-1] * chunk)
 
 
+def vote_tau(m: jax.Array, k: int, alpha: float) -> jax.Array:
+    """Def. 1 power-law estimate of the k-th largest magnitude:
+    |U{l}| ~= m * l^alpha  =>  tau = m * k^alpha.  The single source of the
+    threshold formula — the fused vote_pack wire path must use the same
+    tau as :func:`threshold_vote_mask` or clients diverge."""
+    return m * jnp.float32(k) ** jnp.float32(alpha)
+
+
 def threshold_vote_mask(u: jax.Array, k: int, m: jax.Array,
                         alpha: float) -> jax.Array:
     """Sort-free voting for billion-parameter update vectors.
 
     Exact Gumbel-top-k needs an O(d log d) sort with ~20 GiB of workspace at
     d ~ 1e9; instead we derive the magnitude threshold from the paper's own
-    power-law model (Def. 1 / Sec. IV-D): |U{l}| ~= m * l^alpha, so the k-th
-    largest magnitude is tau = m * k^alpha and "vote the top-k" becomes the
+    power-law model (Def. 1 / Sec. IV-D), so "vote the top-k" becomes the
     O(d) indicator |u| >= tau.  alpha comes from the server-assisted
     first-iteration fit, exactly as the paper tunes a and b.
     """
     d = u.shape[-1]
     k = max(1, min(int(k), d))
-    tau = m * jnp.float32(k) ** jnp.float32(alpha)
-    return (jnp.abs(u) >= tau).astype(jnp.uint8)
+    return (jnp.abs(u) >= vote_tau(m, k, alpha)).astype(jnp.uint8)
+
+
+def vote_scores(u: jax.Array, key: jax.Array) -> jax.Array:
+    """Gumbel-perturbed log-magnitude scores whose top-k is the vote."""
+    d = u.shape[-1]
+    logw = jnp.log(jnp.clip(jnp.abs(u).astype(jnp.float32), 1e-30, None))
+    gumbel = jax.random.gumbel(key, (d,), dtype=jnp.float32)
+    return logw + gumbel
 
 
 def vote_mask(u: jax.Array, k: int, key: jax.Array) -> jax.Array:
     """One client's 0/1 vote array: k coordinates sampled w/o replacement,
     probability proportional to |u| (Gumbel-top-k).  Returns uint8 of u.shape.
+
+    The top-k runs through ``selection.topk_mask`` — bit-identical to
+    ``argtop_k(log w + Gumbel)`` but without the k-sized partial sort on
+    large vectors (DESIGN.md §3).
     """
-    d = u.shape[-1]
-    k = min(int(k), d)
-    logw = jnp.log(jnp.clip(jnp.abs(u).astype(jnp.float32), 1e-30, None))
-    gumbel = jax.random.gumbel(key, (d,), dtype=jnp.float32)
-    _, idx = jax.lax.top_k(logw + gumbel, k)
-    mask = jnp.zeros((d,), jnp.uint8).at[idx].set(jnp.uint8(1))
-    return mask
+    k = min(int(k), u.shape[-1])
+    return selection.topk_mask(vote_scores(u, key), k)
+
+
+def vote_mask_stack(u_stack: jax.Array, k: int, keys: jax.Array) -> jax.Array:
+    """All N clients' vote masks at once (the engine path): the selection
+    certificate cond stays at batch level instead of degrading under vmap."""
+    k = min(int(k), u_stack.shape[-1])
+    scores = jax.vmap(vote_scores)(u_stack, keys)
+    return selection.topk_mask_stack(scores, k)
+
+
+def vote_counts_stack(u_stack: jax.Array, k: int, keys: jax.Array) -> jax.Array:
+    """Phase-1 PS reduction without materializing the [N, d] vote arrays:
+    int32[d] counts, bit-identical to ``vote_mask_stack(...).sum(0)``."""
+    k = min(int(k), u_stack.shape[-1])
+    scores = jax.vmap(vote_scores)(u_stack, keys)
+    return selection.topk_counts_stack(scores, k)
 
 
 def gia_from_counts(counts: jax.Array, a: int) -> jax.Array:

@@ -11,7 +11,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from . import bitpack, ref, stoch_quant, vote_popcount
+from . import bitpack, gather_quant, ref, stoch_quant, vote_pack, vote_popcount
 from .ref import GROUP, LANES
 
 _TILE = GROUP * bitpack.ROWS_PER_BLOCK * LANES  # flat elements per pack grid step
@@ -21,13 +21,14 @@ def _interpret_default() -> bool:
     return jax.default_backend() != "tpu"
 
 
-def _to_rows(flat: jax.Array, multiple: int):
+def _to_rows(flat: jax.Array, multiple: int, pad_value=0):
     """Pad a flat vector to a (rows, LANES) matrix with rows % multiple == 0."""
     d = flat.shape[-1]
     rows = -(-d // LANES)
     rows += (-rows) % multiple
     pad = rows * LANES - d
-    return jnp.pad(flat, (0, pad)).reshape(rows, LANES), d
+    return (jnp.pad(flat, (0, pad), constant_values=pad_value)
+            .reshape(rows, LANES), d)
 
 
 def pack_votes(mask_flat: jax.Array, *, interpret: bool | None = None) -> jax.Array:
@@ -62,6 +63,31 @@ def quantize_flat(u_flat: jax.Array, uniforms_flat: jax.Array, f,
     uni2, _ = _to_rows(uniforms_flat, stoch_quant.BLOCK_ROWS)
     out = stoch_quant.stoch_quant(u2, uni2, f, interpret=interpret)
     return out.reshape(-1)[:d]
+
+
+def pack_votes_threshold(scores_flat: jax.Array, tau,
+                         *, interpret: bool | None = None) -> jax.Array:
+    """Fused phase-1 wire build: flat scores (d,) -> packed uint32 words of
+    the mask ``scores >= tau``, with no intermediate d-sized vote array.
+    Padding lanes get -inf so they can never vote."""
+    interpret = _interpret_default() if interpret is None else interpret
+    s2, _ = _to_rows(scores_flat, GROUP * vote_pack.ROWS_PER_BLOCK,
+                     pad_value=-jnp.inf)
+    return vote_pack.vote_pack(s2, tau, interpret=interpret).reshape(-1)
+
+
+def gather_quant_flat(u_flat: jax.Array, uniforms_flat: jax.Array,
+                      sel_flat: jax.Array, f,
+                      *, interpret: bool | None = None):
+    """Fused phase-2 client round: flat (u, uniforms, sel mask, f) ->
+    (q_dense int32 (d,), residual fp32 (d,)) in one pass over u."""
+    interpret = _interpret_default() if interpret is None else interpret
+    u2, d = _to_rows(u_flat, gather_quant.BLOCK_ROWS)
+    uni2, _ = _to_rows(uniforms_flat, gather_quant.BLOCK_ROWS)
+    sel2, _ = _to_rows(sel_flat, gather_quant.BLOCK_ROWS)
+    q2, res2 = gather_quant.gather_quant(u2, uni2, sel2, f,
+                                         interpret=interpret)
+    return q2.reshape(-1)[:d], res2.reshape(-1)[:d]
 
 
 # jnp fallbacks with identical signatures (used in shape-polymorphic paths

@@ -47,3 +47,22 @@ def stoch_quant_ref(u: jax.Array, uniforms: jax.Array, f: jax.Array) -> jax.Arra
     x = u.astype(jnp.float32) * f
     lo = jnp.floor(x)
     return (lo + (uniforms < (x - lo)).astype(jnp.float32)).astype(jnp.int32)
+
+
+def vote_pack_ref(scores: jax.Array, tau: jax.Array) -> jax.Array:
+    """Fused threshold-vote + pack: pack_ref(scores >= tau)."""
+    return pack_ref((scores >= tau).astype(jnp.uint32))
+
+
+def gather_quant_ref(u: jax.Array, uniforms: jax.Array, sel: jax.Array,
+                     f: jax.Array):
+    """Fused masked quantize + residual (FediAC phase-2 client round).
+
+    Returns (q int32, residual fp32): q = sel ? theta(f*u) : 0 and
+    residual = u - (sel ? q/f : 0).
+    """
+    uf = u.astype(jnp.float32)
+    q = stoch_quant_ref(uf, uniforms, f)
+    q = jnp.where(sel != 0, q, 0)
+    res = uf - jnp.where(sel != 0, q.astype(jnp.float32) / f, 0.0)
+    return q, res

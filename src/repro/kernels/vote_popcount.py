@@ -9,6 +9,13 @@ d uint8 counts — 8x fewer collective bytes when N is small).
 Block geometry: (N, ROWS_PER_BLOCK, LANES) uint32 in -> counts
 (ROWS_PER_BLOCK*32, LANES) int32 out.  N is the client-axis size (<= 64),
 so a block is N*8*1024*4 B = 32 KiB * N — fits VMEM for any realistic N.
+
+The kernel accumulates **bit planes**: for each of the 32 bit positions it
+shifts/masks the (N, R, LANES) word block and reduces over clients, so the
+largest live tensor is one (R, GROUP, LANES) int32 plane stack — the same
+size as the output block.  (The seed version ``jnp.repeat``-ed the words to
+(N, R*32, LANES) first: a 32x VMEM blow-up that overflowed the ~16 MiB
+budget beyond N ~ 16.)
 """
 
 from __future__ import annotations
@@ -26,10 +33,13 @@ ROWS_PER_BLOCK = 8
 
 def _popcount_kernel(words_ref, out_ref):
     w = words_ref[...]                         # (N, ROWS_PER_BLOCK, LANES)
-    wr = jnp.repeat(w, GROUP, axis=1)          # (N, ROWS*32, LANES)
-    r = jax.lax.broadcasted_iota(jnp.uint32, wr.shape, 1) % jnp.uint32(GROUP)
-    bits = (wr >> r) & jnp.uint32(1)
-    out_ref[...] = bits.sum(axis=0).astype(jnp.int32)
+    # bit-plane accumulation: per bit position r, the client-reduced plane
+    # is (ROWS_PER_BLOCK, LANES) — VPU shift/and/add only, no repeat.
+    planes = [((w >> jnp.uint32(r)) & jnp.uint32(1)).sum(axis=0)
+              .astype(jnp.int32)
+              for r in range(GROUP)]           # static unroll
+    acc = jnp.stack(planes, axis=1)            # (ROWS, GROUP, LANES)
+    out_ref[...] = acc.reshape(-1, acc.shape[-1])
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))

@@ -9,14 +9,14 @@ device state (the dry-run must set XLA_FLAGS before the first jax init).
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
+
+from repro.compat import make_mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def make_test_mesh(*, multi_pod: bool = False, devices=None):
@@ -31,7 +31,7 @@ def make_test_mesh(*, multi_pod: bool = False, devices=None):
         assert n % 2 == 0, n
         shape = (2, n // 2)
         axes = ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 # v5e hardware constants for the roofline (per chip / per link)

@@ -33,6 +33,7 @@ import jax.numpy as jnp
 from jax.flatten_util import ravel_pytree
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.compat import shard_map
 from repro.core.fediac import dense_allreduce, fediac_allreduce
 from repro.models import loss_fn, param_specs
 from repro.models.model import init_params
@@ -148,7 +149,11 @@ class TrainStepBundle:
     mode: str             # replica | pod | plain
 
 
-def make_train_step(cfg, mesh, *, lr: float = 1e-2) -> TrainStepBundle:
+def make_train_step(cfg, mesh, *, lr: float = 1e-2,
+                    use_pallas: bool | None = None) -> TrainStepBundle:
+    if use_pallas is not None:
+        from dataclasses import replace as _replace
+        cfg = cfg.with_(fediac=_replace(cfg.fediac, use_pallas=use_pallas))
     model_size = mesh.shape["model"]
     data_size = mesh.shape["data"]
     axes = client_axes_for(cfg, mesh)
@@ -263,10 +268,10 @@ def _make_fl_step(cfg, mesh, pspec, res_spec, axes, n_clients, lr):
                                         unravel(new_res))
             return unravel(mean), nr
 
-        return jax.shard_map(local, mesh=mesh,
-                             in_specs=(ustack_spec, res_spec, P()),
-                             out_specs=(pspec, res_spec),
-                             check_vma=False)(u_stack, res_stack, key)
+        return shard_map(local, mesh=mesh,
+                         in_specs=(ustack_spec, res_spec, P()),
+                         out_specs=(pspec, res_spec),
+                         check_vma=False)(u_stack, res_stack, key)
 
     def step(params, residual, batch, key):
         gb = batch["tokens"].shape[0]

@@ -10,13 +10,14 @@ model are the paper's.
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass, field, replace
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.baselines import make_aggregator
+from repro.core.fediac import FediACConfig
 from repro.switch import SwitchProfile, client_rates, n_packets, round_wall_clock
 
 
@@ -65,6 +66,9 @@ class FLConfig:
     lr_tau: float = 20.0           # lr_t = lr0 / (1 + sqrt(t)/tau)   (paper V-A1)
     aggregator: str = "fediac"
     agg_kwargs: dict = field(default_factory=dict)
+    use_pallas: bool | None = None  # override FediACConfig.use_pallas: route
+                                    # the aggregation round through the fused
+                                    # Pallas kernels (None = leave cfg as-is)
     switch: SwitchProfile = field(default_factory=SwitchProfile.high)
     local_train_s: float = 0.1     # paper: 0.1 (FEMNIST) .. 3 (CIFAR-100)
     seed: int = 0
@@ -119,7 +123,11 @@ def run_federated(clients, test, flcfg: FLConfig, *, hidden=(128, 64)) -> FLHist
     n, size = cy.shape
     assert n == flcfg.n_clients, (n, flcfg.n_clients)
 
-    agg = make_aggregator(flcfg.aggregator, **flcfg.agg_kwargs)
+    agg_kwargs = dict(flcfg.agg_kwargs)
+    if flcfg.use_pallas is not None and flcfg.aggregator == "fediac":
+        base_cfg = agg_kwargs.get("cfg", FediACConfig())
+        agg_kwargs["cfg"] = replace(base_cfg, use_pallas=flcfg.use_pallas)
+    agg = make_aggregator(flcfg.aggregator, **agg_kwargs)
     rates = client_rates(n, flcfg.seed)
 
     grad_fn = jax.grad(_ce_loss)

@@ -1,0 +1,70 @@
+"""Parity sweeps for the fused round-plan kernels (interpret mode vs the
+jnp oracles in kernels/ref.py) — bit-identical by contract."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import gather_quant, ops, ref, vote_pack, vote_popcount
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.mark.parametrize("tau", [-1.0, 0.0, 0.9])
+@pytest.mark.parametrize("blocks", [1, 3])
+def test_vote_pack_matches_ref(tau, blocks):
+    rows = ref.GROUP * vote_pack.ROWS_PER_BLOCK * blocks
+    scores = jax.random.normal(KEY, (rows, ref.LANES))
+    got = vote_pack.vote_pack(scores, tau)
+    want = ref.vote_pack_ref(scores, jnp.float32(tau))
+    assert got.dtype == jnp.uint32
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_vote_pack_flat_padding_never_votes():
+    d = 70_001  # ragged: padding lanes must not contribute votes
+    scores = jnp.abs(jax.random.normal(KEY, (d,)))
+    packed = ops.pack_votes_threshold(scores, 0.0)  # tau 0: every real lane votes
+    back = ops.unpack_votes(packed, d)
+    np.testing.assert_array_equal(np.asarray(back), np.ones(d, np.uint8))
+    total_bits = sum(bin(int(w)).count("1") for w in np.asarray(packed))
+    assert total_bits == d  # nothing beyond d voted
+
+
+@pytest.mark.parametrize("f", [1.0, 117.5, 4000.0])
+@pytest.mark.parametrize("density", [0.0, 0.1, 1.0])
+def test_gather_quant_matches_ref(f, density):
+    rows = gather_quant.BLOCK_ROWS * 2
+    u = jax.random.normal(KEY, (rows, ref.LANES)) * 3
+    uni = jax.random.uniform(jax.random.PRNGKey(1), (rows, ref.LANES))
+    sel = (jax.random.uniform(jax.random.PRNGKey(2), (rows, ref.LANES))
+           < density).astype(jnp.int32)
+    qg, rg = gather_quant.gather_quant(u, uni, sel, jnp.float32(f))
+    qw, rw = ref.gather_quant_ref(u, uni, sel, jnp.float32(f))
+    np.testing.assert_array_equal(np.asarray(qg), np.asarray(qw))
+    np.testing.assert_array_equal(np.asarray(rg), np.asarray(rw))
+    # unselected coordinates upload nothing and keep their full residual
+    off = np.asarray(sel) == 0
+    assert np.all(np.asarray(qg)[off] == 0)
+    np.testing.assert_array_equal(np.asarray(rg)[off], np.asarray(u)[off])
+
+
+@pytest.mark.parametrize("n", [1, 8, 64])
+def test_popcount_bitplane_matches_ref(n):
+    w3 = jax.random.bits(KEY, (n, vote_popcount.ROWS_PER_BLOCK * 2, ref.LANES),
+                         jnp.uint32)
+    got = vote_popcount.popcount_accum(w3)
+    want = ref.popcount_accum_ref(w3)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_gather_quant_flat_ragged_roundtrip():
+    d = 123_457
+    u = jax.random.normal(KEY, (d,))
+    uni = jax.random.uniform(jax.random.PRNGKey(3), (d,))
+    sel = (jax.random.uniform(jax.random.PRNGKey(4), (d,)) < 0.05).astype(jnp.uint8)
+    q, res = ops.gather_quant_flat(u, uni, sel, 55.0)
+    qw, rw = ref.gather_quant_ref(u, uni, sel, jnp.float32(55.0))
+    np.testing.assert_array_equal(np.asarray(q), np.asarray(qw))
+    np.testing.assert_array_equal(np.asarray(res), np.asarray(rw))

@@ -1,0 +1,122 @@
+"""The round-plan engine's two contracts (DESIGN.md §3):
+
+1. **Regression**: the hoisted-plan ``aggregate_stack`` is bit-identical to
+   the seed per-client path (kept alive in ``core.seed_ref``) for every
+   mode combination — delta, residuals, and counts.
+2. **Consensus invariance**: the plan built once per round equals the plan
+   every client would have built for itself from the shared counts (the
+   paper's GIA property, now structural).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.fediac import FediACConfig, aggregate_stack
+from repro.core.round_plan import build_round_plan
+from repro.core.seed_ref import aggregate_stack_seed
+
+KEY = jax.random.PRNGKey(7)
+
+CFGS = {
+    "default": FediACConfig(),
+    "tight": FediACConfig(a=2, bits=14, k_frac=0.1, capacity_frac=0.1),
+    "chunked": FediACConfig(vote_chunk=4),
+    "threshold-topk": FediACConfig(vote_mode="threshold"),
+    "threshold-block": FediACConfig(vote_mode="threshold",
+                                    compact_mode="block", block_size=512),
+    "topk-block": FediACConfig(compact_mode="block", block_size=256),
+}
+
+
+def _u(n, d, seed=1, ties=False):
+    u = jax.random.normal(jax.random.PRNGKey(seed), (n, d)) ** 3
+    if ties:
+        u = jnp.round(u * 4) / 4
+    return u
+
+
+@pytest.mark.parametrize("name", list(CFGS))
+def test_engine_bit_identical_to_seed(name):
+    cfg = CFGS[name]
+    u = _u(6, 8192)
+    de, re_, ce, _ = aggregate_stack(u, cfg, KEY)
+    ds, rs, cs = aggregate_stack_seed(u, cfg, KEY)
+    np.testing.assert_array_equal(np.asarray(ce), np.asarray(cs))
+    np.testing.assert_array_equal(np.asarray(de), np.asarray(ds))
+    np.testing.assert_array_equal(np.asarray(re_), np.asarray(rs))
+
+
+def test_engine_bit_identical_on_fast_path():
+    """d above the selection fast-path gate, with forced boundary ties."""
+    cfg = FediACConfig()
+    u = _u(4, 300_000, ties=True)
+    de, re_, ce = jax.jit(lambda u, k: aggregate_stack(u, cfg, k)[:3])(u, KEY)
+    ds, rs, cs = jax.jit(lambda u, k: aggregate_stack_seed(u, cfg, k))(u, KEY)
+    np.testing.assert_array_equal(np.asarray(ce), np.asarray(cs))
+    np.testing.assert_array_equal(np.asarray(de), np.asarray(ds))
+    np.testing.assert_array_equal(np.asarray(re_), np.asarray(rs))
+
+
+@pytest.mark.parametrize("compact_mode", ["topk", "block"])
+def test_plan_invariant_across_clients(compact_mode):
+    """vmapping build_round_plan over per-client copies of the counts gives
+    every client the identical plan — the consensus property the engine
+    hoists (selection depends ONLY on the shared counts)."""
+    n, d = 8, 4096
+    cfg = FediACConfig(compact_mode=compact_mode, block_size=256)
+    counts = jax.random.randint(KEY, (d,), 0, n + 1).astype(jnp.int32)
+    plan_once = build_round_plan(counts, cfg, n)
+    per_client = jax.vmap(lambda c: build_round_plan(c, cfg, n))(
+        jnp.broadcast_to(counts, (n, d)))
+    for field_once, field_stack in zip(plan_once, per_client):
+        if field_once is None:
+            assert field_stack is None
+            continue
+        for i in range(n):
+            np.testing.assert_array_equal(np.asarray(field_once),
+                                          np.asarray(field_stack[i]))
+
+
+def test_plan_shared_between_modes():
+    """One plan object serves both compact modes' de-compaction fields."""
+    n, d = 6, 2048
+    counts = jax.random.randint(KEY, (d,), 0, n + 1).astype(jnp.int32)
+    topk_plan = build_round_plan(counts, FediACConfig(), n,
+                                 with_dense_mask=True)
+    block_plan = build_round_plan(counts, FediACConfig(compact_mode="block"), n)
+    assert topk_plan.idx is not None and topk_plan.sel is not None
+    assert block_plan.keep_dense is not None and block_plan.pos is not None
+    # the dense mask marks exactly the kept consensus coordinates
+    kept = {int(i) for i, kp in zip(topk_plan.idx, topk_plan.keep) if kp > 0}
+    assert {int(i) for i in jnp.nonzero(topk_plan.sel)[0]} == kept
+
+
+def test_use_pallas_path_residual_conservation():
+    """The fused gather_quant path keeps the error-feedback identity
+    e_i + uploaded_i == u_i (it is a different — but unbiased — random
+    stream than the jnp path, so bitwise equality is not expected)."""
+    cfg = FediACConfig(use_pallas=True, a=2, k_frac=0.1, capacity_frac=0.1,
+                       bits=14)
+    u = _u(6, 8192, seed=5)
+    delta, res, counts, _ = aggregate_stack(u, cfg, KEY)
+    recon = (u - res).mean(axis=0)
+    np.testing.assert_allclose(np.asarray(recon), np.asarray(delta), atol=2e-3)
+    # uploads stay inside the consensus set
+    gia = np.asarray(counts) >= 2
+    outside = np.abs(np.asarray(u - res)) > 1e-9
+    assert not np.any(outside & ~gia)
+
+
+def test_use_pallas_matches_kernel_ref():
+    """Fused-kernel client round == jnp oracle (bit-identical), via ops."""
+    from repro.kernels import ops, ref
+    d = 8192
+    u = jax.random.normal(KEY, (d,)) * 2
+    uni = jax.random.uniform(jax.random.PRNGKey(3), (d,))
+    sel = (jax.random.uniform(jax.random.PRNGKey(4), (d,)) < 0.1).astype(jnp.uint8)
+    q, res = ops.gather_quant_flat(u, uni, sel, 63.0)
+    qw, rw = ref.gather_quant_ref(u, uni, sel, jnp.float32(63.0))
+    np.testing.assert_array_equal(np.asarray(q), np.asarray(qw))
+    np.testing.assert_array_equal(np.asarray(res), np.asarray(rw))

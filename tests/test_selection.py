@@ -1,0 +1,127 @@
+"""Exactness of the single-sort selection engine (DESIGN.md §3).
+
+Every function here must be **bit-identical** to its ``lax.top_k``
+formulation — including ties, ±0.0, -inf, constant vectors, and clustered
+magnitudes — because the round-plan engine's regression guarantee
+(aggregate_stack == seed path) rests on it.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import selection
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _ref_mask(s, k):
+    _, idx = jax.lax.top_k(s, k)
+    return jnp.zeros(s.shape, jnp.uint8).at[idx].set(jnp.uint8(1))
+
+
+def _score_cases():
+    big = 1 << 18  # above the fast-path gate
+    normal = jax.random.normal(KEY, (4, big))
+    return {
+        "normal": normal,
+        "heavy-ties": jnp.round(normal * 3) / 3,
+        "constant": jnp.zeros((2, big)),
+        "minus-inf": jnp.where(jax.random.uniform(KEY, (2, big)) < 0.5,
+                               -jnp.inf, 1.0),
+        "signed-zeros": jnp.where(jax.random.uniform(KEY, (2, big)) < 0.5,
+                                  -0.0, 0.0),
+        "clustered": jnp.concatenate(
+            [jnp.full((2, big // 8), 5.0),
+             jax.random.normal(KEY, (2, big - big // 8))], axis=1),
+    }
+
+
+@pytest.mark.parametrize("name", list(_score_cases()))
+def test_topk_mask_stack_bit_identical(name):
+    scores = _score_cases()[name]
+    k = scores.shape[-1] // 20
+    got = jax.jit(lambda s: selection.topk_mask_stack(s, k))(scores)
+    want = jax.vmap(lambda s: _ref_mask(s, k))(scores)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    assert np.asarray(got.astype(jnp.int32).sum(axis=1)).tolist() == \
+        [k] * scores.shape[0]
+
+
+@pytest.mark.parametrize("k", [1, 100, 999, 1000])
+def test_topk_mask_small_d_path(k):
+    scores = jax.random.normal(KEY, (3, 1000))
+    got = selection.topk_mask_stack(scores, k)
+    want = jax.vmap(lambda s: _ref_mask(s, k))(scores)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_topk_mask_single_vector_matches_stack():
+    s = jax.random.normal(KEY, (1 << 18,))
+    k = 5000
+    got = selection.topk_mask(s, k)
+    want = selection.topk_mask_stack(s[None], k)[0]
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_topk_counts_stack_matches_mask_sum():
+    scores = jax.random.normal(KEY, (6, 1 << 18))
+    scores = jnp.round(scores * 5) / 5  # force boundary ties
+    k = scores.shape[-1] // 20
+    counts = jax.jit(lambda s: selection.topk_counts_stack(s, k))(scores)
+    masks = jax.vmap(lambda s: _ref_mask(s, k))(scores)
+    np.testing.assert_array_equal(np.asarray(counts),
+                                  np.asarray(masks.astype(jnp.int32).sum(0)))
+
+
+@pytest.mark.parametrize("n_max,cap_frac", [(3, 0.05), (32, 0.05), (200, 0.02)])
+def test_consensus_topk_bit_identical(n_max, cap_frac):
+    d = 1 << 16
+    counts = jax.random.randint(KEY, (d,), 0, n_max + 1).astype(jnp.int32)
+    cap = int(cap_frac * d)
+    gv, gi = jax.jit(lambda c: selection.consensus_topk(c, cap, n_max))(counts)
+    wv, wi = jax.lax.top_k(counts, cap)
+    np.testing.assert_array_equal(np.asarray(gv), np.asarray(wv))
+    np.testing.assert_array_equal(np.asarray(gi), np.asarray(wi))
+
+
+def test_consensus_topk_small_and_degenerate():
+    for d, cap, n_max in [(100, 10, 8), (1 << 15, (1 << 15) // 2, 16),
+                          (1 << 16, 64, 1)]:
+        counts = jax.random.randint(jax.random.PRNGKey(d), (d,), 0,
+                                    n_max + 1).astype(jnp.int32)
+        gv, gi = selection.consensus_topk(counts, cap, n_max)
+        wv, wi = jax.lax.top_k(counts, cap)
+        np.testing.assert_array_equal(np.asarray(gv), np.asarray(wv))
+        np.testing.assert_array_equal(np.asarray(gi), np.asarray(wi))
+
+
+def test_certificate_fallback_is_exact():
+    # all-equal scores defeat the sample certificate entirely -> the cond
+    # must route to the exact sort path, not return garbage.
+    d = 1 << 18
+    scores = jnp.zeros((2, d))
+    k = d // 20
+    got = selection.topk_mask_stack(scores, k)
+    want = jax.vmap(lambda s: _ref_mask(s, k))(scores)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_neg_inf_winners_route_to_fallback():
+    # fewer finite scores than k: some -inf entries must themselves be
+    # winners.  The window encoding reserves -inf for certified entries, so
+    # the certificate must reject this case (n_finite < k) and fall back —
+    # previously it silently returned a corrupted mask.
+    d = 1 << 18
+    k = d // 20
+    n_finite = k // 2
+    base = jnp.full((2, d), -jnp.inf)
+    scores = base.at[:, 5:5 + n_finite].set(
+        jax.random.normal(KEY, (2, n_finite)))
+    got = jax.jit(lambda s: selection.topk_mask_stack(s, k))(scores)
+    want = jax.vmap(lambda s: _ref_mask(s, k))(scores)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    counts = jax.jit(lambda s: selection.topk_counts_stack(s, k))(scores)
+    np.testing.assert_array_equal(np.asarray(counts),
+                                  np.asarray(want.astype(jnp.int32).sum(0)))

@@ -4,6 +4,9 @@ threshold voting, cumsum block compaction, chunked voting with padding."""
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.compaction import block_compact, block_scatter, block_select
