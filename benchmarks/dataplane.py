@@ -1,0 +1,136 @@
+"""Packet-dataplane benchmark: simulator throughput + accuracy-vs-wallclock
+under loss and partial participation (DESIGN.md §9).
+
+Two parts, both written to the tracked ``BENCH_dataplane.json``:
+
+* **throughput** — packets/second the vectorized timeline engine pushes
+  through the M/G/1 register-window drain (the simulator's own hot path).
+* **grid** — a small FediAC FL task run through ``PacketTransport`` for
+  every (loss, participation) cell: loss ∈ {0, 1%, 5%} ×
+  participation ∈ {1.0, 0.5, 0.25}; final accuracy, simulated wall-clock
+  and traffic per cell.  The lossless full-participation cell doubles as
+  a standing regression check: its accuracy must be *identical* to the
+  in-memory transport (bit-equal rounds).
+
+  PYTHONPATH=src python -m benchmarks.dataplane [--smoke] [--out PATH]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import numpy as np
+
+from repro.core.fediac import FediACConfig
+from repro.data import classification, partition_dirichlet
+from repro.netsim import NetConfig
+from repro.netsim.timeline import poisson_arrivals, windowed_drain
+from repro.switch import SwitchProfile, client_rates
+from repro.training import FLConfig, run_federated
+
+from .common import emit
+
+OUT_PATH = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                        "BENCH_dataplane.json")
+
+LOSS_GRID = [0.0, 0.01, 0.05]
+PART_GRID = [1.0, 0.5, 0.25]
+N_CLIENTS = 10
+ROUNDS = 12
+
+
+def packet_throughput(n_packets: int = 500_000, reps: int = 3) -> dict:
+    """Wall-clock packets/s of the vectorized drain (windows included)."""
+    rng = np.random.default_rng(0)
+    rates = client_rates(32, 0)
+    arr = poisson_arrivals(rng, rates, n_packets // 32, 0.0)
+    pkt_window = (np.arange(arr.shape[1]) // max(1, arr.shape[1] // 4)).clip(max=3)
+    windowed_drain(arr, pkt_window, 4, 3.03e-7)          # warm caches
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        _, st = windowed_drain(arr, pkt_window, 4, 3.03e-7)
+    dt = (time.perf_counter() - t0) / reps
+    return {"n_packets": int(st.n_packets), "seconds": round(dt, 4),
+            "packets_per_s": round(st.n_packets / dt)}
+
+
+def _task(n_clients: int, seed: int = 0):
+    data = classification(n=3000, dim=32, n_classes=10, seed=seed)
+    train, test = data.test_split(0.25)
+    return partition_dirichlet(train, n_clients, beta=0.5, seed=seed), test
+
+
+def accuracy_cell(clients, test, *, loss: float, participation: float,
+                  rounds: int, transport: str = "packet") -> dict:
+    cfg = FLConfig(n_clients=len(clients), rounds=rounds, local_steps=3,
+                   aggregator="fediac",
+                   agg_kwargs={"cfg": FediACConfig(a=2, bits=12)},
+                   switch=SwitchProfile.high(), transport=transport,
+                   net=NetConfig(loss=loss, participation=participation,
+                                 seed=0),
+                   seed=0)
+    h = run_federated(clients, test, cfg)
+    return {"loss": loss, "participation": participation,
+            "final_acc": round(h.acc[-1], 4),
+            "wall_clock_s": round(h.wall_clock[-1], 3),
+            "traffic_mb": round(h.traffic_mb[-1], 3)}
+
+
+def run(*, smoke: bool = False, out_path: str = OUT_PATH):
+    rounds = 2 if smoke else ROUNDS
+    losses = LOSS_GRID[:1] + LOSS_GRID[-1:] if smoke else LOSS_GRID
+    parts = PART_GRID[:1] + PART_GRID[-1:] if smoke else PART_GRID
+    thr = packet_throughput(n_packets=50_000 if smoke else 500_000)
+    rows = [("dataplane/throughput_pkts_per_s", thr["packets_per_s"],
+             f"n={thr['n_packets']}")]
+
+    clients, test = _task(N_CLIENTS)
+    mem = accuracy_cell(clients, test, loss=0.0, participation=1.0,
+                        rounds=rounds, transport="memory")
+    cells = []
+    for loss in losses:
+        for part in parts:
+            if smoke and not (loss == losses[0] or part == parts[0]):
+                continue
+            cell = accuracy_cell(clients, test, loss=loss,
+                                 participation=part, rounds=rounds)
+            cells.append(cell)
+            rows.append((f"dataplane/acc/loss{loss}/part{part}",
+                         cell["final_acc"],
+                         f"wall={cell['wall_clock_s']}s_mb={cell['traffic_mb']}"))
+    lossless = next(c for c in cells
+                    if c["loss"] == 0.0 and c["participation"] == 1.0)
+    rows.append(("dataplane/lossless_equals_memory",
+                 int(lossless["final_acc"] == mem["final_acc"]),
+                 f"packet={lossless['final_acc']}_memory={mem['final_acc']}"))
+    payload = {
+        "benchmark": "dataplane",
+        "smoke": smoke,
+        "rounds": rounds,
+        "n_clients": N_CLIENTS,
+        "throughput": thr,
+        "memory_transport_acc": mem["final_acc"],
+        "cells": cells,
+    }
+    with open(out_path, "w") as fh:
+        json.dump(payload, fh, indent=2)
+        fh.write("\n")
+    rows.append(("dataplane/json", out_path, "written"))
+    return rows
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny grid + few rounds (CI)")
+    ap.add_argument("--out", default=OUT_PATH)
+    args = ap.parse_args(argv)
+    emit(run(smoke=args.smoke, out_path=args.out))
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

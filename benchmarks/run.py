@@ -13,8 +13,8 @@ import sys
 import time
 
 from . import (accuracy_vs_time, aggregation_ops, aggregation_round,
-               compression_error, kernel_micro, noniid, roofline, traffic,
-               vote_threshold)
+               compression_error, dataplane, kernel_micro, noniid, roofline,
+               traffic, vote_threshold)
 from .common import emit
 
 SECTIONS = {
@@ -26,6 +26,7 @@ SECTIONS = {
     "motivation": aggregation_ops.run,  # Sec III-B example
     "kernels": kernel_micro.run,        # Pallas kernel micro
     "aggregation": aggregation_round.run,  # round-plan engine vs seed
+    "dataplane": dataplane.run,         # packet dataplane: loss x participation
     "roofline": roofline.run,           # dry-run roofline table
 }
 

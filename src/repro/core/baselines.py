@@ -32,7 +32,7 @@ from .fediac import FediACConfig, TrafficStats, aggregate_stack
 from .quantize import quantize, dequantize, scale_factor
 
 __all__ = ["SwitchLoad", "fedavg", "switchml", "topk_server", "omnireduce",
-           "libra", "fediac_round", "make_aggregator"]
+           "libra", "fediac_round", "make_aggregator", "make_transport"]
 
 
 @dataclass(frozen=True)
@@ -176,3 +176,27 @@ def make_aggregator(name: str, **kwargs):
 
     agg.__name__ = name
     return agg
+
+
+def make_transport(name: str, *, transport: str = "memory", net=None,
+                   profile=None, rates=None, local_train_s: float = 0.1,
+                   **kwargs):
+    """Bind an aggregator into a round transport (DESIGN.md §9).
+
+    ``transport="memory"`` wraps the plain aggregator call (today's
+    behavior, analytic wall-clock); ``transport="packet"`` runs the round
+    through the executable packet dataplane (``repro.netsim``) with the
+    loss/straggler/participation/hierarchy policies of ``net`` (a
+    ``netsim.NetConfig``).  ``kwargs`` are the aggregator kwargs, exactly
+    as for :func:`make_aggregator`.  The imports are lazy so merely
+    importing ``repro.core`` never pulls the simulator package in.
+    """
+    if transport == "memory":
+        from repro.netsim.transport import InMemoryTransport
+        return InMemoryTransport(make_aggregator(name, **kwargs))
+    if transport == "packet":
+        from repro.netsim.transport import PacketTransport
+        return PacketTransport(name, kwargs, net=net, profile=profile,
+                               rates=rates, local_train_s=local_train_s)
+    raise ValueError(f"unknown transport {transport!r} "
+                     "(expected 'memory' or 'packet')")

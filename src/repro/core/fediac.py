@@ -44,7 +44,9 @@ from .quantize import dequantize, quantize, scale_factor
 from .round_plan import RoundPlan, build_round_plan
 
 __all__ = ["FediACConfig", "TrafficStats", "aggregate_stack", "fediac_allreduce",
-           "dense_allreduce", "client_compress", "RoundPlan", "build_round_plan"]
+           "dense_allreduce", "client_compress", "client_vote_stack",
+           "phase2_compress", "plan_wants_dense_mask", "scatter_sum",
+           "round_traffic", "RoundPlan", "build_round_plan"]
 
 
 @dataclass(frozen=True)
@@ -114,7 +116,7 @@ class TrafficStats:
         return 1.0 - self.total_bytes / max(self.dense_bytes, 1)
 
 
-def _traffic(cfg: FediACConfig, d: int) -> TrafficStats:
+def round_traffic(cfg: FediACConfig, d: int) -> TrafficStats:
     n_chunks = d // cfg.vote_chunk
     vote_bytes = n_chunks * jnp.dtype(cfg.vote_dtype).itemsize
     # paper wire format is 1 bit per (chunk of) coordinate; the uint8 psum is
@@ -153,14 +155,30 @@ def _vote_counts_stack(u_stack: jax.Array, cfg: FediACConfig,
     without materializing the [N, d] vote arrays and the selection
     certificate stays at batch level; the threshold branch is a plain
     vmapped indicator (already one cheap pass) summed as the seed did."""
+    if cfg.vote_mode == "threshold":
+        return client_vote_stack(u_stack, cfg, keys).astype(jnp.int32).sum(axis=0)
+    scores = jax.vmap(lambda u: _vote_scores(u, cfg))(u_stack)
+    return voting.vote_counts_stack(scores, cfg.k(scores.shape[-1]), keys)
+
+
+def client_vote_stack(u_stack: jax.Array, cfg: FediACConfig,
+                      vote_keys: jax.Array) -> jax.Array:
+    """Per-client phase-1 vote arrays, uint8[N, d/g].
+
+    The packet dataplane (``repro.netsim``) emits each client's votes as
+    individual packets, so it needs the stacked arrays — not just their
+    sum.  Summing the rows is bit-identical to :func:`_vote_counts_stack`
+    (``voting.vote_counts_stack`` is the same selection computed without
+    materializing the stack), which is what keeps the lossless packet
+    round exactly equal to :func:`aggregate_stack`.
+    """
     scores = jax.vmap(lambda u: _vote_scores(u, cfg))(u_stack)
     k = cfg.k(scores.shape[-1])
     if cfg.vote_mode == "threshold":
-        votes = jax.vmap(
+        return jax.vmap(
             lambda s: voting.threshold_vote_mask(s, k, jnp.max(jnp.abs(s)),
                                                  cfg.alpha))(scores)
-        return votes.astype(jnp.int32).sum(axis=0)
-    return voting.vote_counts_stack(scores, k, keys)
+    return voting.vote_mask_stack(scores, k, vote_keys)
 
 
 def _block_compress(u: jax.Array, cfg: FediACConfig, f: jax.Array,
@@ -232,7 +250,7 @@ def _client_compress_fused(u: jax.Array, cfg: FediACConfig, f: jax.Array,
     return q_buf, residual.astype(u.dtype)
 
 
-def _phase2_compress(cfg: FediACConfig):
+def phase2_compress(cfg: FediACConfig):
     """Pick the per-client phase-2 implementation for this config."""
     if cfg.compact_mode == "block":
         return _block_compress
@@ -241,12 +259,12 @@ def _phase2_compress(cfg: FediACConfig):
     return client_compress
 
 
-def _plan_wants_dense_mask(cfg: FediACConfig) -> bool:
+def plan_wants_dense_mask(cfg: FediACConfig) -> bool:
     return (cfg.use_pallas and cfg.vote_chunk == 1
             and cfg.compact_mode != "block")
 
 
-def _scatter_sum(summed_q: jax.Array, idx_c: jax.Array, keep_c: jax.Array,
+def scatter_sum(summed_q: jax.Array, idx_c: jax.Array, keep_c: jax.Array,
                  cfg: FediACConfig, d: int) -> jax.Array:
     """De-compact the aggregated int32 buffer back to a d-vector (still ints)."""
     n_chunks = d // cfg.vote_chunk
@@ -281,8 +299,8 @@ def aggregate_stack(u_stack: jax.Array, cfg: FediACConfig, key: jax.Array):
     # passed into every client's compress (the round-plan engine) — never
     # recomputed inside the vmap.
     plan = build_round_plan(counts, cfg, n,
-                            with_dense_mask=_plan_wants_dense_mask(cfg))
-    compress = _phase2_compress(cfg)
+                            with_dense_mask=plan_wants_dense_mask(cfg))
+    compress = phase2_compress(cfg)
     q_bufs, residuals = jax.vmap(
         lambda u, k: compress(u, cfg, f, k, plan))(u_stack, q_keys)
     summed = q_bufs.sum(axis=0)        # the PS's pipelined integer addition
@@ -290,9 +308,9 @@ def aggregate_stack(u_stack: jax.Array, cfg: FediACConfig, key: jax.Array):
         delta = compaction.block_scatter(summed, plan.keep_dense, plan.pos, d,
                                          cfg.block_size, cfg.capacity_frac)
         delta = delta.astype(jnp.float32) / (n * f)
-        return delta, residuals, counts, _traffic(cfg, d)
-    delta = _scatter_sum(summed, plan.idx, plan.keep, cfg, d).astype(jnp.float32) / (n * f)
-    return delta, residuals, counts, _traffic(cfg, d)
+        return delta, residuals, counts, round_traffic(cfg, d)
+    delta = scatter_sum(summed, plan.idx, plan.keep, cfg, d).astype(jnp.float32) / (n * f)
+    return delta, residuals, counts, round_traffic(cfg, d)
 
 
 # ---------------------------------------------------------------------------
@@ -364,8 +382,8 @@ def fediac_allreduce(u: jax.Array, residual: jax.Array, key: jax.Array,
     # psum'd counts, so every client builds the identical plan (this IS the
     # paper's GIA broadcast); compress + integer psum of C entries.
     plan = build_round_plan(counts, cfg, n,
-                            with_dense_mask=_plan_wants_dense_mask(cfg))
-    compress = _phase2_compress(cfg)
+                            with_dense_mask=plan_wants_dense_mask(cfg))
+    compress = phase2_compress(cfg)
     q_buf, new_residual = compress(u, cfg, f, kq, plan)
     summed = jax.lax.psum(q_buf, axes)
     if cfg.compact_mode == "block":
@@ -376,7 +394,7 @@ def fediac_allreduce(u: jax.Array, residual: jax.Array, key: jax.Array,
         # de-quantize the compact buffer first: the d-sized scatter result
         # then lives in the working dtype, not int32.
         mean_buf = (summed.astype(jnp.float32) / (n * f)).astype(wdt)
-        mean = _scatter_sum(mean_buf, plan.idx, plan.keep, cfg, d)
+        mean = scatter_sum(mean_buf, plan.idx, plan.keep, cfg, d)
     if pad:
         mean = mean[:d0]
         new_residual = new_residual[:d0]

@@ -1,0 +1,26 @@
+"""Executable packet-level switch dataplane (DESIGN.md §9).
+
+Runs FediAC rounds as packet streams through memory-limited programmable
+switches: Poisson packet timelines, loss + retransmission, stragglers and
+partial participation, a vote-quorum deadline, finite int32 register
+windows, and a leaf -> root multi-switch hierarchy.  The lossless
+full-participation configuration is bit-identical to the in-memory
+``core.fediac.aggregate_stack`` engine.
+"""
+
+from .dataplane import DataplaneStats, SwitchDataplane, n_windows, slot_window
+from .hierarchy import aggregate_hierarchy, drain_hierarchy, leaf_assignment
+from .policies import NetConfig, round_rng, sample_participants, sample_stragglers
+from .timeline import (DrainStats, download_time, drain_fifo, lose_packets,
+                       mg1_departures, poisson_arrivals, retransmit_delays,
+                       simulate_round_time, windowed_drain)
+from .transport import InMemoryTransport, PacketTransport, RoundResult, Transport
+
+__all__ = ["DataplaneStats", "SwitchDataplane", "n_windows", "slot_window",
+           "aggregate_hierarchy",
+           "drain_hierarchy", "leaf_assignment", "NetConfig", "round_rng",
+           "sample_participants", "sample_stragglers", "DrainStats",
+           "download_time", "drain_fifo", "lose_packets", "mg1_departures",
+           "poisson_arrivals", "retransmit_delays", "simulate_round_time",
+           "windowed_drain", "InMemoryTransport", "PacketTransport",
+           "RoundResult", "Transport"]

@@ -1,0 +1,110 @@
+"""The executable switch dataplane: a finite int32 register bank
+(DESIGN.md §9).
+
+Where ``switch/psim.py`` *counts* what a memory-limited PS would do, this
+module *does* it: a ``SwitchDataplane`` owns ``memory_slots`` int32
+registers, aggregates one memory window of the consensus buffer at a time,
+and flushes between windows — a round whose live compact buffer exceeds
+the bank runs in ``ceil(C / memory_slots)`` sequential passes, matching
+``ProgrammableSwitch.aggregate_aligned``'s pass count.
+
+Values are applied per *window* rather than per packet: phase-2 delivery
+is reliable (persistent ARQ, ``policies.NetConfig``), so the integer sums
+are order-independent and the per-packet granularity only matters for the
+*timeline* (``timeline.windowed_drain`` prices it).  Arithmetic is int32
+with wraparound — exactly what ``aggregate_stack``'s ``q_bufs.sum(0)``
+computes — so the packet path is bit-identical to the in-memory engine,
+not merely close.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+__all__ = ["DataplaneStats", "SwitchDataplane", "n_windows", "slot_window"]
+
+
+def n_windows(n_slots: int, memory_slots: int) -> int:
+    """Sequential register windows needed for ``n_slots`` live slots."""
+    return max(1, -(-int(n_slots) // int(memory_slots)))
+
+
+def slot_window(n_slots: int, memory_slots: int) -> np.ndarray:
+    """int32[n_slots] — which register window each buffer slot lands in."""
+    return (np.arange(int(n_slots)) // int(memory_slots)).astype(np.int32)
+
+
+@dataclass
+class DataplaneStats:
+    """What one round did to one switch."""
+
+    votes_lost: int = 0          # vote chunk-coords dropped (not retried)
+    passes: int = 1              # sequential register windows (psim semantics)
+    peak_live_slots: int = 0     # widest window actually resident
+    aggregation_ops: int = 0     # integer slot-additions executed
+
+    def merge(self, other: "DataplaneStats") -> "DataplaneStats":
+        return DataplaneStats(
+            votes_lost=self.votes_lost + other.votes_lost,
+            passes=max(self.passes, other.passes),
+            peak_live_slots=max(self.peak_live_slots, other.peak_live_slots),
+            aggregation_ops=self.aggregation_ops + other.aggregation_ops)
+
+
+class SwitchDataplane:
+    """A single programmable switch with a finite int32 register bank."""
+
+    def __init__(self, memory_slots: int = 262_144):
+        self.memory_slots = int(memory_slots)
+        self.registers = np.zeros(self.memory_slots, np.int32)
+        self.stats = DataplaneStats(passes=0)
+
+    # -- phase 1: vote counting ------------------------------------------
+    def count_votes(self, votes: np.ndarray, delivered: np.ndarray) -> np.ndarray:
+        """Sum delivered 0/1 vote arrays into int32 counts.
+
+        ``votes`` uint8[N, d/g]; ``delivered`` bool[N, d/g] marks the
+        coordinates whose carrying packet survived loss + quorum deadline.
+        Vote counters are ceil(log2 N)-bit — the paper treats the vote pass
+        as memory-cheap, so it is not windowed here.  Only delivered
+        chunk-coordinates count as executed slot-additions (and the
+        complement as ``votes_lost``, in the same chunk-coordinate units).
+        """
+        v = votes.astype(np.int32) * delivered.astype(np.int32)
+        counts = v.sum(axis=0, dtype=np.int32)
+        self.stats.votes_lost += int((~delivered).sum())
+        self.stats.aggregation_ops += int(delivered.sum())
+        return counts
+
+    # -- phase 2: windowed integer aggregation ---------------------------
+    def n_windows(self, n_slots: int) -> int:
+        return n_windows(n_slots, self.memory_slots)
+
+    def aggregate_windowed(self, bufs: np.ndarray) -> np.ndarray:
+        """Aggregate int32[N, C] client buffers through the register bank.
+
+        Runs ``ceil(C / memory_slots)`` passes; each pass zeroes the bank,
+        adds every client's slice of the window slot-by-slot (int32, wrap
+        semantics identical to ``jnp.sum(axis=0)``), then flushes to the
+        output.  Returns the int32[C] aggregate.
+        """
+        if not np.issubdtype(bufs.dtype, np.integer):
+            raise TypeError("the dataplane only performs integer arithmetic")
+        n, c = bufs.shape
+        bufs = bufs.astype(np.int32, copy=False)
+        out = np.empty(c, np.int32)
+        wins = self.n_windows(c)
+        for w in range(wins):
+            lo = w * self.memory_slots
+            hi = min(lo + self.memory_slots, c)
+            self.registers[:] = 0
+            np.add(self.registers[:hi - lo],
+                   bufs[:, lo:hi].sum(axis=0, dtype=np.int32),
+                   out=self.registers[:hi - lo], casting="unsafe")
+            out[lo:hi] = self.registers[:hi - lo]      # flush
+            self.stats.peak_live_slots = max(self.stats.peak_live_slots, hi - lo)
+            self.stats.aggregation_ops += max(n - 1, 0) * (hi - lo)
+        self.stats.passes = max(self.stats.passes, wins)
+        return out

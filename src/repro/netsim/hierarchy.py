@@ -1,0 +1,91 @@
+"""Two-level leaf -> root PS topology (paper Sec. III-B "multiple
+collaborative PSes"; DESIGN.md §9).
+
+Clients are assigned round-robin to ``n_leaves`` leaf switches.  Each leaf
+aggregates its clients' packets through its own register bank and window
+schedule; when a leaf finishes a window it forwards the window's partial
+sum upstream as MTU-sized packets, and the root switch aggregates the leaf
+partials.  Because int32 addition is associative and commutative (mod
+2^32), ``root(sum_leaf(clients))`` is bit-identical to the flat
+single-switch sum — the hierarchy changes *time*, never *values* — which
+is exactly the property the paper's multi-PS sketch relies on.
+
+With ``n_leaves == 1`` the topology degenerates to the single switch and
+the root hop disappears (no forwarding latency), so the flat configuration
+stays comparable to the analytic ``round_wall_clock`` model.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from .dataplane import DataplaneStats, SwitchDataplane
+from .timeline import DrainStats, mg1_departures, windowed_drain
+
+__all__ = ["leaf_assignment", "aggregate_hierarchy", "drain_hierarchy"]
+
+
+def leaf_assignment(n_clients: int, n_leaves: int) -> np.ndarray:
+    """int32[n_clients] — round-robin client -> leaf-switch map."""
+    return (np.arange(int(n_clients)) % max(1, int(n_leaves))).astype(np.int32)
+
+
+def aggregate_hierarchy(bufs: np.ndarray, leaf_of: np.ndarray,
+                        n_leaves: int, memory_slots: int
+                        ) -> tuple[np.ndarray, DataplaneStats]:
+    """Value plane: leaf partial sums, then the root adds leaf partials.
+
+    ``bufs`` int32[N, C].  Returns (int32[C] total, merged stats).
+    """
+    if n_leaves <= 1:
+        sw = SwitchDataplane(memory_slots)
+        return sw.aggregate_windowed(bufs), sw.stats
+    partials = []
+    stats = DataplaneStats(passes=0)
+    for leaf in range(int(n_leaves)):
+        rows = bufs[leaf_of == leaf]
+        if rows.shape[0] == 0:
+            continue
+        sw = SwitchDataplane(memory_slots)
+        partials.append(sw.aggregate_windowed(rows))
+        stats = stats.merge(sw.stats)
+    root = SwitchDataplane(memory_slots)
+    total = root.aggregate_windowed(np.stack(partials))
+    return total, stats.merge(root.stats)
+
+
+def drain_hierarchy(arrivals: np.ndarray, leaf_of: np.ndarray,
+                    packet_window: np.ndarray, n_windows: int,
+                    n_leaves: int, service_s: float,
+                    fwd_packets_per_window: int,
+                    not_before: float = 0.0) -> DrainStats:
+    """Time plane: per-leaf windowed drains, then the root services the
+    forwarded partial-sum packets.
+
+    Each leaf forwards ``fwd_packets_per_window`` packets the moment a
+    window completes (back-to-back on the uplink, spaced by the service
+    time); the root is one more FIFO queue over all forwarded packets.
+    """
+    if n_leaves <= 1:
+        _, st = windowed_drain(arrivals, packet_window, n_windows, service_s,
+                               not_before=not_before)
+        return st
+    root_arrivals = []
+    waits = 0.0
+    n_tot = 0
+    for leaf in range(int(n_leaves)):
+        rows = arrivals[leaf_of == leaf]
+        if rows.shape[0] == 0:
+            continue
+        completions, st = windowed_drain(rows, packet_window, n_windows,
+                                         service_s, not_before=not_before)
+        waits += st.mean_wait_s * st.n_packets
+        n_tot += st.n_packets
+        spacing = service_s * np.arange(1, fwd_packets_per_window + 1)
+        root_arrivals.append((np.asarray(completions)[:, None]
+                              + spacing[None, :]).ravel())
+    flat = np.sort(np.concatenate(root_arrivals))
+    dep = mg1_departures(flat, service_s, assume_sorted=True)
+    waits += float((dep - flat - service_s).sum())   # root queue waits too
+    n_tot += flat.size
+    return DrainStats(float(dep[-1]), waits / max(n_tot, 1), n_tot)

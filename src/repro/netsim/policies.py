@@ -1,0 +1,86 @@
+"""Round policies of the packet dataplane (DESIGN.md §9).
+
+Everything stochastic about a network round is decided here, up front and
+deterministically: which clients are sampled into the round, which of them
+are stragglers this round, which packets the links drop, and how the
+vote-quorum deadline treats late voters.  All draws come from a
+``numpy.random.Generator`` seeded by ``(NetConfig.seed, round_idx)`` so a
+round is a pure function of its config — replays are bit-exact.
+
+The straggler/quorum policy leans on FediAC's own robustness: the vote
+threshold ``a`` already tolerates missing voters (paper Fig. 4 shows a wide
+stable band), so phase 1 can close at a deadline and simply not count late
+or lost vote packets.  Phase 2 is reliable (persistent retransmission) —
+losing quantized value packets would silently bias the aggregate, while
+losing votes only shrinks the consensus set.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.switch.packets import MTU
+
+__all__ = ["NetConfig", "round_rng", "sample_participants", "sample_stragglers"]
+
+
+@dataclass(frozen=True)
+class NetConfig:
+    """Knobs of the packet-level network simulation (one FL deployment)."""
+
+    loss: float = 0.0              # i.i.d. per-packet loss probability
+    participation: float = 1.0     # fraction of clients sampled per round
+    straggler_frac: float = 0.0    # fraction of sampled clients straggling
+    straggler_slowdown: float = 4.0  # multiplies train time, divides rate
+    vote_deadline_s: float | None = None  # phase-1 quorum deadline (s from
+                                   # round start); None = wait for everyone
+    drop_late_voters: bool = True  # a client with zero vote packets in by
+                                   # the deadline sits phase 2 out entirely
+    rto_s: float = 0.05            # retransmission timeout (phase 2 ARQ)
+    max_retries: int = 16          # bound on ARQ attempts counted for time
+    memory_slots: int = 262_144    # int32 registers in each switch
+    n_leaves: int = 1              # leaf switches (1 = single-PS, no root)
+    mtu: int = MTU
+    seed: int = 0
+
+    def __post_init__(self):
+        if not 0.0 <= self.loss < 1.0:
+            raise ValueError(f"loss must be in [0, 1), got {self.loss}")
+        if not 0.0 < self.participation <= 1.0:
+            raise ValueError("participation must be in (0, 1]")
+        if not 0.0 <= self.straggler_frac <= 1.0:
+            raise ValueError("straggler_frac must be in [0, 1]")
+        if self.straggler_slowdown < 1.0:
+            raise ValueError("straggler_slowdown must be >= 1")
+        if self.n_leaves < 1:
+            raise ValueError("n_leaves must be >= 1")
+        if self.memory_slots < 1 or self.mtu < 1:
+            raise ValueError("memory_slots and mtu must be positive")
+
+
+def round_rng(net: NetConfig, round_idx: int) -> np.random.Generator:
+    """The one RNG of a round — seeded by (config seed, round index)."""
+    return np.random.default_rng((int(net.seed), int(round_idx)))
+
+
+def sample_participants(rng: np.random.Generator, n_clients: int,
+                        participation: float) -> np.ndarray:
+    """bool[n_clients] — exactly max(1, round(p*N)) clients, sampled
+    uniformly without replacement."""
+    n_p = max(1, int(round(participation * n_clients)))
+    mask = np.zeros(n_clients, bool)
+    mask[rng.choice(n_clients, size=min(n_p, n_clients), replace=False)] = True
+    return mask
+
+
+def sample_stragglers(rng: np.random.Generator, participants: np.ndarray,
+                      frac: float) -> np.ndarray:
+    """bool mask (same shape) — a ``frac`` subset of participants straggle."""
+    out = np.zeros_like(participants)
+    idx = np.flatnonzero(participants)
+    n_s = int(round(frac * idx.size))
+    if n_s:
+        out[rng.choice(idx, size=n_s, replace=False)] = True
+    return out

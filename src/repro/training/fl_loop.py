@@ -16,7 +16,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.baselines import make_aggregator
+from repro.core.baselines import make_transport
 from repro.core.fediac import FediACConfig
 from repro.switch import SwitchProfile, client_rates, n_packets, round_wall_clock
 
@@ -58,6 +58,20 @@ def accuracy(params, x, y) -> float:
 
 @dataclass
 class FLConfig:
+    """One federated-learning experiment.
+
+    ``transport`` selects how each round's bytes reach the aggregate
+    (DESIGN.md §9): ``"memory"`` calls the aggregator directly and prices
+    the round with the analytic M/G/1 ``round_wall_clock`` model (the
+    seed behavior); ``"packet"`` pushes the round through the executable
+    packet dataplane (``repro.netsim``) — Poisson packet streams, loss +
+    retransmission, stragglers, partial participation, register windows
+    and the leaf->root switch hierarchy, all configured by ``net`` (a
+    ``netsim.NetConfig``) — and uses the *simulated* wall-clock instead.
+    With ``net`` at its lossless full-participation defaults the packet
+    transport is bit-identical to the in-memory FediAC engine.
+    """
+
     n_clients: int = 20
     rounds: int = 60
     local_steps: int = 5           # E
@@ -71,6 +85,8 @@ class FLConfig:
                                     # Pallas kernels (None = leave cfg as-is)
     switch: SwitchProfile = field(default_factory=SwitchProfile.high)
     local_train_s: float = 0.1     # paper: 0.1 (FEMNIST) .. 3 (CIFAR-100)
+    transport: str = "memory"      # "memory" | "packet"  (DESIGN.md §9)
+    net: object | None = None      # netsim.NetConfig for transport="packet"
     seed: int = 0
 
 
@@ -127,8 +143,11 @@ def run_federated(clients, test, flcfg: FLConfig, *, hidden=(128, 64)) -> FLHist
     if flcfg.use_pallas is not None and flcfg.aggregator == "fediac":
         base_cfg = agg_kwargs.get("cfg", FediACConfig())
         agg_kwargs["cfg"] = replace(base_cfg, use_pallas=flcfg.use_pallas)
-    agg = make_aggregator(flcfg.aggregator, **agg_kwargs)
     rates = client_rates(n, flcfg.seed)
+    transport = make_transport(flcfg.aggregator, transport=flcfg.transport,
+                               net=flcfg.net, profile=flcfg.switch,
+                               rates=rates, local_train_s=flcfg.local_train_s,
+                               **agg_kwargs)
 
     grad_fn = jax.grad(_ce_loss)
 
@@ -165,15 +184,27 @@ def run_federated(clients, test, flcfg: FLConfig, *, hidden=(128, 64)) -> FLHist
         key, k1, k2 = jax.random.split(key, 3)
         u_stack, losses = local_round(flat, k1, lr)
         u_stack = u_stack + e_stack
-        delta, e_stack, agg_state, traffic, load = agg(u_stack, agg_state, k2)
+        res = transport.round(u_stack, agg_state, k2, t)
+        delta, e_stack, agg_state = res.delta, res.residuals, res.state
+        traffic, load = res.traffic, res.load
         flat = flat - delta
 
-        down_packets = n_packets(traffic.total_bytes)
-        t_cum += round_wall_clock(
-            packets_per_client=load.packets_per_client,
-            download_packets=down_packets, rates=rates, profile=flcfg.switch,
-            local_train_s=flcfg.local_train_s, aligned=load.aligned)
-        mb_cum += traffic.total_bytes * n / 1e6 + traffic.total_bytes * n / 1e6
+        if res.wall_clock_s is not None:
+            t_cum += res.wall_clock_s       # packet-simulated round time
+        else:
+            down_packets = n_packets(traffic.total_bytes)
+            t_cum += round_wall_clock(
+                packets_per_client=load.packets_per_client,
+                download_packets=down_packets, rates=rates, profile=flcfg.switch,
+                local_train_s=flcfg.local_train_s, aligned=load.aligned)
+        # uploads come from the clients that actually sent this round
+        # (the packet transport reports exact bytes — dropped voters still
+        # spent phase 1); the broadcast reaches all N clients.
+        up_bytes = (res.upload_bytes if res.upload_bytes is not None
+                    else traffic.total_bytes * res.n_active)
+        upload_mb = up_bytes / 1e6
+        download_mb = traffic.total_bytes * n / 1e6
+        mb_cum += upload_mb + download_mb
         hist.acc.append(accuracy(unravel(flat), xt, yt))
         hist.wall_clock.append(t_cum)
         hist.traffic_mb.append(mb_cum)

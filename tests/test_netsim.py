@@ -1,0 +1,329 @@
+"""The executable packet dataplane (DESIGN.md §9): bit-exact equivalence
+with the in-memory engine, timeline agreement with the analytic model, and
+the loss/straggler/participation/hierarchy policies."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.fediac import FediACConfig, aggregate_stack
+from repro.netsim import (NetConfig, PacketTransport, SwitchDataplane,
+                          leaf_assignment, mg1_departures, round_rng,
+                          sample_participants)
+from repro.netsim.timeline import (drain_fifo, poisson_arrivals,
+                                   retransmit_delays, simulate_round_time,
+                                   windowed_drain)
+from repro.switch import SwitchProfile, client_rates, round_wall_clock
+
+MODES = [("topk", "topk"), ("topk", "block"),
+         ("threshold", "topk"), ("threshold", "block")]
+
+
+@pytest.fixture(scope="module")
+def u_stack():
+    return jax.random.normal(jax.random.PRNGKey(1), (8, 2048)) ** 3
+
+
+# ---------------------------------------------------------------------------
+# the core guarantee: lossless full participation == aggregate_stack, bitwise
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("vote_mode,compact_mode", MODES)
+def test_packet_round_bit_identical(u_stack, vote_mode, compact_mode):
+    cfg = FediACConfig(vote_mode=vote_mode, compact_mode=compact_mode, a=2)
+    key = jax.random.PRNGKey(42)
+    delta0, res0, counts0, traffic0 = aggregate_stack(u_stack, cfg, key)
+    tp = PacketTransport("fediac", {"cfg": cfg}, net=NetConfig())
+    r = tp.round(u_stack, None, key, round_idx=0)
+    assert bool(jnp.all(delta0 == r.delta))
+    assert bool(jnp.all(res0 == r.residuals))
+    np.testing.assert_array_equal(np.asarray(counts0),
+                                  r.stats["vote_counts"])
+    assert r.traffic == traffic0
+    assert r.wall_clock_s is not None and r.wall_clock_s > 0
+
+
+def test_hierarchy_changes_time_never_values(u_stack):
+    cfg = FediACConfig(a=2)
+    key = jax.random.PRNGKey(0)
+    flat = PacketTransport("fediac", {"cfg": cfg},
+                           net=NetConfig(n_leaves=1)).round(u_stack, None, key)
+    tree = PacketTransport("fediac", {"cfg": cfg},
+                           net=NetConfig(n_leaves=3)).round(u_stack, None, key)
+    assert bool(jnp.all(flat.delta == tree.delta))
+    assert bool(jnp.all(flat.residuals == tree.residuals))
+    assert tree.wall_clock_s >= flat.wall_clock_s  # root hop only adds time
+
+
+def test_register_windows_multipass_exact(u_stack):
+    """A tiny register bank forces multi-pass aggregation; values exact."""
+    cfg = FediACConfig(a=2)
+    key = jax.random.PRNGKey(0)
+    big = PacketTransport("fediac", {"cfg": cfg}, net=NetConfig())
+    tiny = PacketTransport("fediac", {"cfg": cfg},
+                           net=NetConfig(memory_slots=16))
+    r_big, r_tiny = big.round(u_stack, None, key), tiny.round(u_stack, None, key)
+    assert r_tiny.stats["passes"] > 1
+    assert r_big.stats["passes"] == 1
+    assert bool(jnp.all(r_big.delta == r_tiny.delta))
+    assert r_tiny.stats["peak_live_slots"] <= 16
+
+
+def test_dataplane_rejects_floats():
+    with pytest.raises(TypeError):
+        SwitchDataplane(8).aggregate_windowed(np.ones((2, 4), np.float32))
+
+
+# ---------------------------------------------------------------------------
+# timeline: determinism and agreement with the analytic M/G/1 model
+# ---------------------------------------------------------------------------
+
+
+def test_round_deterministic(u_stack):
+    cfg = FediACConfig(a=2)
+    net = NetConfig(loss=0.05, participation=0.5, straggler_frac=0.25, seed=9)
+    key = jax.random.PRNGKey(3)
+    r1 = PacketTransport("fediac", {"cfg": cfg}, net=net).round(u_stack, None, key, 4)
+    r2 = PacketTransport("fediac", {"cfg": cfg}, net=net).round(u_stack, None, key, 4)
+    assert r1.wall_clock_s == r2.wall_clock_s
+    assert bool(jnp.all(r1.delta == r2.delta))
+    np.testing.assert_array_equal(r1.stats["uploaders"], r2.stats["uploaders"])
+
+
+def test_mg1_recursion_matches_sequential():
+    """The max-plus closed form equals the textbook FIFO recursion."""
+    rng = np.random.default_rng(0)
+    a = np.sort(rng.uniform(0, 1, 200))
+    s = rng.uniform(0.001, 0.01, 200)
+    d_vec = mg1_departures(a, s)
+    d_seq = np.empty_like(d_vec)
+    prev = 0.0
+    for k in range(a.size):
+        prev = max(a[k], prev) + s[k]
+        d_seq[k] = prev
+    np.testing.assert_allclose(d_vec, d_seq, rtol=1e-12)
+
+
+def test_simulated_wall_clock_agrees_with_analytic():
+    """Documented tolerance: 15% at 500 packets/client (Poisson sampling
+    noise in the slowest client's drain shrinks as 1/sqrt(packets))."""
+    rates = client_rates(20, 0)
+    kw = dict(packets_per_client=500, download_packets=500, rates=rates,
+              profile=SwitchProfile.high(), local_train_s=0.1)
+    ana = round_wall_clock(**kw)
+    rng = np.random.default_rng(0)
+    sim = np.mean([simulate_round_time(rng=rng, **kw) for _ in range(5)])
+    assert abs(sim - ana) / ana < 0.15
+
+
+def test_fediac_round_wall_clock_agrees_with_analytic(u_stack):
+    """Full packetized FediAC round vs the analytic model the FL loop used:
+    same inputs, documented 35% tolerance (few packets per phase)."""
+    cfg = FediACConfig(a=2)
+    tp = PacketTransport("fediac", {"cfg": cfg}, net=NetConfig())
+    r = tp.round(u_stack, None, jax.random.PRNGKey(0))
+    rates = client_rates(u_stack.shape[0], 0)
+    ana = round_wall_clock(packets_per_client=r.load.packets_per_client,
+                           download_packets=r.load.packets_per_client,
+                           rates=rates, profile=SwitchProfile.high(),
+                           local_train_s=0.1)
+    assert abs(r.wall_clock_s - ana) / ana < 0.35
+
+
+def test_loss_retransmission_costs_time_and_bytes():
+    rng = np.random.default_rng(0)
+    delays, retx = retransmit_delays(rng, (64, 100), 0.3, 0.05, 16)
+    assert retx.sum() > 0 and delays.max() > 0
+    lossless, n0 = retransmit_delays(rng, (64, 100), 0.0, 0.05, 16)
+    assert n0.sum() == 0 and lossless.max() == 0.0
+    # retransmissions surface in the round's upload accounting
+    u = jax.random.normal(jax.random.PRNGKey(1), (8, 2048)) ** 3
+    cfg = FediACConfig(a=2)
+    key = jax.random.PRNGKey(0)
+    clean = PacketTransport("fediac", {"cfg": cfg}, net=NetConfig()).round(
+        u, None, key)
+    lossy = PacketTransport("fediac", {"cfg": cfg},
+                            net=NetConfig(loss=0.4, seed=11)).round(u, None, key)
+    if lossy.stats["retransmissions"] > 0:
+        assert lossy.upload_bytes > clean.upload_bytes
+
+
+def test_windowed_drain_serializes_windows():
+    rng = np.random.default_rng(0)
+    arr = poisson_arrivals(rng, np.full(4, 1000.0), 100, 0.0)
+    pkt_window = (np.arange(100) >= 50).astype(np.int32)
+    completions, st = windowed_drain(arr, pkt_window, 2, 1e-4)
+    assert completions[1] >= completions[0]
+    one, _ = windowed_drain(arr, np.zeros(100, np.int32), 1, 1e-4)
+    assert st.completion_s >= one[-1]  # serialization can only add time
+
+
+# ---------------------------------------------------------------------------
+# policies: participation, stragglers, quorum deadline
+# ---------------------------------------------------------------------------
+
+
+def test_partial_participation_semantics(u_stack):
+    cfg = FediACConfig(a=2)
+    net = NetConfig(participation=0.5, seed=7)
+    r = PacketTransport("fediac", {"cfg": cfg}, net=net).round(
+        u_stack, None, jax.random.PRNGKey(0))
+    up = r.stats["uploaders"]
+    assert 0 < len(up) < u_stack.shape[0]
+    assert r.n_active == len(up)
+    out = np.setdiff1d(np.arange(u_stack.shape[0]), up)
+    # non-participants carry their whole update as residual
+    assert bool(jnp.all(r.residuals[out] == u_stack[out]))
+    assert not bool(jnp.all(r.residuals[up] == u_stack[up]))
+
+
+def test_participation_sampling_exact_count():
+    rng = round_rng(NetConfig(seed=1), 0)
+    mask = sample_participants(rng, 20, 0.25)
+    assert mask.sum() == 5
+
+
+def test_vote_deadline_drops_stragglers(u_stack):
+    """Stragglers that miss the quorum deadline sit phase 2 out; FediAC's
+    vote threshold tolerates the missing voters."""
+    cfg = FediACConfig(a=2)
+    net = NetConfig(straggler_frac=0.5, straggler_slowdown=100.0,
+                    vote_deadline_s=0.3, seed=1)
+    tp = PacketTransport("fediac", {"cfg": cfg}, net=net, local_train_s=0.1)
+    r = tp.round(u_stack, None, jax.random.PRNGKey(0))
+    n = u_stack.shape[0]
+    assert r.stats["stragglers"] == n // 2
+    assert len(r.stats["uploaders"]) == n - n // 2   # only punctual clients
+    out = np.setdiff1d(np.arange(n), r.stats["uploaders"])
+    assert bool(jnp.all(r.residuals[out] == u_stack[out]))
+    # the deadline bounds the round: a straggler's 10 s train time never
+    # enters the wall-clock
+    assert r.wall_clock_s < 5.0
+
+
+def test_vote_loss_shrinks_consensus_not_correctness(u_stack):
+    """Lost vote packets can only lower counts (never corrupt values)."""
+    cfg = FediACConfig(a=2)
+    key = jax.random.PRNGKey(0)
+    clean = PacketTransport("fediac", {"cfg": cfg}, net=NetConfig()).round(
+        u_stack, None, key)
+    lossy = PacketTransport("fediac", {"cfg": cfg},
+                            net=NetConfig(loss=0.3, seed=5)).round(
+        u_stack, None, key)
+    assert lossy.stats["votes_lost"] > 0
+    assert np.all(lossy.stats["vote_counts"] <= clean.stats["vote_counts"])
+    assert bool(jnp.all(jnp.isfinite(lossy.delta)))
+
+
+def test_leaf_assignment_round_robin():
+    la = leaf_assignment(7, 3)
+    np.testing.assert_array_equal(la, [0, 1, 2, 0, 1, 2, 0])
+    assert leaf_assignment(5, 1).max() == 0
+
+
+# ---------------------------------------------------------------------------
+# generic baselines through the packet transport
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name,kwargs", [("topk", {"k_frac": 0.01}),
+                                         ("switchml", {"bits": 12}),
+                                         ("fedavg", {})])
+def test_baselines_through_packet_transport(u_stack, name, kwargs):
+    tp = PacketTransport(name, kwargs, net=NetConfig(loss=0.02, seed=5))
+    r = tp.round(u_stack, None, jax.random.PRNGKey(0))
+    assert r.wall_clock_s > 0
+    assert r.delta.shape == (u_stack.shape[1],)
+    assert r.residuals.shape == u_stack.shape
+
+
+def test_unaligned_baseline_pays_alignment_penalty(u_stack):
+    net = NetConfig()
+    key = jax.random.PRNGKey(0)
+    t_topk = PacketTransport("topk", {"k_frac": 0.05}, net=net).round(
+        u_stack, None, key).wall_clock_s
+    t_sml = PacketTransport("switchml", {"bits": 12}, net=net).round(
+        u_stack, None, key).wall_clock_s
+    # topk uploads fewer bytes yet its unaligned service is 4x slower per
+    # packet; just assert both simulate and stay positive + finite
+    assert t_topk > 0 and t_sml > 0
+
+
+# ---------------------------------------------------------------------------
+# FL loop integration + the per-round traffic regression pin
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def small_fl():
+    from repro.data import classification, partition_dirichlet
+    data = classification(n=1500, dim=16, n_classes=10, seed=0)
+    train, test = data.test_split(0.25)
+    return partition_dirichlet(train, 6, beta=0.5, seed=0), test
+
+
+def test_fl_packet_transport_matches_memory(small_fl):
+    """Lossless full-participation FL through packets: identical learning
+    trajectory, simulated wall-clock near the analytic model."""
+    from repro.netsim import NetConfig
+    from repro.training import FLConfig, run_federated
+    clients, test = small_fl
+    kw = dict(n_clients=6, rounds=3, local_steps=2, aggregator="fediac",
+              agg_kwargs={"cfg": FediACConfig(a=2, bits=12)}, seed=0)
+    h_mem = run_federated(clients, test, FLConfig(**kw))
+    h_pkt = run_federated(clients, test,
+                          FLConfig(transport="packet", net=NetConfig(), **kw))
+    assert h_mem.acc == h_pkt.acc
+    assert h_mem.traffic_mb == h_pkt.traffic_mb
+    ratio = h_pkt.wall_clock[-1] / h_mem.wall_clock[-1]
+    assert 0.65 < ratio < 1.55          # documented FL-level tolerance
+
+
+def test_per_round_traffic_mb_regression(small_fl):
+    """Pin the per-round MB accounting: upload from the active clients plus
+    the broadcast to all N — not the same term added twice."""
+    from repro.training import FLConfig, run_federated
+    clients, test = small_fl
+    n = 6
+    h = run_federated(clients, test,
+                      FLConfig(n_clients=n, rounds=2, local_steps=1,
+                               aggregator="fedavg", seed=0))
+    dim, hidden, n_classes = clients[0].x.shape[1], (128, 64), 10
+    d = (dim * hidden[0] + hidden[0] + hidden[0] * hidden[1] + hidden[1]
+         + hidden[1] * n_classes + n_classes)
+    per_round = (4 * d * n + 4 * d * n) / 1e6   # upload + broadcast
+    assert h.traffic_mb[0] == pytest.approx(per_round)
+    assert h.traffic_mb[1] == pytest.approx(2 * per_round)
+
+
+def test_fl_lossy_partial_still_learns(small_fl):
+    from repro.netsim import NetConfig
+    from repro.training import FLConfig, run_federated
+    clients, test = small_fl
+    cfg = FLConfig(n_clients=6, rounds=8, local_steps=2, aggregator="fediac",
+                   agg_kwargs={"cfg": FediACConfig(a=2, bits=12)},
+                   transport="packet",
+                   net=NetConfig(loss=0.05, participation=0.5, seed=3),
+                   seed=0)
+    h = run_federated(clients, test, cfg)
+    assert h.loss[-1] < h.loss[0]
+    assert all(np.diff(h.wall_clock) > 0)
+
+
+# ---------------------------------------------------------------------------
+# the full benchmark grid (slow: excluded from tier-1; CI runs --smoke)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+def test_dataplane_benchmark_full_grid(tmp_path):
+    from benchmarks.dataplane import LOSS_GRID, PART_GRID, run
+    out = str(tmp_path / "BENCH_dataplane.json")
+    rows = run(smoke=False, out_path=out)
+    import json
+    payload = json.load(open(out))
+    assert len(payload["cells"]) == len(LOSS_GRID) * len(PART_GRID)
+    tags = [r[0] for r in rows]
+    assert "dataplane/lossless_equals_memory" in tags

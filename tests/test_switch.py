@@ -1,0 +1,162 @@
+"""Unit coverage for the analytic switch package: psim slot accounting,
+packetization rounding, and the P-K queuing model edge cases."""
+
+import numpy as np
+import pytest
+
+from repro.switch import (MTU, ProgrammableSwitch, PSStats, RoundTraffic,
+                          client_rates, n_packets, round_wall_clock)
+from repro.switch.queueing import SwitchProfile
+
+# ---------------------------------------------------------------------------
+# aligned aggregation
+# ---------------------------------------------------------------------------
+
+
+def test_aligned_stats_and_sum():
+    ps = ProgrammableSwitch(memory_slots=8)
+    streams = np.arange(4 * 20, dtype=np.int64).reshape(4, 20)
+    out, stats = ps.aggregate_aligned(streams)
+    np.testing.assert_array_equal(out, streams.sum(axis=0))
+    assert stats.aggregation_ops == 3 * 20        # (N-1) * d
+    assert stats.passes == 3                       # ceil(20 / 8) multi-pass
+    assert stats.server_redirects == 0
+
+
+def test_aligned_single_pass_when_fits():
+    ps = ProgrammableSwitch(memory_slots=64)
+    _, stats = ps.aggregate_aligned(np.ones((2, 64), np.int32))
+    assert stats.passes == 1
+
+
+def test_integer_only_enforced():
+    ps = ProgrammableSwitch()
+    with pytest.raises(TypeError):
+        ps.aggregate_aligned(np.ones((2, 8), np.float32))
+    with pytest.raises(TypeError):
+        ps.aggregate_sparse([np.array([0, 1])], [np.array([0.5, 1.5])], d=4)
+
+
+# ---------------------------------------------------------------------------
+# sparse aggregation: the vectorized slot accounting must replicate the
+# sequential slot-map semantics exactly
+# ---------------------------------------------------------------------------
+
+
+def _sparse_reference(indices, values, d, memory_slots):
+    """The original per-value loop, kept as the accounting oracle."""
+    out = np.zeros(d, np.int64)
+    slot_map, ops, redirects = {}, 0, 0
+    for idx, val in zip(indices, values):
+        for i, v in zip(idx.tolist(), val.tolist()):
+            if i in slot_map:
+                ops += 1
+            elif len(slot_map) < memory_slots:
+                slot_map[i] = len(slot_map)
+                ops += 1
+            else:
+                redirects += 1
+            out[i] += v
+    return out, ops, redirects
+
+
+@pytest.mark.parametrize("memory_slots", [1, 3, 16, 1000])
+def test_sparse_matches_sequential_reference(memory_slots):
+    rng = np.random.default_rng(0)
+    d = 64
+    indices = [rng.choice(d, size=rng.integers(1, 20), replace=False)
+               for _ in range(5)]
+    values = [rng.integers(-50, 50, size=len(i)) for i in indices]
+    ps = ProgrammableSwitch(memory_slots=memory_slots)
+    out, stats = ps.aggregate_sparse(indices, values, d)
+    ref_out, ref_ops, ref_red = _sparse_reference(indices, values, d,
+                                                  memory_slots)
+    np.testing.assert_array_equal(out, ref_out)
+    assert stats.aggregation_ops == ref_ops
+    assert stats.server_redirects == ref_red
+    assert stats.passes == 1
+
+
+def test_sparse_duplicate_indices_within_client():
+    """Repeated touches of a slotted index each count one aggregation op."""
+    ps = ProgrammableSwitch(memory_slots=1)
+    out, stats = ps.aggregate_sparse(
+        [np.array([2, 2, 3])], [np.array([1, 1, 5])], d=4)
+    np.testing.assert_array_equal(out, [0, 0, 2, 5])
+    assert stats.aggregation_ops == 2      # both touches of slotted index 2
+    assert stats.server_redirects == 1     # index 3 found the bank full
+
+
+def test_sparse_empty_stream():
+    ps = ProgrammableSwitch()
+    out, stats = ps.aggregate_sparse([], [], d=8)
+    np.testing.assert_array_equal(out, np.zeros(8))
+    assert stats == PSStats(0, 1, 0)
+
+
+def test_sparse_motivation_example_preserved():
+    """Sec. III-B worked example still costs 4 with the vectorized path."""
+    ps = ProgrammableSwitch(memory_slots=2)
+    u1 = np.array([5, 4, 3, 2, 1])
+    u2 = np.array([1, 3, 4, 5, 2])
+    _, stats = ps.aggregate_sparse([np.array([0, 1]), np.array([3, 2])],
+                                   [u1[[0, 1]], u2[[3, 2]]], d=5)
+    assert stats.aggregation_ops + stats.server_redirects == 4
+    assert stats.server_redirects == 2
+
+
+# ---------------------------------------------------------------------------
+# packetization
+# ---------------------------------------------------------------------------
+
+
+def test_n_packets_rounding():
+    assert n_packets(0) == 1               # a round always costs one packet
+    assert n_packets(1) == 1
+    assert n_packets(MTU) == 1
+    assert n_packets(MTU + 1) == 2
+    assert n_packets(10 * MTU) == 10
+    assert n_packets(3000, mtu=1000) == 3
+
+
+def test_round_traffic_total():
+    rt = RoundTraffic(upload_per_client=100, download_per_client=40,
+                      n_clients=7)
+    assert rt.total == (100 + 40) * 7
+
+
+# ---------------------------------------------------------------------------
+# P-K queuing model
+# ---------------------------------------------------------------------------
+
+
+def test_wall_clock_unstable_queue_finite():
+    """util >= 1 degrades to service-bound throughput, stays finite and
+    larger than any stable configuration of the same load."""
+    rates = np.full(200, 2000.0)           # lam_s = 4e5 pkt/s
+    profile = SwitchProfile.low()          # util = 4e5 * 3.03e-6 = 1.21
+    assert rates.sum() * profile.rho >= 1.0
+    t = round_wall_clock(packets_per_client=100, download_packets=100,
+                         rates=rates, profile=profile, local_train_s=0.0)
+    assert np.isfinite(t) and t > 0
+    # service-bound: at least total service time
+    assert t >= 200 * 100 * profile.rho
+
+
+def test_wall_clock_stable_vs_unstable_monotone():
+    rates = client_rates(20, 0)
+    kw = dict(packets_per_client=300, download_packets=100, rates=rates,
+              local_train_s=0.0)
+    t_stable = round_wall_clock(profile=SwitchProfile.high(), **kw)
+    t_slow = round_wall_clock(profile=SwitchProfile.low(), **kw)
+    assert t_slow >= t_stable > 0
+
+
+def test_wall_clock_util_just_below_one():
+    """Approaching util = 1 from below blows up the wait but stays finite."""
+    profile = SwitchProfile.low()
+    lam = 0.999 / profile.rho
+    rates = np.full(10, lam / 10)
+    t = round_wall_clock(packets_per_client=10, download_packets=10,
+                         rates=rates, profile=profile, local_train_s=0.0)
+    assert np.isfinite(t) and t > 0
