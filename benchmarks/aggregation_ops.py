@@ -12,13 +12,13 @@ from repro.switch import ProgrammableSwitch
 from .common import emit
 
 
-def run():
+def run(*, smoke: bool = False):
     rows = []
     rng = np.random.default_rng(0)
-    n, d, k = 8, 100_000, 5_000
+    n, d, k = (8, 10_000, 500) if smoke else (8, 100_000, 5_000)
     updates = (rng.normal(size=(n, d)) ** 3 * 100).astype(np.int64)
 
-    ps = ProgrammableSwitch(memory_slots=8_192)
+    ps = ProgrammableSwitch(memory_slots=1_024 if smoke else 8_192)
 
     # Top-k without consensus: per-client index sets differ
     idxs, vals = [], []

@@ -28,7 +28,7 @@ import jax.numpy as jnp
 from repro.core.fediac import FediACConfig, aggregate_stack
 from repro.core.seed_ref import aggregate_stack_seed
 
-from .common import emit
+from .common import emit, smoke_out_path
 
 OUT_PATH = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
                         "BENCH_aggregation.json")
@@ -78,13 +78,20 @@ def bench_cell(d: int, n: int, vote_mode: str, compact_mode: str,
     return cell
 
 
-def run(*, compare_seed: bool = True):
+def run(*, compare_seed: bool = True, smoke: bool = False,
+        out_path: str = OUT_PATH):
+    if smoke:
+        out_path = smoke_out_path(out_path, OUT_PATH,
+                                  "BENCH_aggregation.smoke.json")
+    grid = GRID[:1] if smoke else GRID
+    modes = MODES[:1] if smoke else MODES
+    reps = 2 if smoke else REPS
     cells = []
     rows = []
-    for vote_mode, compact_mode in MODES:
-        for d, n in GRID:
+    for vote_mode, compact_mode in modes:
+        for d, n in grid:
             cell = bench_cell(d, n, vote_mode, compact_mode,
-                              compare_seed=compare_seed)
+                              compare_seed=compare_seed, reps=reps)
             cells.append(cell)
             tag = f"agg/{vote_mode}-{compact_mode}/d{d}/n{n}"
             if compare_seed:
@@ -99,10 +106,10 @@ def run(*, compare_seed: bool = True):
         "unit": "seconds_per_round",
         "cells": cells,
     }
-    with open(OUT_PATH, "w") as fh:
+    with open(out_path, "w") as fh:
         json.dump(payload, fh, indent=2)
         fh.write("\n")
-    rows.append(("agg/json", OUT_PATH, "written"))
+    rows.append(("agg/json", out_path, "written"))
     return rows
 
 
@@ -111,8 +118,12 @@ def main(argv=None) -> int:
     ap.add_argument("--no-compare-seed", dest="compare_seed",
                     action="store_false", default=True,
                     help="time only the engine (skip the seed reference)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="single small cell, temp output (CI)")
+    ap.add_argument("--out", default=OUT_PATH)
     args = ap.parse_args(argv)
-    emit(run(compare_seed=args.compare_seed))
+    emit(run(compare_seed=args.compare_seed, smoke=args.smoke,
+             out_path=args.out))
     return 0
 
 

@@ -1,0 +1,237 @@
+"""CI benchmark-regression gate (DESIGN.md §10).
+
+Compares a fresh smoke run against the tracked benchmark baselines at the
+repo root — ``BENCH_aggregation.json``, ``BENCH_dataplane.json`` and
+``BENCH_sweep.json`` — and exits non-zero on drift.
+
+Gating policy, by how machine-dependent each quantity is:
+
+* exact — wire bytes, bit-identity flags, analytic/simulated wall-clock
+  (pure float64 numpy/Python arithmetic, IEEE-deterministic everywhere);
+* tight band (``ACC_TOL``) — training accuracies: XLA:CPU codegen is
+  host-microarchitecture-dependent, so f32 sums can differ by ulps
+  between the baseline machine and a CI runner and compound over rounds
+  (the injected-drift deltas are sized to stay detectable);
+* wide band (``WALL_TOL``x) — real wall-clock timings (engine seconds,
+  speedups, packets/s): 2-core CI timings are noisy (same benchmark
+  varies ~2x run to run).
+
+  PYTHONPATH=src python -m benchmarks.check_regression
+      [--fresh-out PATH]      # save the freshly computed payloads
+      [--fresh-in PATH]       # reuse saved payloads (skip recompute)
+      [--inject-drift]        # perturb the tracked baselines first; the
+                              # gate MUST then fail (CI asserts exit != 0)
+
+Refreshing baselines after an intentional change: re-run the producing
+benchmarks (``python -m benchmarks.{aggregation_round,dataplane,sweep}``)
+on an idle machine and commit the regenerated ``BENCH_*.json``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import copy
+import json
+import os
+from dataclasses import replace
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+TRACKED = {
+    "aggregation": os.path.join(ROOT, "BENCH_aggregation.json"),
+    "dataplane": os.path.join(ROOT, "BENCH_dataplane.json"),
+    "sweep": os.path.join(ROOT, "BENCH_sweep.json"),
+}
+WALL_TOL = 4.0   # wall-clock band: fresh within [tracked/4, tracked*4]
+ACC_TOL = 0.005  # |final_acc drift| tolerated (cross-host XLA ulps only;
+                 # the injected drift of 0.013 must stay detectable)
+
+
+# ---------------------------------------------------------------------------
+# fresh smoke computations
+# ---------------------------------------------------------------------------
+
+def fresh_aggregation() -> dict:
+    """One small aggregation cell, engine-vs-seed, bit-identity checked."""
+    from .aggregation_round import bench_cell
+    return bench_cell(100_000, 8, "topk", "topk", compare_seed=True, reps=2)
+
+
+def fresh_dataplane(rounds: int) -> dict:
+    """The lossless full-participation packet cell + its in-memory twin,
+    at the tracked round count (both deterministic)."""
+    from repro.sweep import run_sweep
+    from repro.sweep.grids import dataplane_grid
+    from .dataplane import _cell_dict, packet_throughput
+    spec = replace(dataplane_grid()[0], rounds=rounds)
+    mem = replace(spec, name="dataplane-memory", transport="memory")
+    res = {c.spec.transport: c for c in run_sweep([spec, mem], (0,))}
+    cell = _cell_dict(spec, res["packet"].history)
+    return {"lossless": cell,
+            "memory_acc": round(res["memory"].history.acc[-1], 4),
+            "throughput": packet_throughput(n_packets=50_000)}
+
+
+def fresh_sweep() -> dict:
+    """The full tracked sweep benchmark (smoke grid, both seeds)."""
+    import tempfile
+    from . import sweep as sweep_bench
+    out = os.path.join(tempfile.gettempdir(), "BENCH_sweep.fresh.json")
+    sweep_bench.run(out_path=out)
+    with open(out) as fh:
+        return json.load(fh)
+
+
+def compute_fresh(tracked: dict) -> dict:
+    return {"aggregation": fresh_aggregation(),
+            "dataplane": fresh_dataplane(int(tracked["dataplane"]["rounds"])),
+            "sweep": fresh_sweep()}
+
+
+# ---------------------------------------------------------------------------
+# comparisons (pure: tracked payload x fresh payload -> failure list)
+# ---------------------------------------------------------------------------
+
+def _band(fresh: float, tracked: float, tol: float = WALL_TOL) -> bool:
+    return tracked / tol <= fresh <= tracked * tol
+
+
+def compare_aggregation(tracked: dict, fresh: dict) -> list:
+    fails = []
+    for cell in tracked["cells"]:
+        if not cell.get("bit_identical", False):
+            fails.append(f"tracked aggregation cell d={cell['d']} "
+                         f"n={cell['n_clients']} lost bit-identity")
+    if not fresh.get("bit_identical", False):
+        fails.append("fresh aggregation cell is not bit-identical to the "
+                     "seed path")
+    ref = next((c for c in tracked["cells"]
+                if (c["d"], c["n_clients"], c["vote_mode"]) ==
+                   (fresh["d"], fresh["n_clients"], fresh["vote_mode"])), None)
+    if ref is None:
+        fails.append("tracked aggregation baseline lacks the smoke cell")
+    elif not _band(fresh["engine_s"], ref["engine_s"]):
+        fails.append(f"aggregation engine_s {fresh['engine_s']} outside "
+                     f"{WALL_TOL}x band of tracked {ref['engine_s']}")
+    return fails
+
+
+def compare_dataplane(tracked: dict, fresh: dict) -> list:
+    fails = []
+    ref = next((c for c in tracked["cells"]
+                if c["loss"] == 0.0 and c["participation"] == 1.0), None)
+    if ref is None:
+        return ["tracked dataplane baseline lacks the lossless cell"]
+    cell = fresh["lossless"]
+    if abs(cell["final_acc"] - ref["final_acc"]) > ACC_TOL:
+        fails.append(f"dataplane lossless final_acc: fresh "
+                     f"{cell['final_acc']} != tracked {ref['final_acc']} "
+                     f"(tol {ACC_TOL})")
+    for k in ("traffic_mb", "wall_clock_s"):
+        if cell[k] != ref[k]:
+            fails.append(f"dataplane lossless {k}: fresh {cell[k]} != "
+                         f"tracked {ref[k]}")
+    if cell["final_acc"] != fresh["memory_acc"]:
+        fails.append(f"lossless packet transport diverged from in-memory: "
+                     f"{cell['final_acc']} != {fresh['memory_acc']}")
+    if ref["final_acc"] != tracked["memory_transport_acc"]:
+        fails.append("tracked dataplane lossless cell != tracked "
+                     "memory-transport acc")
+    thr_t = tracked["throughput"]["packets_per_s"]
+    thr_f = fresh["throughput"]["packets_per_s"]
+    if thr_f < thr_t / WALL_TOL:
+        fails.append(f"dataplane throughput {thr_f} pkts/s below "
+                     f"tracked/{WALL_TOL} ({thr_t}/{WALL_TOL})")
+    return fails
+
+
+def compare_sweep(tracked: dict, fresh: dict) -> list:
+    fails = []
+    t_cells = {(c["scenario"], c["seed"]): c for c in tracked["cells"]}
+    f_cells = {(c["scenario"], c["seed"]): c for c in fresh["cells"]}
+    if set(t_cells) != set(f_cells):
+        fails.append(f"sweep grid changed: tracked {sorted(t_cells)} != "
+                     f"fresh {sorted(f_cells)}")
+        return fails
+    for key, tc in t_cells.items():
+        fc = f_cells[key]
+        if abs(fc["final_acc"] - tc["final_acc"]) > ACC_TOL:
+            fails.append(f"sweep cell {key} final_acc: fresh "
+                         f"{fc['final_acc']} != tracked {tc['final_acc']} "
+                         f"(tol {ACC_TOL})")
+        for k in ("traffic_mb", "wall_clock_s"):
+            if fc[k] != tc[k]:
+                fails.append(f"sweep cell {key} {k}: fresh {fc[k]} != "
+                             f"tracked {tc[k]}")
+        if not fc.get("bit_identical", False):
+            fails.append(f"sweep cell {key} lost fleet/sequential "
+                         "bit-identity")
+    floor = max(1.2, tracked["speedup"] / WALL_TOL)
+    if fresh["speedup"] < floor:
+        fails.append(f"sweep fleet speedup {fresh['speedup']} below floor "
+                     f"{floor:.2f} (tracked {tracked['speedup']})")
+    return fails
+
+
+COMPARATORS = {
+    "aggregation": compare_aggregation,
+    "dataplane": compare_dataplane,
+    "sweep": compare_sweep,
+}
+
+
+def inject_drift(tracked: dict) -> dict:
+    """Perturb every tracked baseline; the gate must catch each one."""
+    drifted = copy.deepcopy(tracked)
+    drifted["aggregation"]["cells"][0]["bit_identical"] = False
+    cell = next(c for c in drifted["dataplane"]["cells"]
+                if c["loss"] == 0.0 and c["participation"] == 1.0)
+    cell["final_acc"] = round(cell["final_acc"] + 0.013, 4)
+    drifted["sweep"]["cells"][0]["traffic_mb"] = round(
+        drifted["sweep"]["cells"][0]["traffic_mb"] * 1.01, 6)
+    return drifted
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fresh-out", default=None,
+                    help="save freshly computed payloads to this JSON")
+    ap.add_argument("--fresh-in", default=None,
+                    help="reuse saved fresh payloads (skip recompute)")
+    ap.add_argument("--inject-drift", action="store_true",
+                    help="perturb the tracked baselines; gate must go red")
+    args = ap.parse_args(argv)
+
+    tracked = {}
+    for name, path in TRACKED.items():
+        if not os.path.exists(path):
+            print(f"GATE {name}: FAIL tracked baseline missing ({path})")
+            return 1
+        with open(path) as fh:
+            tracked[name] = json.load(fh)
+
+    if args.fresh_in:
+        with open(args.fresh_in) as fh:
+            fresh = json.load(fh)
+    else:
+        fresh = compute_fresh(tracked)
+    if args.fresh_out:
+        with open(args.fresh_out, "w") as fh:
+            json.dump(fresh, fh, indent=2)
+
+    if args.inject_drift:
+        tracked = inject_drift(tracked)
+
+    rc = 0
+    for name, comparator in COMPARATORS.items():
+        fails = comparator(tracked[name], fresh[name])
+        if fails:
+            rc = 1
+            for f in fails:
+                print(f"GATE {name}: FAIL {f}")
+        else:
+            print(f"GATE {name}: ok")
+    return rc
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

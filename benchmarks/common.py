@@ -1,59 +1,43 @@
-"""Shared benchmark scaffolding: data, FL runs, CSV emission."""
+"""Shared benchmark scaffolding: sweep runs, smoke plumbing, CSV emission.
+
+Since the sweep engine (DESIGN.md §10) the FL benchmarks are declarative:
+each figure pulls its cells from the registry grids
+(``repro.sweep.grids``) — or builds them with
+``repro.sweep.grids.algo_scenario`` — and hands them to
+``fleet_histories``, where same-shape scenarios batch through one
+compiled round program instead of paying a fresh XLA compile per cell.
+The fleet's bit-identity oracle is ``repro.sweep.run_cell_sequential``
+(pinned in ``tests/test_sweep.py``).
+"""
 
 from __future__ import annotations
 
-import functools
 import os
+import tempfile
 import time
 
-from repro.core.fediac import FediACConfig
-from repro.data import classification, partition_dirichlet, partition_iid
-from repro.switch import SwitchProfile
-from repro.training import FLConfig, run_federated
+from repro.sweep import run_sweep
 
 RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results")
-N_CLIENTS = 20
-ROUNDS = 40
+
+# A tiny task every section's --smoke mode shares: compile-bound, seconds.
+SMOKE_TASK = dict(n_clients=4, rounds=2, local_steps=2, batch=8,
+                  hidden=(16,), data_n=600, data_dim=16, data_classes=6)
 
 
-@functools.lru_cache(maxsize=None)
-def task_data(seed: int = 0, n: int = 8000):
-    data = classification(n=n, dim=48, n_classes=10, seed=seed)
-    return data.test_split(0.2)
+def smoke_out_path(out_path: str, tracked_default: str, filename: str) -> str:
+    """Where a --smoke run may write: never the tracked repo-root baseline.
+    Returns ``out_path`` unless it is the tracked default, in which case
+    the output is redirected to ``filename`` in the temp dir."""
+    if os.path.abspath(out_path) == os.path.abspath(tracked_default):
+        return os.path.join(tempfile.gettempdir(), filename)
+    return out_path
 
 
-@functools.lru_cache(maxsize=None)
-def clients_for(dist: str, beta: float = 0.5, seed: int = 0, n_clients: int = N_CLIENTS):
-    train, _ = task_data(seed)
-    if dist == "iid":
-        return tuple(partition_iid(train, n_clients, seed))
-    return tuple(partition_dirichlet(train, n_clients, beta=beta, seed=seed))
-
-
-ALGOS = {
-    "fediac": dict(aggregator="fediac",
-                   agg_kwargs={"cfg": FediACConfig(a=3, bits=12, k_frac=0.05,
-                                                   capacity_frac=0.05)}),
-    "switchml": dict(aggregator="switchml", agg_kwargs={"bits": 12}),
-    "libra": dict(aggregator="libra", agg_kwargs={"k_frac": 0.01, "hot_frac": 0.01}),
-    "omnireduce": dict(aggregator="omnireduce", agg_kwargs={"k_frac": 0.05}),
-    "topk": dict(aggregator="topk", agg_kwargs={"k_frac": 0.01}),
-    "fedavg": dict(aggregator="fedavg", agg_kwargs={}),
-}
-
-
-def run_algo(name: str, *, dist: str = "noniid", beta: float = 0.5,
-             switch: str = "high", rounds: int = ROUNDS, seed: int = 0,
-             n_clients: int = N_CLIENTS, **overrides):
-    _, test = task_data(seed)
-    clients = list(clients_for(dist, beta, seed, n_clients))
-    spec = dict(ALGOS[name])
-    spec["agg_kwargs"] = {**spec["agg_kwargs"], **overrides.pop("agg_kwargs", {})}
-    profile = SwitchProfile.high() if switch == "high" else SwitchProfile.low()
-    cfg = FLConfig(n_clients=n_clients, rounds=rounds, local_steps=5,
-                   switch=profile, local_train_s=0.1, seed=seed,
-                   **spec, **overrides)
-    return run_federated(clients, test, cfg)
+def fleet_histories(specs, seeds=(0,)):
+    """Run cells through the fleet runner; {(spec.name, seed): FLHistory}."""
+    out = run_sweep(specs, seeds)
+    return {(c.spec.name, c.seed): c.history for c in out}
 
 
 def emit(rows):

@@ -5,12 +5,12 @@ Two parts, both written to the tracked ``BENCH_dataplane.json``:
 
 * **throughput** — packets/second the vectorized timeline engine pushes
   through the M/G/1 register-window drain (the simulator's own hot path).
-* **grid** — a small FediAC FL task run through ``PacketTransport`` for
-  every (loss, participation) cell: loss ∈ {0, 1%, 5%} ×
-  participation ∈ {1.0, 0.5, 0.25}; final accuracy, simulated wall-clock
-  and traffic per cell.  The lossless full-participation cell doubles as
-  a standing regression check: its accuracy must be *identical* to the
-  in-memory transport (bit-equal rounds).
+* **grid** — the FediAC loss x participation grid from the sweep registry
+  (``repro.sweep.grids.dataplane_grid``), executed through ``run_sweep`` —
+  packet-transport cells take the runner's sequential fallback.  The
+  lossless full-participation cell doubles as a standing regression check:
+  its accuracy must be *identical* to the in-memory transport (bit-equal
+  rounds).
 
   PYTHONPATH=src python -m benchmarks.dataplane [--smoke] [--out PATH]
 """
@@ -21,17 +21,16 @@ import argparse
 import json
 import os
 import time
+from dataclasses import replace
 
 import numpy as np
 
-from repro.core.fediac import FediACConfig
-from repro.data import classification, partition_dirichlet
-from repro.netsim import NetConfig
+from repro.sweep import run_sweep
+from repro.sweep.grids import dataplane_grid
+from repro.switch import client_rates
 from repro.netsim.timeline import poisson_arrivals, windowed_drain
-from repro.switch import SwitchProfile, client_rates
-from repro.training import FLConfig, run_federated
 
-from .common import emit
+from .common import emit, smoke_out_path
 
 OUT_PATH = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
                         "BENCH_dataplane.json")
@@ -57,29 +56,17 @@ def packet_throughput(n_packets: int = 500_000, reps: int = 3) -> dict:
             "packets_per_s": round(st.n_packets / dt)}
 
 
-def _task(n_clients: int, seed: int = 0):
-    data = classification(n=3000, dim=32, n_classes=10, seed=seed)
-    train, test = data.test_split(0.25)
-    return partition_dirichlet(train, n_clients, beta=0.5, seed=seed), test
-
-
-def accuracy_cell(clients, test, *, loss: float, participation: float,
-                  rounds: int, transport: str = "packet") -> dict:
-    cfg = FLConfig(n_clients=len(clients), rounds=rounds, local_steps=3,
-                   aggregator="fediac",
-                   agg_kwargs={"cfg": FediACConfig(a=2, bits=12)},
-                   switch=SwitchProfile.high(), transport=transport,
-                   net=NetConfig(loss=loss, participation=participation,
-                                 seed=0),
-                   seed=0)
-    h = run_federated(clients, test, cfg)
-    return {"loss": loss, "participation": participation,
-            "final_acc": round(h.acc[-1], 4),
-            "wall_clock_s": round(h.wall_clock[-1], 3),
-            "traffic_mb": round(h.traffic_mb[-1], 3)}
+def _cell_dict(spec, hist) -> dict:
+    return {"loss": spec.loss, "participation": spec.participation,
+            "final_acc": round(hist.acc[-1], 4),
+            "wall_clock_s": round(hist.wall_clock[-1], 3),
+            "traffic_mb": round(hist.traffic_mb[-1], 3)}
 
 
 def run(*, smoke: bool = False, out_path: str = OUT_PATH):
+    if smoke:
+        out_path = smoke_out_path(out_path, OUT_PATH,
+                                  "BENCH_dataplane.smoke.json")
     rounds = 2 if smoke else ROUNDS
     losses = LOSS_GRID[:1] + LOSS_GRID[-1:] if smoke else LOSS_GRID
     parts = PART_GRID[:1] + PART_GRID[-1:] if smoke else PART_GRID
@@ -87,20 +74,24 @@ def run(*, smoke: bool = False, out_path: str = OUT_PATH):
     rows = [("dataplane/throughput_pkts_per_s", thr["packets_per_s"],
              f"n={thr['n_packets']}")]
 
-    clients, test = _task(N_CLIENTS)
-    mem = accuracy_cell(clients, test, loss=0.0, participation=1.0,
-                        rounds=rounds, transport="memory")
+    specs = [replace(s, rounds=rounds) for s in dataplane_grid(losses, parts)
+             if not (smoke and not (s.loss == losses[0]
+                                    or s.participation == parts[0]))]
+    mem_spec = replace(specs[0], name="dataplane-memory", transport="memory",
+                       loss=0.0, participation=1.0)
+    result = run_sweep(specs + [mem_spec], (0,))
+    by_key = {(c.spec.loss, c.spec.participation, c.spec.transport): c.history
+              for c in result}
+    mem = _cell_dict(mem_spec, by_key[(0.0, 1.0, "memory")])
+
     cells = []
-    for loss in losses:
-        for part in parts:
-            if smoke and not (loss == losses[0] or part == parts[0]):
-                continue
-            cell = accuracy_cell(clients, test, loss=loss,
-                                 participation=part, rounds=rounds)
-            cells.append(cell)
-            rows.append((f"dataplane/acc/loss{loss}/part{part}",
-                         cell["final_acc"],
-                         f"wall={cell['wall_clock_s']}s_mb={cell['traffic_mb']}"))
+    for spec in specs:
+        cell = _cell_dict(spec, by_key[(spec.loss, spec.participation,
+                                        "packet")])
+        cells.append(cell)
+        rows.append((f"dataplane/acc/loss{spec.loss}/part{spec.participation}",
+                     cell["final_acc"],
+                     f"wall={cell['wall_clock_s']}s_mb={cell['traffic_mb']}"))
     lossless = next(c for c in cells
                     if c["loss"] == 0.0 and c["participation"] == 1.0)
     rows.append(("dataplane/lossless_equals_memory",

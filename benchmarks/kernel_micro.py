@@ -11,9 +11,9 @@ from repro.kernels import ops, ref
 from .common import emit, timed
 
 
-def run():
+def run(*, smoke: bool = False):
     rows = []
-    d = 1_048_576
+    d = 65_536 if smoke else 1_048_576
     key = jax.random.PRNGKey(0)
     mask = (jax.random.uniform(key, (d,)) < 0.05).astype(jnp.uint8)
     packed = ops.pack_votes(mask)

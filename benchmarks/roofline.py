@@ -22,7 +22,7 @@ def load_records(d: str = DRYRUN_DIR):
     return recs
 
 
-def run():
+def run(*, smoke: bool = False):
     rows = []
     for r in load_records():
         tag = f"roofline/{r['arch']}/{r['shape']}/{r.get('mesh', '?')}"

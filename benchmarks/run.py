@@ -1,9 +1,12 @@
 """Benchmark harness entry point — one section per paper table/figure.
 
-  PYTHONPATH=src python -m benchmarks.run [--only fig2,tables,...]
+  PYTHONPATH=src python -m benchmarks.run [--only fig2,tables,...] [--smoke]
 
 Prints ``name,value,derived`` CSV rows (see each module's docstring for the
-paper artifact it reproduces).
+paper artifact it reproduces).  ``--smoke`` runs every section on a tiny
+budget (seconds per section; sections that normally write tracked
+``BENCH_*.json`` files write to a temp path instead) — the registry test
+exercises exactly this mode.
 """
 
 from __future__ import annotations
@@ -14,7 +17,7 @@ import time
 
 from . import (accuracy_vs_time, aggregation_ops, aggregation_round,
                compression_error, dataplane, kernel_micro, noniid, roofline,
-               traffic, vote_threshold)
+               sweep, traffic, vote_threshold)
 from .common import emit
 
 SECTIONS = {
@@ -27,6 +30,7 @@ SECTIONS = {
     "kernels": kernel_micro.run,        # Pallas kernel micro
     "aggregation": aggregation_round.run,  # round-plan engine vs seed
     "dataplane": dataplane.run,         # packet dataplane: loss x participation
+    "sweep": sweep.run,                 # fleet runner vs sequential loop
     "roofline": roofline.run,           # dry-run roofline table
 }
 
@@ -35,13 +39,15 @@ def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma-separated section names " + str(list(SECTIONS)))
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny-budget run of every section (CI / registry test)")
     args = ap.parse_args(argv)
     names = args.only.split(",") if args.only else list(SECTIONS)
     print("name,value,derived")
     for name in names:
         t0 = time.time()
         try:
-            rows = SECTIONS[name]()
+            rows = SECTIONS[name](smoke=args.smoke)
         except Exception as e:  # keep the harness running; record the failure
             rows = [(f"{name}/ERROR", type(e).__name__, str(e)[:120])]
         emit(rows)

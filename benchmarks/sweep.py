@@ -1,0 +1,108 @@
+"""Sweep-engine benchmark: fleet throughput vs the sequential loop, with a
+per-cell bit-identity audit (DESIGN.md §10).
+
+Runs the registry smoke grid (K scenarios x S seeds) twice — once through
+the vmapped fleet program, once cell-by-cell through ``run_federated`` —
+and writes the tracked ``BENCH_sweep.json``: per-cell final accuracy and
+traffic (exact, deterministic — the regression gate pins them), the
+bit-identity flag of every cell, and the fleet/sequential throughput
+ratio.  The sequential loop pays one fresh XLA compile per cell; the fleet
+compiles once per scenario-signature group, which is where the speedup
+lives on a compile-bound grid.
+
+  PYTHONPATH=src python -m benchmarks.sweep [--smoke] [--out PATH]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+
+from repro.sweep import run_sweep, smoke_grid
+
+from .common import emit, smoke_out_path
+
+OUT_PATH = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                        "BENCH_sweep.json")
+
+SEEDS = (0, 1, 2, 3)
+
+
+def run(*, smoke: bool = False, out_path: str = OUT_PATH):
+    if smoke:
+        out_path = smoke_out_path(out_path, OUT_PATH, "BENCH_sweep.smoke.json")
+    seeds = SEEDS[:1] if smoke else SEEDS
+    specs = smoke_grid()
+    # warm the data cache so neither side pays the numpy data build
+    for spec in specs:
+        for seed in seeds:
+            spec.make_task(seed)
+
+    t0 = time.perf_counter()
+    seq = run_sweep(specs, seeds, sequential=True)
+    sequential_s = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    fleet = run_sweep(specs, seeds)
+    fleet_s = time.perf_counter() - t0
+
+    seq_by = seq.by_key()
+    cells, rows = [], []
+    for cr in fleet:
+        hs = seq_by[cr.key].history
+        hf = cr.history
+        bit_identical = (hs.acc == hf.acc and hs.loss == hf.loss
+                         and hs.wall_clock == hf.wall_clock
+                         and hs.traffic_mb == hf.traffic_mb)
+        cells.append({"scenario": cr.spec.name, "seed": cr.seed,
+                      "final_acc": round(hf.acc[-1], 6),
+                      "traffic_mb": round(hf.traffic_mb[-1], 6),
+                      "wall_clock_s": round(hf.wall_clock[-1], 4),
+                      "bit_identical": bool(bit_identical)})
+        rows.append((f"sweep/{cr.spec.name}/s{cr.seed}", cells[-1]["final_acc"],
+                     f"mb={cells[-1]['traffic_mb']}_"
+                     f"bitident={cells[-1]['bit_identical']}"))
+
+    n_cells = len(cells)
+    speedup = sequential_s / max(fleet_s, 1e-9)
+    rows.append(("sweep/cells", n_cells, f"grid=smoke_seeds={list(seeds)}"))
+    rows.append(("sweep/speedup_vs_sequential", round(speedup, 2),
+                 f"fleet={fleet_s:.2f}s_seq={sequential_s:.2f}s"))
+    rows.append(("sweep/bit_identical_all",
+                 int(all(c["bit_identical"] for c in cells)), "fleet==seq"))
+    payload = {
+        "benchmark": "sweep",
+        "backend": jax.default_backend(),
+        "grid": "smoke",
+        "seeds": list(seeds),
+        "n_cells": n_cells,
+        "cells": cells,
+        "sequential_s": round(sequential_s, 3),
+        "fleet_s": round(fleet_s, 3),
+        "speedup": round(speedup, 3),
+        "sequential_cells_per_s": round(n_cells / max(sequential_s, 1e-9), 4),
+        "fleet_cells_per_s": round(n_cells / max(fleet_s, 1e-9), 4),
+    }
+    with open(out_path, "w") as fh:
+        json.dump(payload, fh, indent=2)
+        fh.write("\n")
+    rows.append(("sweep/json", out_path, "written"))
+    return rows
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="single seed, temp output (CI)")
+    ap.add_argument("--out", default=OUT_PATH)
+    args = ap.parse_args(argv)
+    emit(run(smoke=args.smoke, out_path=args.out))
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -9,19 +9,29 @@ mechanism-level wire comparison at production scale lives in §Perf A2/A3.
 
 from __future__ import annotations
 
-from .common import emit, run_algo
+from repro.sweep.grids import algo_scenario
+
+from .common import SMOKE_TASK, emit, fleet_histories
 
 TARGET = {"iid": 0.80, "noniid": 0.72}
 ALGO_LIST = ("fediac", "switchml", "libra", "omnireduce")
 
 
-def run():
+def run(*, smoke: bool = False):
+    switches = ("high",) if smoke else ("high", "low")
+    dists = ("noniid",) if smoke else ("iid", "noniid")
+    algos = ALGO_LIST[:2] if smoke else ALGO_LIST
+    task = SMOKE_TASK if smoke else dict(rounds=60)
+    specs = [algo_scenario(algo, name=f"{switch}/{dist}/{algo}", dist=dist,
+                           switch=switch, **task)
+             for switch in switches for dist in dists for algo in algos]
+    hists = fleet_histories(specs)
     rows = []
-    for switch in ("high", "low"):
-        for dist in ("iid", "noniid"):
+    for switch in switches:
+        for dist in dists:
             mbs = {}
-            for algo in ALGO_LIST:
-                h = run_algo(algo, dist=dist, switch=switch, rounds=60)
+            for algo in algos:
+                h = hists[(f"{switch}/{dist}/{algo}", 0)]
                 mb = h.traffic_to_accuracy(TARGET[dist])
                 mbs[algo] = mb
                 rows.append((f"table/{switch}/{dist}/{algo}",

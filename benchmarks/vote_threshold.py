@@ -3,30 +3,37 @@ scale N.
 
 Claim validated: a in [5%N, 20%N] is a robust plateau; IID tolerates
 smaller a than non-IID.
-"""
+
+Cells come from ``repro.sweep.grids.fig4_grid``.  The vote threshold is a
+*dynamic* scalar of the fleet program, so all (dist x a) cells of one
+system scale N execute as a single vmapped batch — one compile per N
+instead of one per cell."""
 
 from __future__ import annotations
 
-from repro.core.fediac import FediACConfig
+from repro.sweep import ScenarioSpec
+from repro.sweep.grids import fig4_grid
 
-from .common import emit, run_algo
-
-A_FRACS = (0.05, 0.10, 0.15, 0.20, 0.35)
-NS = (10, 20, 30)
+from .common import SMOKE_TASK, emit, fleet_histories
 
 
-def run():
-    rows = []
-    for dist in ("iid", "noniid"):
-        for n in NS:
-            for af in A_FRACS:
-                a = max(1, round(af * n))
-                h = run_algo("fediac", dist=dist, switch="low", rounds=25,
-                             n_clients=n,
-                             agg_kwargs={"cfg": FediACConfig(a=a, bits=12)})
-                rows.append((f"fig4/{dist}/N={n}/a={af:.0%}N",
-                             round(h.acc[-1], 4), f"a={a}"))
-    return rows
+def _smoke_specs() -> list:
+    # the full-grid fractions all clamp to a=1 at the 4-client smoke task;
+    # use fractions that resolve to DISTINCT thresholds (a=1 vs a=2) so the
+    # dynamic-threshold fleet axis is actually exercised.
+    n = SMOKE_TASK["n_clients"]
+    return [ScenarioSpec(name=f"noniid/N={n}/a={af:.0%}N", algorithm="fediac",
+                         a=max(1, round(af * n)), bits=12, dist="noniid",
+                         switch="low", **SMOKE_TASK)
+            for af in (0.25, 0.5)]
+
+
+def run(*, smoke: bool = False):
+    specs = _smoke_specs() if smoke else fig4_grid()
+    hists = fleet_histories(specs)
+    return [(f"fig4/{spec.name}", round(hists[(spec.name, 0)].acc[-1], 4),
+             f"a={spec.a}")
+            for spec in specs]
 
 
 if __name__ == "__main__":

@@ -5,15 +5,19 @@ hundred rounds through the in-network switch simulator; FediAC is compared
 against SwitchML and dense FedAvg on accuracy, wall-clock (M/G/1 queuing
 model of the PS) and traffic.
 
+The three algorithms run through the sweep engine (``repro.sweep``): each
+is one :class:`ScenarioSpec` cell, and same-shape cells batch through one
+vmapped round program instead of re-compiling per algorithm.  Pass
+``--seeds 3`` to sweep seeds too (mean +- spread across the fleet axis).
+
   PYTHONPATH=src python examples/fl_noniid.py [--rounds 150] [--low-perf]
 """
 
 import argparse
 
-from repro.core.fediac import FediACConfig
-from repro.data import classification, partition_dirichlet
-from repro.switch import SwitchProfile
-from repro.training import FLConfig, run_federated
+import numpy as np
+
+from repro.sweep import ScenarioSpec, run_sweep
 
 
 def main():
@@ -21,28 +25,34 @@ def main():
     ap.add_argument("--rounds", type=int, default=150)
     ap.add_argument("--clients", type=int, default=20)
     ap.add_argument("--beta", type=float, default=0.5)
+    ap.add_argument("--seeds", type=int, default=1,
+                    help="number of seeds to sweep (fleet axis)")
     ap.add_argument("--low-perf", action="store_true",
                     help="use the low-performance switch profile")
     args = ap.parse_args()
 
-    data = classification(n=12_000, dim=48, n_classes=10, seed=0)
-    train, test = data.test_split(0.2)
-    clients = partition_dirichlet(train, args.clients, beta=args.beta, seed=0)
-    switch = SwitchProfile.low() if args.low_perf else SwitchProfile.high()
+    task = dict(n_clients=args.clients, rounds=args.rounds, local_steps=5,
+                beta=args.beta, dist="noniid", data_n=12_000,
+                switch="low" if args.low_perf else "high",
+                local_train_s=0.1)
+    specs = [
+        ScenarioSpec(name="fediac", algorithm="fediac", a=3, bits=12, **task),
+        ScenarioSpec(name="switchml", algorithm="switchml",
+                     agg_overrides=(("bits", 12),), **task),
+        ScenarioSpec(name="fedavg", algorithm="fedavg", **task),
+    ]
+    result = run_sweep(specs, tuple(range(args.seeds)))
 
-    algos = {
-        "fediac": dict(aggregator="fediac",
-                       agg_kwargs={"cfg": FediACConfig(a=3, bits=12)}),
-        "switchml": dict(aggregator="switchml", agg_kwargs={"bits": 12}),
-        "fedavg": dict(aggregator="fedavg", agg_kwargs={}),
-    }
     print(f"{'algo':10s} {'final acc':>9s} {'wall clock':>11s} {'traffic':>10s}")
-    for name, spec in algos.items():
-        cfg = FLConfig(n_clients=args.clients, rounds=args.rounds, local_steps=5,
-                       switch=switch, local_train_s=0.1, seed=0, **spec)
-        h = run_federated(clients, test, cfg)
-        print(f"{name:10s} {h.acc[-1]:9.4f} {h.wall_clock[-1]:10.1f}s "
-              f"{h.traffic_mb[-1]:9.1f}MB")
+    for spec in specs:
+        accs = [c.history.acc[-1] for c in result if c.spec.name == spec.name]
+        cell = next(c for c in result
+                    if c.spec.name == spec.name and c.seed == 0)
+        h = cell.history
+        spread = (f" (+-{np.std(accs):.4f} over {len(accs)} seeds)"
+                  if len(accs) > 1 else "")
+        print(f"{spec.name:10s} {h.acc[-1]:9.4f} {h.wall_clock[-1]:10.1f}s "
+              f"{h.traffic_mb[-1]:9.1f}MB{spread}")
 
 
 if __name__ == "__main__":

@@ -8,7 +8,6 @@ from __future__ import annotations
 
 import os
 
-import jax
 import numpy as np
 from jax.tree_util import DictKey, SequenceKey, tree_flatten_with_path, tree_unflatten
 

@@ -8,7 +8,6 @@ instantiating their exact published shape, plus a ``smoke()`` reduction
 
 from __future__ import annotations
 
-import dataclasses
 from dataclasses import dataclass, field, replace
 from typing import Tuple
 

@@ -10,7 +10,20 @@ benchmarks can swap them for FediAC:
 ``SwitchLoad`` carries what the PS simulator needs to price the round
 (aggregation slot-additions, per-client packet counts).
 
-Implemented per paper Sec. V-A3:
+Every algorithm is internally split into a **numeric core** and a **wire
+account** (the sweep engine's contract, DESIGN.md §10):
+
+  * ``core(u_stack, state, key, dyn)`` is a pure jax function returning
+    ``(delta, residuals, state, aux)`` — safe to ``jit``/``vmap`` along a
+    leading fleet axis.  ``dyn`` carries per-scenario traced scalars (today:
+    FediAC's vote threshold ``a``); ``aux`` carries the few data-dependent
+    integers the wire account needs (today: OmniReduce's block counts).
+  * ``account(n, d, aux)`` runs in Python and prices the round
+    (:class:`TrafficStats`, :class:`SwitchLoad`) from static config plus the
+    ``aux`` integers.
+
+The classic eager interface above is the composition of the two, so the
+split changes no values.  Implemented per paper Sec. V-A3:
   * SwitchML  [Sapio et al., NSDI'21]  — dense b-bit integer quantization.
   * Top-k + server ("topk")            — classic sparsification; indices do
     NOT align at the PS (the motivation example), so every (idx, val) pair
@@ -28,11 +41,12 @@ from dataclasses import dataclass
 import jax
 import jax.numpy as jnp
 
-from .fediac import FediACConfig, TrafficStats, aggregate_stack
+from .fediac import FediACConfig, TrafficStats, aggregate_stack, round_traffic
 from .quantize import quantize, dequantize, scale_factor
 
 __all__ = ["SwitchLoad", "fedavg", "switchml", "topk_server", "omnireduce",
-           "libra", "fediac_round", "make_aggregator", "make_transport"]
+           "libra", "fediac_round", "make_aggregator", "make_aggregator_core",
+           "make_transport"]
 
 
 @dataclass(frozen=True)
@@ -54,49 +68,64 @@ def _topk_mask(u: jax.Array, k: int) -> jax.Array:
 
 
 # ---------------------------------------------------------------------------
+# cores: pure-jax round math (vmappable), aux = data-dependent wire scalars
+# ---------------------------------------------------------------------------
 
-def fedavg(u_stack, state, key, **_):
-    n, d = u_stack.shape
+def _fedavg_core(u_stack, state, key, dyn):
     delta = u_stack.mean(axis=0)
+    return delta, jnp.zeros_like(u_stack), state, {}
+
+
+def _fedavg_account(n: int, d: int, aux):
     traffic = TrafficStats(phase1_bytes=0, phase2_bytes=4 * d, dense_bytes=4 * d,
                            selected=d)
-    load = SwitchLoad(slot_adds=n * d, packets_per_client=_packets(4 * d), aligned=True)
-    return delta, jnp.zeros_like(u_stack), state, traffic, load
+    load = SwitchLoad(slot_adds=n * d, packets_per_client=_packets(4 * d),
+                      aligned=True)
+    return traffic, load
 
 
-def switchml(u_stack, state, key, *, bits: int = 12, **_):
-    """Dense unbiased integer quantization, aligned pipelined aggregation."""
-    n, d = u_stack.shape
+def _switchml_core(u_stack, state, key, dyn, *, bits: int = 12):
+    n, _ = u_stack.shape
     m = jnp.clip(jnp.max(jnp.abs(u_stack)), 1e-12, None)
     f = scale_factor(bits, n, 1.0) / m
     uni = jax.random.uniform(key, u_stack.shape)
     q = quantize(u_stack, f, uni)
     delta = dequantize(q.sum(axis=0), f) / n
     # SwitchML streams b-bit slots; no error feedback (quantizer is unbiased).
+    return delta, jnp.zeros_like(u_stack), state, {}
+
+
+def _switchml_account(n: int, d: int, aux, *, bits: int = 12):
     bytes_pc = d * bits // 8
     traffic = TrafficStats(phase1_bytes=0, phase2_bytes=bytes_pc,
                            dense_bytes=4 * d, selected=d)
-    load = SwitchLoad(slot_adds=n * d, packets_per_client=_packets(bytes_pc), aligned=True)
-    return delta, jnp.zeros_like(u_stack), state, traffic, load
+    load = SwitchLoad(slot_adds=n * d, packets_per_client=_packets(bytes_pc),
+                      aligned=True)
+    return traffic, load
 
 
-def topk_server(u_stack, state, key, *, k_frac: float = 0.01, **_):
-    """Per-client Top-k; indices differ per client -> PS cannot align."""
-    n, d = u_stack.shape
+def _topk_core(u_stack, state, key, dyn, *, k_frac: float = 0.01):
+    _, d = u_stack.shape
     k = max(1, int(k_frac * d))
     masks = jax.vmap(lambda u: _topk_mask(u, k))(u_stack)
     sparse = u_stack * masks
     delta = sparse.mean(axis=0)
     residuals = u_stack - sparse
+    return delta, residuals, state, {}
+
+
+def _topk_account(n: int, d: int, aux, *, k_frac: float = 0.01):
+    k = max(1, int(k_frac * d))
     bytes_pc = k * 8  # (int32 index, fp32 value) pairs
     traffic = TrafficStats(phase1_bytes=0, phase2_bytes=bytes_pc,
                            dense_bytes=4 * d, selected=k)
-    load = SwitchLoad(slot_adds=n * k, packets_per_client=_packets(bytes_pc), aligned=False)
-    return delta, residuals, state, traffic, load
+    load = SwitchLoad(slot_adds=n * k, packets_per_client=_packets(bytes_pc),
+                      aligned=False)
+    return traffic, load
 
 
-def omnireduce(u_stack, state, key, *, k_frac: float = 0.05, block: int = 256, **_):
-    """Top-k sparsify, then upload any block containing a non-zero."""
+def _omnireduce_core(u_stack, state, key, dyn, *, k_frac: float = 0.05,
+                     block: int = 256):
     n, d = u_stack.shape
     k = max(1, int(k_frac * d))
     pad = (-d) % block
@@ -107,24 +136,27 @@ def omnireduce(u_stack, state, key, *, k_frac: float = 0.05, block: int = 256, *
     mp = jnp.pad(masks, ((0, 0), (0, pad)))
     blocks_nz = (mp.reshape(n, -1, block).max(axis=-1) > 0)
     blocks_per_client = blocks_nz.sum(axis=-1)
-    avg_blocks = int(jnp.ceil(blocks_per_client.astype(jnp.float32).mean()))
+    avg_blocks = jnp.ceil(blocks_per_client.astype(jnp.float32).mean()
+                          ).astype(jnp.int32)
+    aux = {"avg_blocks": avg_blocks,
+           "nz_blocks": blocks_nz.sum().astype(jnp.int32)}
+    return delta, residuals, state, aux
+
+
+def _omnireduce_account(n: int, d: int, aux, *, k_frac: float = 0.05,
+                        block: int = 256):
+    avg_blocks = int(aux["avg_blocks"])
     bytes_pc = avg_blocks * (block * 4 + 4)  # block payload + block id
     traffic = TrafficStats(phase1_bytes=0, phase2_bytes=bytes_pc,
                            dense_bytes=4 * d, selected=avg_blocks * block)
-    load = SwitchLoad(slot_adds=int(blocks_nz.sum()) * block,
+    load = SwitchLoad(slot_adds=int(aux["nz_blocks"]) * block,
                       packets_per_client=_packets(bytes_pc), aligned=True)
-    return delta, residuals, state, traffic, load
+    return traffic, load
 
 
-def libra(u_stack, state, key, *, k_frac: float = 0.01, hot_frac: float = 0.01, **_):
-    """Hot/cold split: a slowly-updated global hot set is aggregated in-network
-    (aligned, shared indices); per-client cold top-k overflow goes to a server.
-
-    ``state`` is an EMA of coordinate 'heat' |u| used to predict the hot set —
-    standing in for libra's offline pre-training predictor (whose cost the
-    paper also excludes).
-    """
-    n, d = u_stack.shape
+def _libra_core(u_stack, state, key, dyn, *, k_frac: float = 0.01,
+                hot_frac: float = 0.01):
+    _, d = u_stack.shape
     k = max(1, int(k_frac * d))
     h = max(1, int(hot_frac * d))
     heat = jnp.abs(u_stack).mean(axis=0) if state is None else state
@@ -140,21 +172,97 @@ def libra(u_stack, state, key, *, k_frac: float = 0.01, hot_frac: float = 0.01, 
     delta = uploaded.mean(axis=0)
     residuals = u_stack - uploaded
     new_state = 0.9 * heat + 0.1 * jnp.abs(u_stack).mean(axis=0)
+    return delta, residuals, new_state, {}
+
+
+def _libra_account(n: int, d: int, aux, *, k_frac: float = 0.01,
+                   hot_frac: float = 0.01):
+    k = max(1, int(k_frac * d))
+    h = max(1, int(hot_frac * d))
     bytes_pc = h * 4 + k * 8
     traffic = TrafficStats(phase1_bytes=0, phase2_bytes=bytes_pc,
                            dense_bytes=4 * d, selected=h + k)
-    load = SwitchLoad(slot_adds=n * h, packets_per_client=_packets(bytes_pc), aligned=True)
-    return delta, residuals, new_state, traffic, load
+    load = SwitchLoad(slot_adds=n * h, packets_per_client=_packets(bytes_pc),
+                      aligned=True)
+    return traffic, load
 
 
-def fediac_round(u_stack, state, key, *, cfg: FediACConfig = FediACConfig(), **_):
-    """FediAC wrapped in the common interface."""
-    n, d = u_stack.shape
-    delta, residuals, counts, traffic = aggregate_stack(u_stack, cfg, key)
+def _fediac_core(u_stack, state, key, dyn, *, cfg: FediACConfig = FediACConfig()):
+    delta, residuals, counts, _ = aggregate_stack(u_stack, cfg, key,
+                                                  a=dyn.get("a"))
+    return delta, residuals, state, {}
+
+
+def _fediac_account(n: int, d: int, aux, *, cfg: FediACConfig = FediACConfig()):
+    traffic = round_traffic(cfg, d)
     load = SwitchLoad(
         slot_adds=n * (d // cfg.vote_chunk) // 8 + n * traffic.selected,
         packets_per_client=_packets(traffic.total_bytes), aligned=True)
+    return traffic, load
+
+
+_CORES = {
+    "fedavg": (_fedavg_core, _fedavg_account),
+    "switchml": (_switchml_core, _switchml_account),
+    "topk": (_topk_core, _topk_account),
+    "omnireduce": (_omnireduce_core, _omnireduce_account),
+    "libra": (_libra_core, _libra_account),
+    "fediac": (_fediac_core, _fediac_account),
+}
+
+
+def _run_eager(name, u_stack, state, key, **kwargs):
+    """The classic eager interface: core, then account on the aux ints."""
+    core, account = _CORES[name]
+    delta, residuals, state, aux = core(u_stack, state, key, {}, **kwargs)
+    aux = {k: int(v) for k, v in aux.items()}
+    n, d = u_stack.shape
+    traffic, load = account(n, d, aux, **kwargs)
     return delta, residuals, state, traffic, load
+
+
+# ---------------------------------------------------------------------------
+# public eager interface (unchanged semantics)
+# ---------------------------------------------------------------------------
+
+def fedavg(u_stack, state, key, **_):
+    return _run_eager("fedavg", u_stack, state, key)
+
+
+def switchml(u_stack, state, key, *, bits: int = 12, **_):
+    """Dense unbiased integer quantization, aligned pipelined aggregation."""
+    return _run_eager("switchml", u_stack, state, key, bits=bits)
+
+
+def topk_server(u_stack, state, key, *, k_frac: float = 0.01, **_):
+    """Per-client Top-k; indices differ per client -> PS cannot align."""
+    return _run_eager("topk", u_stack, state, key, k_frac=k_frac)
+
+
+def omnireduce(u_stack, state, key, *, k_frac: float = 0.05, block: int = 256,
+               **_):
+    """Top-k sparsify, then upload any block containing a non-zero."""
+    return _run_eager("omnireduce", u_stack, state, key, k_frac=k_frac,
+                      block=block)
+
+
+def libra(u_stack, state, key, *, k_frac: float = 0.01, hot_frac: float = 0.01,
+          **_):
+    """Hot/cold split: a slowly-updated global hot set is aggregated in-network
+    (aligned, shared indices); per-client cold top-k overflow goes to a server.
+
+    ``state`` is an EMA of coordinate 'heat' |u| used to predict the hot set —
+    standing in for libra's offline pre-training predictor (whose cost the
+    paper also excludes).
+    """
+    return _run_eager("libra", u_stack, state, key, k_frac=k_frac,
+                      hot_frac=hot_frac)
+
+
+def fediac_round(u_stack, state, key, *, cfg: FediACConfig = FediACConfig(),
+                 **_):
+    """FediAC wrapped in the common interface."""
+    return _run_eager("fediac", u_stack, state, key, cfg=cfg)
 
 
 _REGISTRY = {
@@ -176,6 +284,28 @@ def make_aggregator(name: str, **kwargs):
 
     agg.__name__ = name
     return agg
+
+
+def make_aggregator_core(name: str, **kwargs):
+    """Bind kwargs onto the (core, account) pair of a registered algorithm.
+
+    Returns ``(core, account)`` where ``core(u_stack, state, key, dyn)`` is
+    the pure-jax round math (vmappable along a leading fleet axis; ``dyn``
+    holds per-scenario traced scalars such as FediAC's vote threshold
+    ``{"a": int32}``) and ``account(n, d, aux)`` prices the round in Python
+    from the ``aux`` integers ``core`` returned.
+    """
+    core, account = _CORES[name]
+
+    def bound_core(u_stack, state, key, dyn):
+        return core(u_stack, state, key, dyn, **kwargs)
+
+    def bound_account(n, d, aux):
+        return account(n, d, aux, **kwargs)
+
+    bound_core.__name__ = f"{name}_core"
+    bound_account.__name__ = f"{name}_account"
+    return bound_core, bound_account
 
 
 def make_transport(name: str, *, transport: str = "memory", net=None,

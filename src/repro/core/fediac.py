@@ -280,12 +280,17 @@ def scatter_sum(summed_q: jax.Array, idx_c: jax.Array, keep_c: jax.Array,
 # Reference: stacked [N, d] aggregation (Algo. 1, the FL-simulator path)
 # ---------------------------------------------------------------------------
 
-def aggregate_stack(u_stack: jax.Array, cfg: FediACConfig, key: jax.Array):
+def aggregate_stack(u_stack: jax.Array, cfg: FediACConfig, key: jax.Array,
+                    *, a=None):
     """Run one FediAC round over N stacked client updates.
 
     u_stack: float32[N, d] — U_t^i = local update + carried residual.
     Returns (delta[d] — the *mean* update to apply to the global model,
              residuals[N, d], counts[d//g], TrafficStats).
+
+    ``a`` optionally overrides the vote threshold (may be a traced int32
+    scalar — the sweep engine batches threshold sweeps through one
+    compiled program; see :func:`repro.core.round_plan.build_round_plan`).
     """
     n, d = u_stack.shape
     keys = jax.random.split(key, 2 * n)
@@ -298,7 +303,7 @@ def aggregate_stack(u_stack: jax.Array, cfg: FediACConfig, key: jax.Array):
     # Phase 2: the consensus plan is built ONCE from the shared counts and
     # passed into every client's compress (the round-plan engine) — never
     # recomputed inside the vmap.
-    plan = build_round_plan(counts, cfg, n,
+    plan = build_round_plan(counts, cfg, n, a=a,
                             with_dense_mask=plan_wants_dense_mask(cfg))
     compress = phase2_compress(cfg)
     q_bufs, residuals = jax.vmap(

@@ -52,14 +52,21 @@ class RoundPlan(NamedTuple):
 
 
 def build_round_plan(counts: jax.Array, cfg, n_clients: int,
-                     *, with_dense_mask: bool = False) -> RoundPlan:
+                     *, a=None, with_dense_mask: bool = False) -> RoundPlan:
     """Run the once-per-round consensus selection from the vote counts.
 
     ``counts`` int32[d//g] psum'd votes; ``cfg`` a FediACConfig; the result
     is identical on every client because its inputs are (paper Sec. IV
     step 2 — the switch broadcasting the GIA).
+
+    ``a`` optionally overrides ``cfg.threshold(n_clients)`` and may be a
+    *traced* int32 scalar: the threshold only ever enters ``counts >= a``
+    comparisons, so the sweep engine can batch scenarios that differ in
+    their vote threshold through one compiled round program (values are
+    identical to the static-threshold build).
     """
-    a = cfg.threshold(n_clients)
+    if a is None:
+        a = cfg.threshold(n_clients)
     n_chunks = counts.shape[-1]
     if cfg.compact_mode == "block":
         keep_dense, pos = compaction.block_select(counts, a, cfg.block_size,

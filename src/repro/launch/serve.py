@@ -14,7 +14,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get, get_smoke
-from repro.models.model import decode_step, forward, init_caches, init_params
+from repro.models.model import decode_step, init_caches, init_params
 
 
 def main(argv=None):

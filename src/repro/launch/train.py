@@ -20,7 +20,7 @@ import numpy as np
 from jax.sharding import NamedSharding
 
 from repro.checkpoint import save_checkpoint
-from repro.configs import SHAPES_BY_NAME, get, get_smoke
+from repro.configs import get, get_smoke
 from repro.data.synthetic import lm_batches
 from repro.launch.mesh import make_production_mesh, make_test_mesh
 from repro.models.model import init_params

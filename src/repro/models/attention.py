@@ -11,7 +11,6 @@ TPU.  Peak live intermediate: q_block x kv_block scores per (batch, head).
 from __future__ import annotations
 
 import math
-from functools import partial
 
 import jax
 import jax.numpy as jnp

@@ -13,8 +13,6 @@ only valid for E=1 archs (params never diverge across clients; DESIGN.md §2).
 
 from __future__ import annotations
 
-import jax
-import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 from jax.tree_util import DictKey, tree_map_with_path
 

@@ -12,8 +12,6 @@ residual-stream activations are one per layer per microbatch.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Sequence
-
 import jax
 import jax.numpy as jnp
 
@@ -22,8 +20,7 @@ from . import hybrid as hybrid_mod
 from . import mla as mla_mod
 from . import moe as moe_mod
 from . import ssm as ssm_mod
-from .layers import (apply_mlp, dense_init, init_mlp, init_rms, rms_norm,
-                     sinusoidal_positions)
+from .layers import apply_mlp, init_mlp, init_rms, rms_norm
 
 
 @dataclass(frozen=True)

@@ -1,0 +1,10 @@
+"""Scenario-grid sweep engine: declarative FL scenarios, a vmapped fleet
+runner that batches S seeds x K same-shape scenarios through one compiled
+round program, and named grids for the paper's figures (DESIGN.md §10)."""
+
+from .grids import GRIDS, get_grid, smoke_grid
+from .runner import (CellResult, SweepResult, run_cell_sequential, run_sweep)
+from .spec import ScenarioSpec, cell_key
+
+__all__ = ["ScenarioSpec", "cell_key", "run_sweep", "run_cell_sequential",
+           "SweepResult", "CellResult", "GRIDS", "get_grid", "smoke_grid"]

@@ -1,0 +1,163 @@
+"""The batched fleet round program: S seeds x K scenarios under one ``jit``.
+
+``run_fleet_cells`` executes a list of same-signature (scenario, seed)
+cells as ONE vmapped round program: client states (params, error-feedback
+residuals, aggregator state, PRNG keys) and the per-round dynamic scalars
+(vote threshold, learning rate) are stacked along a leading fleet axis, so
+a single compilation serves the whole batch — the sequential loop pays one
+XLA compile *per cell* because every ``run_federated`` call closes over
+fresh data.
+
+Bit-identity contract (pinned in ``tests/test_sweep.py``): each fleet
+cell's history equals its sequential ``run_federated`` run exactly.  The
+pieces that make that hold:
+
+* the per-cell key threading is byte-for-byte the sequential one
+  (``PRNGKey(seed)`` consumed by the eager init, then split 3-ways per
+  round);
+* cells are padded to a common dataset size but keep their OWN sampling
+  bound as a traced scalar — ``jax.random.randint`` draws identical values
+  for traced and static bounds;
+* the numeric round is the shared :func:`repro.training.make_client_round`
+  + the aggregator *core* (``repro.core.baselines.make_aggregator_core``),
+  i.e. literally the sequential computation under ``vmap``;
+* wall-clock/traffic pricing runs in Python per cell from the account
+  half of the aggregator split, in the exact accumulation order of
+  ``run_federated``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.baselines import make_aggregator_core
+from repro.switch import SwitchProfile, client_rates, n_packets, round_wall_clock
+from repro.training.fl_loop import (FLHistory, _stack_clients, init_mlp,
+                                    make_client_round, mlp_apply)
+
+__all__ = ["run_fleet_cells"]
+
+
+def _pad_rows(x: np.ndarray, size: int) -> np.ndarray:
+    """Pad axis 1 (per-client dataset rows) with zeros up to ``size``."""
+    if x.shape[1] == size:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[1] = (0, size - x.shape[1])
+    return np.pad(x, widths)
+
+
+def _profile(name: str) -> SwitchProfile:
+    return SwitchProfile.high() if name == "high" else SwitchProfile.low()
+
+
+def run_fleet_cells(cells):
+    """Run same-signature cells as one batched round program.
+
+    ``cells``: list of ``(ScenarioSpec, seed)`` sharing one
+    ``batch_signature()``.  Returns a list of :class:`FLHistory`, one per
+    cell, bit-identical to the sequential ``run_federated`` runs.
+    """
+    spec0 = cells[0][0]
+    sig0 = spec0.batch_signature()
+    assert all(s.batch_signature() == sig0 for s, _ in cells), \
+        "fleet cells must share one batch signature"
+    n, rounds = spec0.n_clients, spec0.rounds
+
+    # ---- per-cell eager setup: data, init, padding (exactly fl_loop's).
+    cxs, cys, sizes, flats, keys0, tests_x, tests_y = [], [], [], [], [], [], []
+    unravel = None
+    for spec, seed in cells:
+        clients, test = spec.make_task(seed)
+        rng = np.random.default_rng(seed)
+        dim = clients[0].x.shape[1]
+        n_classes = clients[0].n_classes
+        key = jax.random.PRNGKey(seed)
+        params = init_mlp(key, (dim, *spec.hidden, n_classes))
+        flat0, unravel = jax.flatten_util.ravel_pytree(params)
+        cx, cy = _stack_clients(clients, spec.batch, rng)
+        cxs.append(np.asarray(cx))
+        cys.append(np.asarray(cy))
+        sizes.append(cy.shape[1])
+        flats.append(flat0)
+        keys0.append(key)
+        tests_x.append(np.asarray(test.x))
+        tests_y.append(np.asarray(test.y))
+
+    size_max = max(sizes)
+    cx_b = jnp.asarray(np.stack([_pad_rows(c, size_max) for c in cxs]))
+    cy_b = jnp.asarray(np.stack([_pad_rows(c, size_max) for c in cys]))
+    size_b = jnp.asarray(np.array(sizes, np.int32))
+    xt_b = jnp.asarray(np.stack(tests_x))
+    yt_b = jnp.asarray(np.stack(tests_y))
+    flat_b = jnp.stack(flats)
+    key_b = jnp.stack(keys0)
+    d = int(flat_b.shape[1])
+    e_b = jnp.zeros((len(cells), n, d))
+
+    # ---- dynamic per-cell scalars: vote threshold + lr schedule.
+    dyn0 = spec0.dyn_scalars()
+    dyn_b = {k: jnp.asarray(np.array([s.dyn_scalars()[k] for s, _ in cells],
+                                     np.int32))
+             for k in dyn0}
+    lr0 = np.array([s.lr0 for s, _ in cells], np.float64)
+    lr_tau = np.array([s.lr_tau for s, _ in cells], np.float64)
+
+    core, account = make_aggregator_core(spec0.algorithm,
+                                         **spec0.core_kwargs())
+    client_round = make_client_round(unravel, spec0.batch, spec0.local_steps)
+
+    def cell_step(flat, e_stack, agg_state, key, lr, dyn, cx, cy, size,
+                  xt, yt):
+        key, k1, k2 = jax.random.split(key, 3)
+        u_stack, losses = client_round(flat, k1, lr, cx, cy, size)
+        u_stack = u_stack + e_stack
+        delta, residuals, agg_state, aux = core(u_stack, agg_state, k2, dyn)
+        flat = flat - delta
+        pred = jnp.argmax(mlp_apply(unravel(flat), xt), axis=-1)
+        acc = (pred == yt).mean()
+        return flat, residuals, agg_state, key, acc, losses.mean(), aux
+
+    step = jax.jit(jax.vmap(cell_step))
+
+    agg_state = None
+    accs, loss_means, auxes = [], [], []
+    for t in range(1, rounds + 1):
+        # the sequential loop computes lr as a Python float (f64) that jit
+        # casts to f32; the f64->f32 rounding here is the same one.
+        lr_t = jnp.asarray((lr0 / (1.0 + np.sqrt(t) / lr_tau))
+                           .astype(np.float32))
+        (flat_b, e_b, agg_state, key_b, acc, lmean, aux) = step(
+            flat_b, e_b, agg_state, key_b, lr_t, dyn_b, cx_b, cy_b, size_b,
+            xt_b, yt_b)
+        accs.append(np.asarray(acc))
+        loss_means.append(np.asarray(lmean))
+        auxes.append({k: np.asarray(v) for k, v in aux.items()})
+
+    # ---- Python-side pricing, in fl_loop's exact accumulation order.
+    histories = []
+    for b, (spec, seed) in enumerate(cells):
+        rates = client_rates(n, seed)
+        profile = _profile(spec.switch)
+        hist = FLHistory([], [], [], [])
+        t_cum = 0.0
+        mb_cum = 0.0
+        for t in range(rounds):
+            aux_b = {k: int(v[b]) for k, v in auxes[t].items()}
+            traffic, load = account(n, d, aux_b)
+            down_packets = n_packets(traffic.total_bytes)
+            t_cum += round_wall_clock(
+                packets_per_client=load.packets_per_client,
+                download_packets=down_packets, rates=rates, profile=profile,
+                local_train_s=spec.local_train_s, aligned=load.aligned)
+            upload_mb = traffic.total_bytes * n / 1e6
+            download_mb = traffic.total_bytes * n / 1e6
+            mb_cum += upload_mb + download_mb
+            hist.acc.append(float(accs[t][b]))
+            hist.wall_clock.append(t_cum)
+            hist.traffic_mb.append(mb_cum)
+            hist.loss.append(float(loss_means[t][b]))
+        histories.append(hist)
+    return histories

@@ -1,0 +1,111 @@
+"""Named scenario grids: the paper's sweeps as declarative registries.
+
+Each entry is a zero-argument factory returning a list of
+:class:`ScenarioSpec`; the benchmark harness and the examples pull their
+cells from here so every figure's grid is one importable object.
+"""
+
+from __future__ import annotations
+
+from .spec import ScenarioSpec
+
+__all__ = ["GRIDS", "get_grid", "smoke_grid", "algo_scenario",
+           "BASELINE_OVERRIDES", "FEDIAC_DEFAULTS"]
+
+# The paper Sec. V-A3 algorithm configurations — the single source both the
+# named grids and benchmarks/common.py draw from.
+BASELINE_OVERRIDES = {
+    "switchml": (("bits", 12),),
+    "libra": (("k_frac", 0.01), ("hot_frac", 0.01)),
+    "omnireduce": (("k_frac", 0.05),),
+    "topk": (("k_frac", 0.01),),
+    "fedavg": (),
+}
+FEDIAC_DEFAULTS = dict(a=3, bits=12, k_frac=0.05, capacity_frac=0.05)
+
+
+def algo_scenario(algo: str, **kw) -> ScenarioSpec:
+    """A ScenarioSpec for one named algorithm at its paper configuration."""
+    if algo == "fediac":
+        return ScenarioSpec(algorithm="fediac", **FEDIAC_DEFAULTS, **kw)
+    return ScenarioSpec(algorithm=algo,
+                        agg_overrides=BASELINE_OVERRIDES[algo], **kw)
+
+
+def smoke_grid() -> list:
+    """Tiny fast grid for CI and the throughput benchmark: a FediAC
+    vote-threshold sweep + one SwitchML baseline on a small task.  The
+    three fediac cells share one compiled program (dynamic threshold), so
+    the grid exercises both fleet groups and the dynamic-scalar axis."""
+    task = dict(n_clients=8, rounds=6, local_steps=3, batch=16,
+                hidden=(32,), data_n=1500, data_dim=32, data_classes=10)
+    return [
+        ScenarioSpec(name="fediac-a2", algorithm="fediac", a=2, **task),
+        ScenarioSpec(name="fediac-a3", algorithm="fediac", a=3, **task),
+        ScenarioSpec(name="fediac-a4", algorithm="fediac", a=4, **task),
+        ScenarioSpec(name="switchml", algorithm="switchml",
+                     agg_overrides=BASELINE_OVERRIDES["switchml"], **task),
+    ]
+
+
+def fig2_grid(dist: str = "noniid") -> list:
+    """Fig. 2: accuracy vs wall-clock, four algorithms x two PS profiles.
+    The profile is pricing-only (outside the batch signature), so the
+    high/low cells of one algorithm ride the same compiled program as two
+    fleet lanes — one compile, though each lane recomputes its numerics."""
+    return [algo_scenario(algo, name=f"{sw}/{algo}", dist=dist,
+                          switch=sw, rounds=40)
+            for sw in ("high", "low")
+            for algo in ("fediac", "switchml", "libra", "omnireduce")]
+
+
+def fig3_grid() -> list:
+    """Fig. 3: non-IID Dirichlet skew sweep, FediAC vs libra."""
+    return [algo_scenario(algo, name=f"{sw}/b{beta:g}/{algo}",
+                          dist="noniid", beta=beta, switch=sw, rounds=30)
+            for sw in ("high", "low")
+            for beta in (0.3, 0.5, 1.0, 5.0)
+            for algo in ("fediac", "libra")]
+
+
+def fig4_grid() -> list:
+    """Fig. 4: vote threshold a (% of N) x system scale N x iid/noniid.
+    Cells differing only in ``a`` batch through one compiled program per
+    (dist-independent) N."""
+    return [ScenarioSpec(
+                name=f"{dist}/N={n}/a={af:.0%}N", algorithm="fediac",
+                a=max(1, round(af * n)), bits=12, dist=dist, switch="low",
+                rounds=25, n_clients=n)
+            for dist in ("iid", "noniid")
+            for n in (10, 20, 30)
+            for af in (0.05, 0.10, 0.15, 0.20, 0.35)]
+
+
+def dataplane_grid(loss_grid=(0.0, 0.01, 0.05),
+                   part_grid=(1.0, 0.5, 0.25)) -> list:
+    """DESIGN.md §9 packet-dataplane grid: loss x participation (packet
+    transport -> sequential fallback inside the runner)."""
+    task = dict(algorithm="fediac", a=2, bits=12, transport="packet",
+                n_clients=10, rounds=12, local_steps=3, dist="noniid",
+                beta=0.5, data_n=3000, data_dim=32, test_frac=0.25)
+    return [ScenarioSpec(name=f"dataplane-l{loss:g}-p{part:g}", loss=loss,
+                         participation=part, **task)
+            for loss in loss_grid for part in part_grid]
+
+
+GRIDS = {
+    "smoke": smoke_grid,
+    "fig2": fig2_grid,
+    "fig3": fig3_grid,
+    "fig4": fig4_grid,
+    "dataplane": dataplane_grid,
+}
+
+
+def get_grid(name: str) -> list:
+    """Instantiate a named grid."""
+    try:
+        return GRIDS[name]()
+    except KeyError:
+        raise KeyError(f"unknown grid {name!r} (have {sorted(GRIDS)})") \
+            from None

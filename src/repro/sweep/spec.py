@@ -1,0 +1,188 @@
+"""Declarative FL scenarios: one frozen spec per sweep cell (DESIGN.md §10).
+
+A :class:`ScenarioSpec` names everything the paper sweeps over — algorithm,
+vote threshold, compaction mode, non-IID skew, participation, loss,
+transport, hierarchy depth — plus the task geometry (clients, rounds, model
+width, data size).  Specs are frozen and hashable so the runner can cache
+data builds and group cells.
+
+The split that powers the fleet runner lives in :meth:`batch_signature`:
+the fields that fix the *compiled program* (shapes, algorithm, static
+compression config) form the signature; the remaining numeric knobs — the
+vote threshold ``a``, the learning-rate schedule, and the data itself (seed,
+skew, distribution) — are batched along the fleet axis of one ``vmap``'d
+round program.  Scenarios with equal signatures share one compilation.
+"""
+
+from __future__ import annotations
+
+import functools
+import hashlib
+from dataclasses import dataclass, replace
+
+from repro.core.fediac import FediACConfig
+from repro.data import classification, partition_dirichlet, partition_iid
+
+__all__ = ["ScenarioSpec", "make_task", "cell_key"]
+
+_FEDIAC_DYNAMIC = ("a", "a_frac")       # resolved to the dyn {"a"} scalar
+_PRICING_ONLY = ("switch", "local_train_s")  # never enter the numerics
+_DATA_ONLY = ("name", "dist", "beta")   # change the data, not the program
+
+
+@dataclass(frozen=True)
+class ScenarioSpec:
+    """One federated-learning scenario (a sweep grid cell, minus the seed)."""
+
+    name: str = ""
+    algorithm: str = "fediac"      # baselines registry name
+    # --- FediAC compression knobs (ignored for baselines)
+    a: int | None = None           # vote threshold; None -> ceil(a_frac * N)
+    a_frac: float = 0.15
+    bits: int = 12
+    k_frac: float = 0.05
+    capacity_frac: float = 0.05
+    vote_mode: str = "topk"        # topk | threshold
+    compact_mode: str = "topk"     # topk | block
+    # --- baseline aggregator kwargs, as a hashable (key, value) tuple
+    agg_overrides: tuple = ()
+    # --- task geometry
+    n_clients: int = 20
+    rounds: int = 40
+    local_steps: int = 5
+    batch: int = 32
+    lr0: float = 0.1
+    lr_tau: float = 20.0
+    hidden: tuple = (128, 64)
+    # --- data
+    dist: str = "noniid"           # iid | noniid (Dirichlet)
+    beta: float = 0.5              # Dirichlet skew (noniid only)
+    data_n: int = 8000
+    data_dim: int = 48
+    data_classes: int = 10
+    test_frac: float = 0.2
+    # --- round pricing (analytic wall-clock; never enters the numerics)
+    switch: str = "high"           # high | low SwitchProfile
+    local_train_s: float = 0.1
+    # --- network (packet transport scenarios take the sequential path)
+    transport: str = "memory"      # memory | packet
+    loss: float = 0.0
+    participation: float = 1.0
+    straggler_frac: float = 0.0
+    n_leaves: int = 1              # switch hierarchy depth (1 = single PS)
+    net_seed: int = 0
+
+    # ------------------------------------------------------------------
+    def fediac_config(self) -> FediACConfig:
+        return FediACConfig(a=self.a, a_frac=self.a_frac, bits=self.bits,
+                            k_frac=self.k_frac,
+                            capacity_frac=self.capacity_frac,
+                            vote_mode=self.vote_mode,
+                            compact_mode=self.compact_mode)
+
+    def agg_kwargs(self) -> dict:
+        """Aggregator kwargs for the classic (eager) registry interface."""
+        if self.algorithm == "fediac":
+            return {"cfg": self.fediac_config(), **dict(self.agg_overrides)}
+        return dict(self.agg_overrides)
+
+    def core_kwargs(self) -> dict:
+        """Aggregator kwargs for the (core, account) pair.  For FediAC the
+        vote threshold is carried by the dyn scalar instead of the config
+        (`dyn_scalars`), so cells differing only in ``a``/``a_frac`` bind
+        the same core."""
+        if self.algorithm == "fediac":
+            cfg = replace(self.fediac_config(), a=None,
+                          a_frac=type(self).a_frac)
+            return {"cfg": cfg, **dict(self.agg_overrides)}
+        return dict(self.agg_overrides)
+
+    def dyn_scalars(self) -> dict:
+        """Per-cell traced scalars for the fleet round program."""
+        if self.algorithm == "fediac":
+            return {"a": self.fediac_config().threshold(self.n_clients)}
+        return {}
+
+    # ------------------------------------------------------------------
+    def to_flconfig(self, seed: int):
+        """The sequential :class:`repro.training.FLConfig` for one cell."""
+        from repro.training.fl_loop import FLConfig
+        from repro.switch import SwitchProfile
+        net = None
+        if self.transport == "packet":
+            from repro.netsim import NetConfig
+            net = NetConfig(loss=self.loss, participation=self.participation,
+                            straggler_frac=self.straggler_frac,
+                            n_leaves=self.n_leaves, seed=self.net_seed)
+        profile = (SwitchProfile.high() if self.switch == "high"
+                   else SwitchProfile.low())
+        return FLConfig(n_clients=self.n_clients, rounds=self.rounds,
+                        local_steps=self.local_steps, batch=self.batch,
+                        lr0=self.lr0, lr_tau=self.lr_tau,
+                        aggregator=self.algorithm,
+                        agg_kwargs=self.agg_kwargs(), switch=profile,
+                        local_train_s=self.local_train_s,
+                        transport=self.transport, net=net, seed=seed)
+
+    def make_task(self, seed: int):
+        """(clients, test) for one cell — cached across cells that share
+        the data configuration."""
+        return make_task(self.data_n, self.data_dim, self.data_classes,
+                         self.test_frac, self.dist, self.beta,
+                         self.n_clients, seed)
+
+    # ------------------------------------------------------------------
+    def batchable(self) -> bool:
+        """Can this scenario ride the vmapped fleet program?"""
+        from repro.core.baselines import _CORES
+        return self.transport == "memory" and self.algorithm in _CORES
+
+    def batch_signature(self) -> tuple:
+        """Hashable key of everything that fixes the compiled fleet program.
+
+        Cells with equal signatures run as one ``vmap`` batch; the excluded
+        fields are either batched (vote threshold, lr schedule, data) or
+        pure Python-side pricing (switch profile, local train time).
+        """
+        excluded = _FEDIAC_DYNAMIC + _PRICING_ONLY + _DATA_ONLY + ("lr0",
+                                                                  "lr_tau")
+        items = tuple(sorted((k, v) for k, v in self.__dict__.items()
+                             if k not in excluded))
+        return (self.algorithm,) + items
+
+    def label(self) -> str:
+        """Short human-readable cell label."""
+        if self.name:
+            return self.name
+        bits = [self.algorithm]
+        if self.algorithm == "fediac":
+            bits.append(f"a{self.a}" if self.a is not None
+                        else f"af{self.a_frac:g}")
+        bits.append(f"{self.dist}{self.beta:g}" if self.dist == "noniid"
+                    else "iid")
+        if self.transport == "packet":
+            bits.append(f"loss{self.loss:g}-part{self.participation:g}")
+        return "-".join(bits)
+
+
+def cell_key(spec: ScenarioSpec, seed: int) -> str:
+    """Stable progress-file key for one (scenario, seed) cell.  No '/' —
+    the checkpoint format uses it as a path separator."""
+    h = hashlib.sha1(repr((sorted(spec.__dict__.items()), seed))
+                     .encode()).hexdigest()[:10]
+    return f"{spec.label()}.s{seed}.{h}".replace("/", "_")
+
+
+@functools.lru_cache(maxsize=32)
+def make_task(data_n: int, data_dim: int, data_classes: int, test_frac: float,
+              dist: str, beta: float, n_clients: int, seed: int):
+    """Build (clients, test) for one cell.  Identical parameters (shared
+    across scenarios that differ only in algorithm/threshold) hit the cache."""
+    data = classification(n=data_n, dim=data_dim, n_classes=data_classes,
+                          seed=seed)
+    train, test = data.test_split(test_frac)
+    if dist == "iid":
+        clients = partition_iid(train, n_clients, seed)
+    else:
+        clients = partition_dirichlet(train, n_clients, beta=beta, seed=seed)
+    return tuple(clients), test

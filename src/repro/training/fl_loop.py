@@ -126,6 +126,43 @@ def _stack_clients(clients, batch: int, rng: np.random.Generator):
     return jnp.asarray(np.stack(xs)), jnp.asarray(np.stack(ys))
 
 
+def make_client_round(unravel, batch: int, local_steps: int):
+    """The per-round local-training program in explicit, vmappable form.
+
+    Everything a round depends on — the stacked client data ``(cx, cy)``,
+    the per-client sampling bound ``size`` and the learning rate — enters
+    through arguments rather than closures, so the same function serves
+    both the sequential loop (data baked in as constants under ``jit``)
+    and the fleet runner (data batched along a leading scenario axis under
+    ``vmap``).  ``size`` may be a traced scalar: ``jax.random.randint``
+    draws the same values for a traced bound as for the static one, which
+    is what keeps fleet cells bit-identical to their sequential runs even
+    when cells are padded to a common dataset size.
+    """
+    grad_fn = jax.grad(_ce_loss)
+
+    def client_round(flat_params, key, lr, cx, cy, size):
+        """E local SGD steps on every client (vmapped). Returns U stack."""
+        def per_client(cxi, cyi, k):
+            w = unravel(flat_params)
+
+            def step(w, k):
+                idx = jax.random.randint(k, (batch,), 0, size)
+                g = grad_fn(w, cxi[idx], cyi[idx])
+                w = jax.tree_util.tree_map(lambda p, gg: p - lr * gg, w, g)
+                return w, _ce_loss(w, cxi[idx], cyi[idx])
+
+            ks = jax.random.split(k, local_steps)
+            w, losses = jax.lax.scan(step, w, ks)
+            u = flat_params - jax.flatten_util.ravel_pytree(w)[0]
+            return u, losses.mean()
+
+        ks = jax.random.split(key, cx.shape[0])
+        return jax.vmap(per_client)(cx, cy, ks)
+
+    return client_round
+
+
 def run_federated(clients, test, flcfg: FLConfig, *, hidden=(128, 64)) -> FLHistory:
     rng = np.random.default_rng(flcfg.seed)
     dim = clients[0].x.shape[1]
@@ -149,27 +186,10 @@ def run_federated(clients, test, flcfg: FLConfig, *, hidden=(128, 64)) -> FLHist
                                rates=rates, local_train_s=flcfg.local_train_s,
                                **agg_kwargs)
 
-    grad_fn = jax.grad(_ce_loss)
-
-    @jax.jit
-    def local_round(flat_params, key, lr):
-        """E local SGD steps on every client (vmapped). Returns U stack."""
-        def per_client(cxi, cyi, k):
-            w = unravel(flat_params)
-
-            def step(w, k):
-                idx = jax.random.randint(k, (flcfg.batch,), 0, size)
-                g = grad_fn(w, cxi[idx], cyi[idx])
-                w = jax.tree_util.tree_map(lambda p, gg: p - lr * gg, w, g)
-                return w, _ce_loss(w, cxi[idx], cyi[idx])
-
-            ks = jax.random.split(k, flcfg.local_steps)
-            w, losses = jax.lax.scan(step, w, ks)
-            u = flat_params - jax.flatten_util.ravel_pytree(w)[0]
-            return u, losses.mean()
-
-        ks = jax.random.split(key, n)
-        return jax.vmap(per_client)(cx, cy, ks)
+    client_round = make_client_round(unravel, flcfg.batch, flcfg.local_steps)
+    local_round = jax.jit(
+        lambda flat_params, key, lr: client_round(flat_params, key, lr,
+                                                  cx, cy, size))
 
     e_stack = jnp.zeros((n, d))
     flat = flat0

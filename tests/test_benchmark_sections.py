@@ -1,0 +1,25 @@
+"""Every section of the ``benchmarks.run`` registry imports and completes
+a tiny-budget smoke run (the issue's CI contract: sections can't silently
+rot).  Smoke mode writes any BENCH artifacts to temp paths, never to the
+tracked repo-root baselines."""
+
+from __future__ import annotations
+
+import pytest
+
+from benchmarks.run import SECTIONS
+
+
+def test_registry_names_stable():
+    assert {"fig2", "tables", "fig3", "fig4", "prop1", "motivation",
+            "kernels", "aggregation", "dataplane", "sweep",
+            "roofline"} <= set(SECTIONS)
+
+
+@pytest.mark.parametrize("name", sorted(SECTIONS))
+def test_section_smoke_completes(name):
+    rows = SECTIONS[name](smoke=True)
+    assert rows, f"section {name} produced no rows"
+    for row in rows:
+        assert len(row) == 3, f"section {name} row violates CSV contract"
+        assert "/ERROR" not in str(row[0]), f"section {name} errored: {row}"

@@ -1,0 +1,109 @@
+"""The benchmark-regression gate's comparators: green on matching payloads,
+red on every injected drift (pure payload-level tests — the heavy fresh
+recompute is CI's job)."""
+
+from __future__ import annotations
+
+from benchmarks.check_regression import (compare_aggregation,
+                                         compare_dataplane, compare_sweep,
+                                         inject_drift)
+
+
+def _tracked_stub():
+    agg_cell = {"d": 100_000, "n_clients": 8, "vote_mode": "topk",
+                "compact_mode": "topk", "reps": 5, "engine_s": 0.05,
+                "seed_s": 0.08, "speedup": 1.6, "bit_identical": True}
+    dp_cell = {"loss": 0.0, "participation": 1.0, "final_acc": 0.81,
+               "wall_clock_s": 12.345, "traffic_mb": 3.21}
+    sweep_cell = {"scenario": "fediac-a2", "seed": 0, "final_acc": 0.5,
+                  "traffic_mb": 1.25, "wall_clock_s": 4.5,
+                  "bit_identical": True}
+    return {
+        "aggregation": {"cells": [agg_cell]},
+        "dataplane": {"rounds": 12, "memory_transport_acc": 0.81,
+                      "throughput": {"packets_per_s": 1_000_000},
+                      "cells": [dp_cell,
+                                {**dp_cell, "loss": 0.05, "final_acc": 0.7}]},
+        "sweep": {"cells": [sweep_cell], "speedup": 4.0},
+    }
+
+
+def _fresh_stub(tracked):
+    return {
+        "aggregation": dict(tracked["aggregation"]["cells"][0]),
+        "dataplane": {"lossless": dict(tracked["dataplane"]["cells"][0]),
+                      "memory_acc": tracked["dataplane"]
+                      ["memory_transport_acc"],
+                      "throughput": {"packets_per_s": 900_000}},
+        "sweep": {"cells": [dict(c) for c in tracked["sweep"]["cells"]],
+                  "speedup": 3.5},
+    }
+
+
+def test_gate_green_on_matching_payloads():
+    tracked = _tracked_stub()
+    fresh = _fresh_stub(tracked)
+    assert compare_aggregation(tracked["aggregation"],
+                               fresh["aggregation"]) == []
+    assert compare_dataplane(tracked["dataplane"], fresh["dataplane"]) == []
+    assert compare_sweep(tracked["sweep"], fresh["sweep"]) == []
+
+
+def test_gate_red_on_injected_drift():
+    tracked = _tracked_stub()
+    fresh = _fresh_stub(tracked)
+    drifted = inject_drift(tracked)
+    assert compare_aggregation(drifted["aggregation"], fresh["aggregation"])
+    assert compare_dataplane(drifted["dataplane"], fresh["dataplane"])
+    assert compare_sweep(drifted["sweep"], fresh["sweep"])
+
+
+def test_gate_red_on_specific_regressions():
+    tracked = _tracked_stub()
+    # lost bit-identity in the fresh aggregation cell
+    fresh = _fresh_stub(tracked)
+    fresh["aggregation"]["bit_identical"] = False
+    assert compare_aggregation(tracked["aggregation"], fresh["aggregation"])
+    # accuracy drift in the lossless dataplane cell
+    fresh = _fresh_stub(tracked)
+    fresh["dataplane"]["lossless"]["final_acc"] += 0.01
+    assert compare_dataplane(tracked["dataplane"], fresh["dataplane"])
+    # packet transport diverging from the in-memory engine
+    fresh = _fresh_stub(tracked)
+    fresh["dataplane"]["memory_acc"] += 0.01
+    assert compare_dataplane(tracked["dataplane"], fresh["dataplane"])
+    # fleet losing its throughput edge entirely
+    fresh = _fresh_stub(tracked)
+    fresh["sweep"]["speedup"] = 0.9
+    assert compare_sweep(tracked["sweep"], fresh["sweep"])
+    # sweep grid drift (cell disappears)
+    fresh = _fresh_stub(tracked)
+    fresh["sweep"]["cells"][0]["scenario"] = "renamed"
+    assert compare_sweep(tracked["sweep"], fresh["sweep"])
+
+
+def test_accuracy_tolerates_cross_host_ulps():
+    """Sub-ACC_TOL accuracy deltas (XLA codegen differing between the
+    baseline machine and a CI runner) never gate; real drift does."""
+    tracked = _tracked_stub()
+    fresh = _fresh_stub(tracked)
+    fresh["sweep"]["cells"][0]["final_acc"] += 0.003
+    assert compare_sweep(tracked["sweep"], fresh["sweep"]) == []
+    fresh["sweep"]["cells"][0]["final_acc"] += 0.01
+    assert compare_sweep(tracked["sweep"], fresh["sweep"])
+    fresh = _fresh_stub(tracked)
+    fresh["dataplane"]["lossless"]["final_acc"] += 0.003
+    fresh["dataplane"]["memory_acc"] += 0.003  # same-machine pair moves together
+    assert compare_dataplane(tracked["dataplane"], fresh["dataplane"]) == []
+
+
+def test_wallclock_band_is_wide():
+    """Noisy 2-core timings inside the 4x band never gate."""
+    tracked = _tracked_stub()
+    fresh = _fresh_stub(tracked)
+    fresh["aggregation"]["engine_s"] = tracked["aggregation"]["cells"][0][
+        "engine_s"] * 3.5
+    assert compare_aggregation(tracked["aggregation"],
+                               fresh["aggregation"]) == []
+    fresh["aggregation"]["engine_s"] *= 2.0  # now outside 4x
+    assert compare_aggregation(tracked["aggregation"], fresh["aggregation"])

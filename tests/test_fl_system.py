@@ -6,7 +6,7 @@ import numpy as np
 import pytest
 
 from repro.core.fediac import FediACConfig
-from repro.data import classification, partition_dirichlet, partition_iid
+from repro.data import classification, partition_dirichlet
 from repro.switch import ProgrammableSwitch, SwitchProfile, client_rates, round_wall_clock
 from repro.training import FLConfig, run_federated
 

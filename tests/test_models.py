@@ -6,7 +6,7 @@ import numpy as np
 import pytest
 
 from repro.configs import ARCH_IDS, get, get_smoke
-from repro.models import init_caches, init_params, forward, loss_fn, param_count
+from repro.models import init_caches, init_params, forward, loss_fn
 from repro.models.model import decode_step
 
 KEY = jax.random.PRNGKey(0)

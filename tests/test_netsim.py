@@ -11,9 +11,8 @@ from repro.core.fediac import FediACConfig, aggregate_stack
 from repro.netsim import (NetConfig, PacketTransport, SwitchDataplane,
                           leaf_assignment, mg1_departures, round_rng,
                           sample_participants)
-from repro.netsim.timeline import (drain_fifo, poisson_arrivals,
-                                   retransmit_delays, simulate_round_time,
-                                   windowed_drain)
+from repro.netsim.timeline import (poisson_arrivals, retransmit_delays,
+                                   simulate_round_time, windowed_drain)
 from repro.switch import SwitchProfile, client_rates, round_wall_clock
 
 MODES = [("topk", "topk"), ("topk", "block"),

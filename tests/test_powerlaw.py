@@ -1,6 +1,5 @@
 """Paper Sec. IV-B analysis machinery (Def. 1, Eqs. 2-6)."""
 
-import math
 
 import numpy as np
 import pytest
@@ -8,7 +7,7 @@ import pytest
 pytest.importorskip("hypothesis", reason="property tests need hypothesis")
 from hypothesis import given, settings, strategies as st
 
-from repro.core.powerlaw import (client_vote_probability, expected_uploaded,
+from repro.core.powerlaw import (expected_uploaded,
                                  fit_power_law, gamma_compression_error,
                                  gia_selection_probability, min_bits,
                                  scale_factor, vote_probability)

@@ -1,6 +1,5 @@
 """Optimizers, data pipeline, and config registry."""
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

@@ -1,0 +1,156 @@
+"""Sweep engine (DESIGN.md §10): fleet/sequential bit-identity, dynamic
+vote-threshold batching, chunking, resume, and the grid registry."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.fediac import FediACConfig
+from repro.core.round_plan import build_round_plan
+from repro.sweep import (GRIDS, ScenarioSpec, cell_key, get_grid,
+                         run_cell_sequential, run_sweep, smoke_grid)
+
+TINY = dict(n_clients=4, rounds=3, local_steps=2, batch=8, hidden=(16,),
+            data_n=500, data_dim=12, data_classes=5)
+
+
+def _assert_same(h_seq, h_fleet, ctx=""):
+    assert h_seq.acc == h_fleet.acc, f"{ctx}: acc"
+    assert h_seq.loss == h_fleet.loss, f"{ctx}: loss"
+    assert h_seq.wall_clock == h_fleet.wall_clock, f"{ctx}: wall_clock"
+    assert h_seq.traffic_mb == h_fleet.traffic_mb, f"{ctx}: traffic_mb"
+
+
+# ---------------------------------------------------------------------------
+# bit-identity: the fleet program == the sequential loop, per cell
+# ---------------------------------------------------------------------------
+
+def test_fleet_bit_identical_fediac_dynamic_threshold():
+    """Cells differing in vote threshold a, data skew AND seed share one
+    vmapped program; every cell equals its sequential run exactly."""
+    specs = [ScenarioSpec(name="a2", algorithm="fediac", a=2, **TINY),
+             ScenarioSpec(name="a3b5", algorithm="fediac", a=3, beta=5.0,
+                          **TINY)]
+    assert specs[0].batch_signature() == specs[1].batch_signature()
+    result = run_sweep(specs, (0, 1))
+    assert len(result) == 4
+    for cr in result:
+        _assert_same(run_cell_sequential(cr.spec, cr.seed), cr.history,
+                     cr.key)
+
+
+@pytest.mark.parametrize("algo,overrides", [
+    ("libra", (("k_frac", 0.02), ("hot_frac", 0.02))),
+    ("omnireduce", (("k_frac", 0.05),)),
+    ("topk", (("k_frac", 0.02),)),
+])
+def test_fleet_bit_identical_baselines(algo, overrides):
+    """Stateful (libra EMA) and dynamic-wire (omnireduce block counts)
+    baselines survive the fleet axis bit-identically."""
+    spec = ScenarioSpec(name=algo, algorithm=algo, agg_overrides=overrides,
+                        **TINY)
+    cr = run_sweep([spec], (0,)).cells[0]
+    _assert_same(run_cell_sequential(spec, 0), cr.history, algo)
+
+
+def test_fleet_chunking_invariant():
+    """max_fleet=1 (degenerate chunks) and one big batch agree exactly."""
+    specs = [ScenarioSpec(name="a2", algorithm="fediac", a=2, **TINY)]
+    big = run_sweep(specs, (0, 1), max_fleet=8)
+    small = run_sweep(specs, (0, 1), max_fleet=1)
+    for b, s in zip(big, small):
+        assert b.key == s.key
+        _assert_same(b.history, s.history, b.key)
+
+
+# ---------------------------------------------------------------------------
+# dynamic vote threshold
+# ---------------------------------------------------------------------------
+
+def test_round_plan_traced_threshold_matches_static():
+    cfg = FediACConfig(capacity_frac=0.2)
+    counts = jnp.asarray(np.random.default_rng(0).integers(0, 9, 4096),
+                         jnp.int32)
+    static = build_round_plan(counts, cfg, 8)
+
+    traced = jax.jit(lambda a: build_round_plan(counts, cfg, 8, a=a))(
+        jnp.int32(cfg.threshold(8)))
+    assert jnp.array_equal(static.idx, traced.idx)
+    assert jnp.array_equal(static.keep, traced.keep)
+
+
+# ---------------------------------------------------------------------------
+# grouping / batchability
+# ---------------------------------------------------------------------------
+
+def test_batch_signature_partitions():
+    a2 = ScenarioSpec(algorithm="fediac", a=2, **TINY)
+    a4 = ScenarioSpec(algorithm="fediac", a=4, lr0=0.05, beta=1.0, **TINY)
+    sw = ScenarioSpec(algorithm="switchml", agg_overrides=(("bits", 12),),
+                      **TINY)
+    pkt = ScenarioSpec(algorithm="fediac", a=2, transport="packet", **TINY)
+    assert a2.batch_signature() == a4.batch_signature()
+    assert a2.batch_signature() != sw.batch_signature()
+    assert a2.batchable() and sw.batchable() and not pkt.batchable()
+    # pricing-only fields never split a group
+    hi = ScenarioSpec(algorithm="fediac", a=2, switch="high", **TINY)
+    lo = ScenarioSpec(algorithm="fediac", a=2, switch="low", **TINY)
+    assert hi.batch_signature() == lo.batch_signature()
+
+
+def test_cell_key_stable_and_flat():
+    spec = ScenarioSpec(name="x/y", algorithm="fediac", a=2, **TINY)
+    k = cell_key(spec, 7)
+    assert k == cell_key(spec, 7) and "/" not in k
+    assert k != cell_key(spec, 8)
+
+
+# ---------------------------------------------------------------------------
+# resume
+# ---------------------------------------------------------------------------
+
+def test_resume_skips_finished_cells(tmp_path):
+    progress = str(tmp_path / "sweep_progress.npz")
+    a2 = ScenarioSpec(name="a2", algorithm="fediac", a=2, **TINY)
+    a3 = ScenarioSpec(name="a3", algorithm="fediac", a=3, **TINY)
+
+    first = run_sweep([a2], (0,), progress_path=progress)
+    assert not first.cells[0].resumed
+
+    # same sweep again: everything loads from disk, nothing recomputes
+    again = run_sweep([a2], (0,), progress_path=progress)
+    assert again.cells[0].resumed
+    _assert_same(first.cells[0].history, again.cells[0].history, "resume")
+
+    # a grown grid resumes the finished cell and computes only the new one
+    grown = run_sweep([a2, a3], (0,), progress_path=progress)
+    by_key = grown.by_key()
+    assert by_key[cell_key(a2, 0)].resumed
+    assert not by_key[cell_key(a3, 0)].resumed
+    _assert_same(run_cell_sequential(a3, 0), by_key[cell_key(a3, 0)].history,
+                 "grown")
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+def test_grid_registry():
+    for name in GRIDS:
+        grid = get_grid(name)
+        assert grid and all(isinstance(s, ScenarioSpec) for s in grid), name
+    with pytest.raises(KeyError):
+        get_grid("nope")
+    assert all(s.batchable() for s in smoke_grid())
+    assert not any(s.batchable() for s in get_grid("dataplane"))
+
+
+def test_packet_cells_take_sequential_fallback():
+    spec = ScenarioSpec(name="pkt", algorithm="fediac", a=2,
+                        transport="packet", **TINY)
+    res = run_sweep([spec], (0,))
+    h = run_cell_sequential(spec, 0)
+    _assert_same(h, res.cells[0].history, "packet")

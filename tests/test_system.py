@@ -5,7 +5,6 @@ test_distributed.py)."""
 import jax
 import jax.flatten_util
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs import get_smoke
 from repro.core.fediac import FediACConfig, aggregate_stack
