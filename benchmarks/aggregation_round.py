@@ -1,18 +1,27 @@
-"""End-to-end ``aggregate_stack`` wall-clock: the round-plan engine vs the
+"""End-to-end aggregation wall-clock: the round-plan engines vs the
 kept-alive seed path, measured in the same run.
 
 Grid: d in {1e5, 1e6} x N in {8, 32} x both selection-mode pairs
 (topk/topk — paper-faithful — and threshold/block — the sort-free
-billion-parameter mode).  Timings interleave engine and seed reps so
-machine drift cancels; the engine output is also checked **bit-identical**
-to the seed on every cell (the round-plan engine's core guarantee).
+billion-parameter mode) for the monolithic engine, plus the streaming
+chunk-scanned engine (DESIGN.md §12) at d = 1e6 and at **d = 1e7** — a
+round size whose monolithic [N, d] temporaries don't fit this box's
+working set, so it is tracked engine-only.  Engine outputs are checked
+**bit-identical** to the seed on every compared cell.
+
+Timing interleaves seed/engine reps and reports median seconds per
+candidate plus a paired-ratio-median speedup
+(``common.{interleaved_times,paired_ratio_median}``): on this 2-core box
+back-to-back means drift 1.5-2x run to run, which used to make the
+threshold/block speedups look like regressions.  Each cell runs in a
+spawned subprocess so its ``peak_rss_mb`` — the memory story of the
+streaming engine — is its own high-water mark, not the grid's.
 
 Writes ``BENCH_aggregation.json`` at the repo root so the perf trajectory
-is tracked from this PR onward; emits the usual CSV rows for
-``benchmarks.run``.
+is tracked; emits the usual CSV rows for ``benchmarks.run``.
 
   PYTHONPATH=src python -m benchmarks.aggregation_round [--no-compare-seed]
-                                                        [--out PATH]
+                                                        [--no-rss] [--out P]
 """
 
 from __future__ import annotations
@@ -20,86 +29,116 @@ from __future__ import annotations
 import argparse
 import json
 import os
-import time
+import statistics
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.fediac import FediACConfig, aggregate_stack
-from repro.core.seed_ref import aggregate_stack_seed
-
-from .common import emit, smoke_out_path
+from .common import (emit, interleaved_times, paired_ratio_median,
+                     smoke_out_path)
 
 OUT_PATH = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
                         "BENCH_aggregation.json")
 
 GRID = [(100_000, 8), (100_000, 32), (1_000_000, 8), (1_000_000, 32)]
 MODES = [("topk", "topk"), ("threshold", "block")]
+# streaming-engine cells: the 1e6 overlap cells (still seed-compared, so
+# bit-identity stays pinned at benchmark scale) and the 1e7 scale cell.
+STREAM_GRID = [(1_000_000, 8, "topk", "topk", True),
+               (1_000_000, 8, "threshold", "block", True),
+               (10_000_000, 8, "topk", "topk", False)]
 REPS = 5
 
 
-def _time_once(fn, u, key) -> float:
-    t0 = time.perf_counter()
-    jax.block_until_ready(fn(u, key))
-    return time.perf_counter() - t0
-
-
 def bench_cell(d: int, n: int, vote_mode: str, compact_mode: str,
-               *, compare_seed: bool = True, reps: int = REPS) -> dict:
-    cfg = FediACConfig(vote_mode=vote_mode, compact_mode=compact_mode)
+               *, engine: str = "monolithic", stream_chunk: int = 0,
+               compare_seed: bool = True, reps: int = REPS) -> dict:
+    from repro.core.fediac import FediACConfig, aggregate_round
+    from repro.core.seed_ref import aggregate_stack_seed
+
+    cfg = FediACConfig(vote_mode=vote_mode, compact_mode=compact_mode,
+                       engine=engine, stream_chunk=stream_chunk)
     key = jax.random.PRNGKey(0)
     u = jax.block_until_ready(
         jax.random.normal(jax.random.PRNGKey(1), (n, d)) ** 3)
-    engine = jax.jit(lambda u, k: aggregate_stack(u, cfg, k)[:3])
-    seed = jax.jit(lambda u, k: aggregate_stack_seed(u, cfg, k))
+    # no donation here: a timing loop must keep `u` alive across reps, so
+    # aliasing could never kick in anyway (the donation contract is pinned
+    # by tests/test_stream_engine.py instead).
+    engine_fn = jax.jit(lambda u, k: aggregate_round(u, cfg, k)[:3])
+    seed_fn = jax.jit(lambda u, k: aggregate_stack_seed(u, cfg, k))
 
-    # compile + warm both before any timing
-    out_e = jax.block_until_ready(engine(u, key))
-    t_engine = t_seed = 0.0
+    out_e = jax.block_until_ready(engine_fn(u, key))  # compile + warm
+    fns = {"engine": lambda: jax.block_until_ready(engine_fn(u, key))}
     identical = True
     if compare_seed:
-        out_s = jax.block_until_ready(seed(u, key))
+        out_s = jax.block_until_ready(seed_fn(u, key))
         identical = all(bool(jnp.all(a == b)) for a, b in zip(out_e, out_s))
-        for _ in range(reps):  # interleave: machine drift hits both equally
-            t_seed += _time_once(seed, u, key)
-            t_engine += _time_once(engine, u, key)
-    else:
-        for _ in range(reps):
-            t_engine += _time_once(engine, u, key)
+        del out_s
+        fns["seed"] = lambda: jax.block_until_ready(seed_fn(u, key))
+    # drop the warmup outputs before timing: holding residuals [N, d] alive
+    # through the reps would inflate peak_rss_mb (the scale cell's headline).
+    del out_e
+    times = interleaved_times(fns, reps=reps)
     cell = {
         "d": d, "n_clients": n, "vote_mode": vote_mode,
-        "compact_mode": compact_mode, "reps": reps,
-        "engine_s": round(t_engine / reps, 4),
+        "compact_mode": compact_mode, "engine": engine, "reps": reps,
+        "engine_s": round(statistics.median(times["engine"]), 4),
     }
     if compare_seed:
-        cell["seed_s"] = round(t_seed / reps, 4)
-        cell["speedup"] = round(t_seed / max(t_engine, 1e-9), 3)
+        cell["seed_s"] = round(statistics.median(times["seed"]), 4)
+        # per-rep paired ratio: a machine-noise burst inflates the seed and
+        # engine rep it spans together, so the ratio barely moves.
+        cell["speedup"] = round(paired_ratio_median(times["seed"],
+                                                    times["engine"]), 3)
         cell["bit_identical"] = identical
     return cell
 
 
-def run(*, compare_seed: bool = True, smoke: bool = False,
+def _measured_cell(*args, rss: bool, **kwargs) -> dict:
+    """One cell, in its own process when a peak-RSS reading is wanted."""
+    if not rss:
+        return bench_cell(*args, **kwargs)
+    from .memprof import run_isolated
+    cell, peak = run_isolated("benchmarks.aggregation_round:bench_cell",
+                              *args, **kwargs)
+    cell["peak_rss_mb"] = peak
+    return cell
+
+
+def run(*, compare_seed: bool = True, smoke: bool = False, rss: bool = True,
         out_path: str = OUT_PATH):
     if smoke:
         out_path = smoke_out_path(out_path, OUT_PATH,
                                   "BENCH_aggregation.smoke.json")
     grid = GRID[:1] if smoke else GRID
     modes = MODES[:1] if smoke else MODES
+    stream_grid = ([(100_000, 8, "topk", "topk", True)] if smoke
+                   else STREAM_GRID)
     reps = 2 if smoke else REPS
-    cells = []
-    rows = []
+    rss = rss and not smoke
+    cells, rows = [], []
     for vote_mode, compact_mode in modes:
         for d, n in grid:
-            cell = bench_cell(d, n, vote_mode, compact_mode,
-                              compare_seed=compare_seed, reps=reps)
-            cells.append(cell)
-            tag = f"agg/{vote_mode}-{compact_mode}/d{d}/n{n}"
-            if compare_seed:
-                rows.append((tag, cell["speedup"],
-                             f"engine={cell['engine_s']}s_seed={cell['seed_s']}s_"
-                             f"bitident={cell['bit_identical']}"))
-            else:
-                rows.append((tag, cell["engine_s"], "engine_only"))
+            cells.append(_measured_cell(d, n, vote_mode, compact_mode,
+                                        rss=rss, compare_seed=compare_seed,
+                                        reps=reps))
+    for d, n, vote_mode, compact_mode, vs_seed in stream_grid:
+        cells.append(_measured_cell(d, n, vote_mode, compact_mode, rss=rss,
+                                    engine="stream",
+                                    compare_seed=compare_seed and vs_seed,
+                                    reps=min(reps, 3) if d > 2_000_000
+                                    else reps))
+    for cell in cells:
+        tag = (f"agg/{cell['engine']}/{cell['vote_mode']}-"
+               f"{cell['compact_mode']}/d{cell['d']}/n{cell['n_clients']}")
+        extra = (f"_rss={cell['peak_rss_mb']}MB" if "peak_rss_mb" in cell
+                 else "")
+        if "speedup" in cell:
+            rows.append((tag, cell["speedup"],
+                         f"engine={cell['engine_s']}s_seed={cell['seed_s']}s_"
+                         f"bitident={cell['bit_identical']}{extra}"))
+        else:
+            rows.append((tag, cell["engine_s"], f"engine_only{extra}"))
     payload = {
         "benchmark": "aggregation_round",
         "backend": jax.default_backend(),
@@ -117,12 +156,15 @@ def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--no-compare-seed", dest="compare_seed",
                     action="store_false", default=True,
-                    help="time only the engine (skip the seed reference)")
+                    help="time only the engines (skip the seed reference)")
+    ap.add_argument("--no-rss", dest="rss", action="store_false",
+                    default=True,
+                    help="run cells in-process (no peak_rss_mb records)")
     ap.add_argument("--smoke", action="store_true",
-                    help="single small cell, temp output (CI)")
+                    help="small cells, temp output (CI)")
     ap.add_argument("--out", default=OUT_PATH)
     args = ap.parse_args(argv)
-    emit(run(compare_seed=args.compare_seed, smoke=args.smoke,
+    emit(run(compare_seed=args.compare_seed, smoke=args.smoke, rss=args.rss,
              out_path=args.out))
     return 0
 

@@ -44,6 +44,10 @@ TRACKED = {
 WALL_TOL = 4.0   # wall-clock band: fresh within [tracked/4, tracked*4]
 ACC_TOL = 0.005  # |final_acc drift| tolerated (cross-host XLA ulps only;
                  # the injected drift of 0.013 must stay detectable)
+RSS_TOL = 2.0    # peak-RSS band: generous — the jax/XLA runtime floor and
+                 # allocator behavior move between releases, but a streaming
+                 # cell silently regressing to monolithic footprints will
+                 # blow 2x
 
 
 # ---------------------------------------------------------------------------
@@ -51,9 +55,21 @@ ACC_TOL = 0.005  # |final_acc drift| tolerated (cross-host XLA ulps only;
 # ---------------------------------------------------------------------------
 
 def fresh_aggregation() -> dict:
-    """One small aggregation cell, engine-vs-seed, bit-identity checked."""
-    from .aggregation_round import bench_cell
-    return bench_cell(100_000, 8, "topk", "topk", compare_seed=True, reps=2)
+    """One small aggregation cell per engine, engine-vs-seed, bit-identity
+    checked.  Both cells go through ``_measured_cell`` — the exact
+    subprocess protocol that produced the tracked baselines — so their
+    ``peak_rss_mb`` values are comparable.  The streaming cell forces a
+    small ``stream_chunk`` so the d=1e5 smoke size still exercises a real
+    multi-chunk scan (at the default chunk it would be a single chunk and
+    a streaming memory regression could hide)."""
+    from .aggregation_round import _measured_cell
+    return {
+        "monolithic": _measured_cell(100_000, 8, "topk", "topk", rss=True,
+                                     compare_seed=True, reps=2),
+        "stream": _measured_cell(100_000, 8, "topk", "topk", rss=True,
+                                 engine="stream", stream_chunk=1 << 14,
+                                 compare_seed=True, reps=2),
+    }
 
 
 def fresh_dataplane(rounds: int) -> dict:
@@ -95,23 +111,55 @@ def _band(fresh: float, tracked: float, tol: float = WALL_TOL) -> bool:
     return tracked / tol <= fresh <= tracked * tol
 
 
+def _cell_tag(cell: dict) -> str:
+    return (f"{cell.get('engine', 'monolithic')} "
+            f"{cell['vote_mode']}/{cell['compact_mode']} "
+            f"d={cell['d']} n={cell['n_clients']}")
+
+
 def compare_aggregation(tracked: dict, fresh: dict) -> list:
     fails = []
     for cell in tracked["cells"]:
-        if not cell.get("bit_identical", False):
-            fails.append(f"tracked aggregation cell d={cell['d']} "
-                         f"n={cell['n_clients']} lost bit-identity")
-    if not fresh.get("bit_identical", False):
-        fails.append("fresh aggregation cell is not bit-identical to the "
-                     "seed path")
+        tag = _cell_tag(cell)
+        if "speedup" in cell:  # seed-compared cell (scale cells are
+            #                    engine-only: the seed cannot run them)
+            if not cell.get("bit_identical", False):
+                fails.append(f"tracked aggregation cell {tag} lost "
+                             "bit-identity")
+            if cell["speedup"] < 1.0:
+                fails.append(f"tracked aggregation cell {tag} is slower "
+                             f"than the seed path (speedup "
+                             f"{cell['speedup']} < 1.0)")
+        if "peak_rss_mb" not in cell:
+            fails.append(f"tracked aggregation cell {tag} lacks peak_rss_mb")
+    fm = fresh["monolithic"]
     ref = next((c for c in tracked["cells"]
-                if (c["d"], c["n_clients"], c["vote_mode"]) ==
-                   (fresh["d"], fresh["n_clients"], fresh["vote_mode"])), None)
+                if (c["d"], c["n_clients"], c["vote_mode"],
+                    c.get("engine", "monolithic")) ==
+                   (fm["d"], fm["n_clients"], fm["vote_mode"],
+                    "monolithic")), None)
     if ref is None:
         fails.append("tracked aggregation baseline lacks the smoke cell")
-    elif not _band(fresh["engine_s"], ref["engine_s"]):
-        fails.append(f"aggregation engine_s {fresh['engine_s']} outside "
-                     f"{WALL_TOL}x band of tracked {ref['engine_s']}")
+        return fails
+    # Both fresh engines band against the tracked monolithic smoke cell:
+    # there is no tracked streaming cell at smoke size, and the engines are
+    # within ~1.2x of each other there — well inside the 4x/2x bands.  The
+    # streaming peak band is what catches a chunk scan silently
+    # re-materializing monolithic-sized [N, d] temporaries.
+    for engine in ("monolithic", "stream"):
+        fc = fresh[engine]
+        if not fc.get("bit_identical", False):
+            fails.append(f"fresh {engine} aggregation cell is not "
+                         "bit-identical to the seed path")
+        if not _band(fc["engine_s"], ref["engine_s"]):
+            fails.append(f"fresh {engine} aggregation engine_s "
+                         f"{fc['engine_s']} outside {WALL_TOL}x band of "
+                         f"tracked {ref['engine_s']}")
+        if "peak_rss_mb" in fc and "peak_rss_mb" in ref and \
+                not _band(fc["peak_rss_mb"], ref["peak_rss_mb"], RSS_TOL):
+            fails.append(f"fresh {engine} aggregation peak_rss_mb "
+                         f"{fc['peak_rss_mb']} outside {RSS_TOL}x band of "
+                         f"tracked {ref['peak_rss_mb']}")
     return fails
 
 
@@ -183,6 +231,9 @@ def inject_drift(tracked: dict) -> dict:
     """Perturb every tracked baseline; the gate must catch each one."""
     drifted = copy.deepcopy(tracked)
     drifted["aggregation"]["cells"][0]["bit_identical"] = False
+    if "peak_rss_mb" in drifted["aggregation"]["cells"][0]:
+        drifted["aggregation"]["cells"][0]["peak_rss_mb"] = round(
+            drifted["aggregation"]["cells"][0]["peak_rss_mb"] * 8, 1)
     cell = next(c for c in drifted["dataplane"]["cells"]
                 if c["loss"] == 0.0 and c["participation"] == 1.0)
     cell["final_acc"] = round(cell["final_acc"] + 0.013, 4)

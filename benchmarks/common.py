@@ -13,6 +13,7 @@ The fleet's bit-identity oracle is ``repro.sweep.run_cell_sequential``
 from __future__ import annotations
 
 import os
+import statistics
 import tempfile
 import time
 
@@ -53,3 +54,35 @@ def timed(f, *args, reps: int = 3, **kw):
         out = f(*args, **kw)
     dt = (time.perf_counter() - t0) / reps
     return out, dt * 1e6  # us
+
+
+def interleaved_times(fns: dict, reps: int = 5) -> dict:
+    """Per-function per-rep seconds over ``reps`` interleaved passes.
+
+    This 2-core box's wall clock drifts 1.5-2x between runs (bursts last
+    seconds), which is enough to flip a speedup ratio measured as
+    back-to-back means.  Interleaving is the first defense: every rep runs
+    each candidate once before any candidate runs again, so a burst hits
+    all of them roughly equally.  Callables must already be compiled and
+    warmed; each must block until its work is done (e.g. wrap in
+    ``jax.block_until_ready``).
+    """
+    times = {name: [] for name in fns}
+    for _ in range(reps):
+        for name, fn in fns.items():
+            t0 = time.perf_counter()
+            fn()
+            times[name].append(time.perf_counter() - t0)
+    return times
+
+
+def paired_ratio_median(times_a: list, times_b: list) -> float:
+    """Median of the per-rep ratios a_i / b_i.
+
+    The most burst-robust speedup statistic available here: a slowdown
+    burst spanning rep i inflates a_i and b_i together, so their ratio
+    barely moves, whereas a ratio of medians still shifts when a burst
+    covers different fractions of the two series.
+    """
+    return statistics.median(a / max(b, 1e-12)
+                             for a, b in zip(times_a, times_b))

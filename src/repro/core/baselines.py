@@ -41,7 +41,8 @@ from dataclasses import dataclass
 import jax
 import jax.numpy as jnp
 
-from .fediac import FediACConfig, TrafficStats, aggregate_stack, round_traffic
+from .fediac import (FediACConfig, TrafficStats, aggregate_round,
+                     round_traffic)
 from .quantize import quantize, dequantize, scale_factor
 
 __all__ = ["SwitchLoad", "fedavg", "switchml", "topk_server", "omnireduce",
@@ -188,7 +189,7 @@ def _libra_account(n: int, d: int, aux, *, k_frac: float = 0.01,
 
 
 def _fediac_core(u_stack, state, key, dyn, *, cfg: FediACConfig = FediACConfig()):
-    delta, residuals, counts, _ = aggregate_stack(u_stack, cfg, key,
+    delta, residuals, counts, _ = aggregate_round(u_stack, cfg, key,
                                                   a=dyn.get("a"))
     return delta, residuals, state, {}
 

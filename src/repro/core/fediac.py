@@ -43,7 +43,8 @@ from . import compaction, voting
 from .quantize import dequantize, quantize, scale_factor
 from .round_plan import RoundPlan, build_round_plan
 
-__all__ = ["FediACConfig", "TrafficStats", "aggregate_stack", "fediac_allreduce",
+__all__ = ["FediACConfig", "TrafficStats", "aggregate_stack",
+           "aggregate_round", "fediac_allreduce",
            "dense_allreduce", "client_compress", "client_vote_stack",
            "phase2_compress", "plan_wants_dense_mask", "scatter_sum",
            "round_traffic", "RoundPlan", "build_round_plan"]
@@ -83,6 +84,12 @@ class FediACConfig:
                                   # shard (paper-faithful); tensor: per-leaf
                                   # aggregation — peak memory follows the
                                   # largest tensor instead of the full shard
+    # engine selection for the stacked round (DESIGN.md §12): monolithic
+    # materializes [N, d] temporaries; stream runs the round as a chunk
+    # scan with O(N*chunk) peak memory, bit-identical output.
+    engine: str = "monolithic"    # monolithic | stream
+    stream_chunk: int = 0         # coords per streamed chunk (0 = default,
+                                  # repro.core.stream_engine.DEFAULT_CHUNK)
 
     def k(self, d: int) -> int:
         return max(1, int(round(self.k_frac * d)))
@@ -138,6 +145,15 @@ def _vote_scores(u: jax.Array, cfg: FediACConfig) -> jax.Array:
     return u
 
 
+def _vote_scores_stack(u_stack: jax.Array, cfg: FediACConfig) -> jax.Array:
+    """Stacked vote scores; at vote_chunk == 1 the per-row score map is the
+    identity, and skipping the vmap saves XLA an [N, d] copy on the hot
+    path (the threshold/block cells' few-percent engine regression)."""
+    if cfg.vote_chunk == 1:
+        return u_stack
+    return jax.vmap(lambda u: _vote_scores(u, cfg))(u_stack)
+
+
 def _client_votes(u: jax.Array, cfg: FediACConfig, key: jax.Array) -> jax.Array:
     """Phase-1 client side: 0/1 vote array (per chunk if vote_chunk > 1)."""
     scores = _vote_scores(u, cfg)
@@ -157,7 +173,7 @@ def _vote_counts_stack(u_stack: jax.Array, cfg: FediACConfig,
     vmapped indicator (already one cheap pass) summed as the seed did."""
     if cfg.vote_mode == "threshold":
         return client_vote_stack(u_stack, cfg, keys).astype(jnp.int32).sum(axis=0)
-    scores = jax.vmap(lambda u: _vote_scores(u, cfg))(u_stack)
+    scores = _vote_scores_stack(u_stack, cfg)
     return voting.vote_counts_stack(scores, cfg.k(scores.shape[-1]), keys)
 
 
@@ -172,7 +188,7 @@ def client_vote_stack(u_stack: jax.Array, cfg: FediACConfig,
     materializing the stack), which is what keeps the lossless packet
     round exactly equal to :func:`aggregate_stack`.
     """
-    scores = jax.vmap(lambda u: _vote_scores(u, cfg))(u_stack)
+    scores = _vote_scores_stack(u_stack, cfg)
     k = cfg.k(scores.shape[-1])
     if cfg.vote_mode == "threshold":
         return jax.vmap(
@@ -186,15 +202,31 @@ def _block_compress(u: jax.Array, cfg: FediACConfig, f: jax.Array,
     """Sort-free phase 2: cumsum block compaction (compact_mode='block').
 
     The block selection lives in the shared round plan; per-client work is
-    one fused quantize/compact/residual pass.
+    one fused quantize/compact/residual pass.  This wire form (the
+    ``nb*cb`` compact buffer) is what the allreduce psum and the packet
+    dataplane transmit; the stacked engine uses :func:`_block_compress_dense`
+    instead — the buffers would only be summed and scattered right back.
     """
-    keep, pos = plan.keep_dense, plan.pos
+    q, residual = _block_compress_dense(u, cfg, f, key, plan)
+    q_buf = compaction.block_compact(q, plan.keep_dense, plan.pos,
+                                     cfg.block_size, cfg.capacity_frac)
+    return q_buf, residual
+
+
+def _block_compress_dense(u: jax.Array, cfg: FediACConfig, f: jax.Array,
+                          key: jax.Array, plan: RoundPlan):
+    """Block-mode phase 2 without the wire form: (dense q int32[d],
+    residual).  ``aggregate_stack`` only ever *sums* the compact buffers
+    and de-compacts the sum, and ``block_scatter(sum_i block_compact(q_i))
+    == where(keep, sum_i q_i, 0)`` coordinate-for-coordinate (each kept
+    coordinate owns exactly one buffer slot), so the per-client
+    compact/scatter round-trip — a d-sized scatter per client — is pure
+    wire bookkeeping the in-memory engine can skip."""
+    keep = plan.keep_dense
     uniforms = jax.random.uniform(key, u.shape, jnp.float32)
     q = quantize(jnp.where(keep, u, 0.0), f, uniforms)
-    q_buf = compaction.block_compact(q, keep, pos, cfg.block_size,
-                                     cfg.capacity_frac)
     residual = (u - jnp.where(keep, dequantize(q, f), 0.0)).astype(u.dtype)
-    return q_buf, residual
+    return q, residual
 
 
 def client_compress(u: jax.Array, cfg: FediACConfig, f: jax.Array,
@@ -305,17 +337,42 @@ def aggregate_stack(u_stack: jax.Array, cfg: FediACConfig, key: jax.Array,
     # recomputed inside the vmap.
     plan = build_round_plan(counts, cfg, n, a=a,
                             with_dense_mask=plan_wants_dense_mask(cfg))
+    if cfg.compact_mode == "block":
+        # dense form: summing the per-client compact buffers and scattering
+        # the sum back equals masking the dense integer sum — skip the
+        # d-sized compact scatter per client (wire paths keep it).
+        q_dense, residuals = jax.vmap(
+            lambda u, k: _block_compress_dense(u, cfg, f, k, plan))(u_stack,
+                                                                    q_keys)
+        summed = q_dense.sum(axis=0)   # the PS's pipelined integer addition
+        delta = jnp.where(plan.keep_dense, summed,
+                          0).astype(jnp.float32) / (n * f)
+        return delta, residuals, counts, round_traffic(cfg, d)
     compress = phase2_compress(cfg)
     q_bufs, residuals = jax.vmap(
         lambda u, k: compress(u, cfg, f, k, plan))(u_stack, q_keys)
     summed = q_bufs.sum(axis=0)        # the PS's pipelined integer addition
-    if cfg.compact_mode == "block":
-        delta = compaction.block_scatter(summed, plan.keep_dense, plan.pos, d,
-                                         cfg.block_size, cfg.capacity_frac)
-        delta = delta.astype(jnp.float32) / (n * f)
-        return delta, residuals, counts, round_traffic(cfg, d)
     delta = scatter_sum(summed, plan.idx, plan.keep, cfg, d).astype(jnp.float32) / (n * f)
     return delta, residuals, counts, round_traffic(cfg, d)
+
+
+def aggregate_round(u_stack: jax.Array, cfg: FediACConfig, key: jax.Array,
+                    *, a=None):
+    """Run one stacked round on the engine ``cfg.engine`` selects.
+
+    ``"monolithic"`` is :func:`aggregate_stack`; ``"stream"`` is the
+    chunk-scanned :func:`repro.core.stream_engine.aggregate_stream` —
+    same signature and return contract, bit-identical outputs, O(N·chunk)
+    peak memory (DESIGN.md §12).  The FL loop and the fleet runner pick
+    the engine through this single dispatch.
+    """
+    if cfg.engine == "stream":
+        from .stream_engine import aggregate_stream
+        return aggregate_stream(u_stack, cfg, key, a=a)
+    if cfg.engine != "monolithic":
+        raise ValueError(f"unknown FediAC engine {cfg.engine!r} "
+                         "(expected 'monolithic' or 'stream')")
+    return aggregate_stack(u_stack, cfg, key, a=a)
 
 
 # ---------------------------------------------------------------------------

@@ -38,6 +38,12 @@ class RoundPlan(NamedTuple):
     ``sel`` uint8[d] is the dense 0/1 selection mask; always present in
     block mode (it *is* ``keep_dense``), built on demand in topk mode for
     the fused gather-quant kernel.
+
+    ``slot`` int32[d] is the inverse of ``idx``: the compact-buffer slot of
+    every consensus coordinate (0 — a harmless dummy, masked by ``sel`` —
+    elsewhere).  Built on demand for the streaming engine (DESIGN.md §12),
+    whose chunk scan writes disjoint index ranges and needs each
+    coordinate's buffer position without re-sorting.
     """
 
     idx: Optional[jax.Array]
@@ -45,6 +51,7 @@ class RoundPlan(NamedTuple):
     keep_dense: Optional[jax.Array]
     pos: Optional[jax.Array]
     sel: Optional[jax.Array]
+    slot: Optional[jax.Array] = None
 
     @property
     def capacity(self) -> int:
@@ -52,7 +59,8 @@ class RoundPlan(NamedTuple):
 
 
 def build_round_plan(counts: jax.Array, cfg, n_clients: int,
-                     *, a=None, with_dense_mask: bool = False) -> RoundPlan:
+                     *, a=None, with_dense_mask: bool = False,
+                     with_slot_map: bool = False) -> RoundPlan:
     """Run the once-per-round consensus selection from the vote counts.
 
     ``counts`` int32[d//g] psum'd votes; ``cfg`` a FediACConfig; the result
@@ -81,4 +89,9 @@ def build_round_plan(counts: jax.Array, cfg, n_clients: int,
     if with_dense_mask:
         sel = jnp.zeros((n_chunks,), jnp.uint8).at[idx].set(
             keep.astype(jnp.uint8))
-    return RoundPlan(idx=idx, keep=keep, keep_dense=None, pos=None, sel=sel)
+    slot = None
+    if with_slot_map:
+        slot = jnp.zeros((n_chunks,), jnp.int32).at[idx].set(
+            jnp.arange(capacity, dtype=jnp.int32))
+    return RoundPlan(idx=idx, keep=keep, keep_dense=None, pos=None, sel=sel,
+                     slot=slot)

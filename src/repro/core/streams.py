@@ -1,0 +1,85 @@
+"""Sliceable counter-based random streams for the streaming round engine.
+
+``jax.random.uniform(key, (d,))`` materializes the whole d-sized draw, so a
+chunk-scanned engine (DESIGN.md §12) that needs *this chunk's* uniforms of
+*that* stream would have to either hold all d values live (defeating the
+O(chunk) memory bound) or re-draw per chunk with fresh keys (changing the
+random stream, breaking bit-identity with the monolithic path).
+
+Threefry is counter-based, so neither is necessary: the bits at logical
+index ``i`` of a d-sized draw are a pure function of ``(key, i, d)``.  This
+module reconstructs exactly the counters jax's two generation layouts use —
+
+* **partitionable** (``jax_threefry_partitionable=True``): bit ``i`` is the
+  XOR of the two threefry output lanes for the count pair
+  ``(i >> 32, i & 0xffffffff)`` — slice-invariant by design;
+* **legacy**: the d counters ``iota(d)`` are split in half (odd sizes pad
+  one zero), pair ``p`` is ``(p, h + p)`` with ``h = ceil(d/2)``, and the
+  output is the concatenation of the two lanes — so index ``i`` lives in
+  lane 0 of pair ``i`` when ``i < h`` and lane 1 of pair ``i - h``
+  otherwise —
+
+and applies jax's uint32→U[0,1) float mapping, giving
+``uniform_block(key, start, size, d)`` bit-identical to
+``jax.random.uniform(key, (d,), float32)[start:start + size]`` (pinned in
+``tests/test_stream_engine.py``).  ``start`` may be a traced scalar; ``size``
+and ``d`` must be static.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+try:  # public home since jax 0.4.x
+    from jax.extend.random import threefry_2x32
+except ImportError:  # pragma: no cover - very old/new layouts
+    from jax._src.prng import threefry_2x32
+
+__all__ = ["uniform_block"]
+
+
+def _key_data(key: jax.Array) -> jax.Array:
+    """Raw uint32[2] key data for both old-style and typed PRNG keys."""
+    if jnp.issubdtype(key.dtype, jax.dtypes.prng_key):
+        return jax.random.key_data(key)
+    return key
+
+
+def _partitionable() -> bool:
+    return bool(jax.config.jax_threefry_partitionable)
+
+
+def _bits_block(key: jax.Array, start, size: int, total: int) -> jax.Array:
+    """uint32 bits ``random_bits(key, 32, (total,))[start:start + size]``."""
+    start = jnp.asarray(start, jnp.uint32)
+    j = jnp.arange(size, dtype=jnp.uint32) + start
+    if _partitionable():
+        # count pair is the 64-bit index split (hi, lo); hi == 0 for any
+        # in-bounds total (total < 2**32), bits = lane0 ^ lane1.
+        out = threefry_2x32(key, jnp.concatenate([jnp.zeros_like(j), j]))
+        return out[:size] ^ out[size:]
+    h = -(-total // 2)  # split point, odd totals pad one zero counter
+    first = j < h
+    a = jnp.where(first, j, j - h)
+    b_full = jnp.where(first, j + h, j)
+    b = jnp.where(b_full < total, b_full, 0)  # the odd-size zero pad
+    out = threefry_2x32(key, jnp.concatenate([a, b]))
+    return jnp.where(first, out[:size], out[size:])
+
+
+def uniform_block(key: jax.Array, start, size: int, total: int) -> jax.Array:
+    """float32[size] == ``jax.random.uniform(key, (total,))[start:start+size]``.
+
+    Bit-identical under both threefry layouts.  Recomputes both threefry
+    lanes of each touched pair, so streaming a whole d-vector in chunks
+    costs ~2x the monolithic draw's threefry work — the price of O(chunk)
+    live memory.
+    """
+    bits = _bits_block(_key_data(key), start, size, total)
+    # jax's _uniform for float32 [0, 1): mantissa bits into [1, 2), shift
+    # down, clamp (the clamp is load-bearing in jax; replicated verbatim).
+    fb = (bits >> np.uint32(9)) | np.uint32(0x3F800000)
+    floats = jax.lax.bitcast_convert_type(fb, jnp.float32) - np.float32(1.0)
+    return jax.lax.max(np.float32(0.0), floats)

@@ -76,6 +76,23 @@ def pack_votes_threshold(scores_flat: jax.Array, tau,
     return vote_pack.vote_pack(s2, tau, interpret=interpret).reshape(-1)
 
 
+def gather_quant_chunk(u_chunk: jax.Array, uniforms_chunk: jax.Array,
+                       sel_chunk: jax.Array, f,
+                       *, interpret: bool | None = None):
+    """Chunk-granular fused phase 2: all N clients' (L,) coordinate slice
+    of one round in a single invocation — ``(u [N, L], uniforms [N, L],
+    shared sel [L], f) -> (q int32 [N, L], residual fp32 [N, L])``.
+
+    This is the streaming engine's grid step (DESIGN.md §12): the kernel
+    is elementwise per coordinate, so chunk invocations are bit-identical
+    to slicing one full-d ``gather_quant_flat`` call — provided the
+    caller feeds the *sliced* uniforms of the full-d stream
+    (``repro.core.streams.uniform_block``), not fresh draws.
+    """
+    return jax.vmap(lambda u, uni: gather_quant_flat(
+        u, uni, sel_chunk, f, interpret=interpret))(u_chunk, uniforms_chunk)
+
+
 def gather_quant_flat(u_flat: jax.Array, uniforms_flat: jax.Array,
                       sel_flat: jax.Array, f,
                       *, interpret: bool | None = None):

@@ -219,11 +219,23 @@ class PacketTransport:
         u_up = u[up_rows]
         m = jnp.max(jnp.abs(u_up))
         f = scale_factor(cfg.bits, n_up, 1.0) / jnp.clip(m, 1e-12, None)
+        stream = cfg.engine == "stream"
+        topk = cfg.compact_mode != "block"
         plan = build_round_plan(jnp.asarray(counts), cfg, n_up,
-                                with_dense_mask=plan_wants_dense_mask(cfg))
-        compress = phase2_compress(cfg)
-        q_bufs, res_up = jax.vmap(
-            lambda uu, kk: compress(uu, cfg, f, kk, plan))(u_up, q_keys[up_rows])
+                                with_dense_mask=(plan_wants_dense_mask(cfg)
+                                                 or (stream and topk)),
+                                with_slot_map=stream and topk)
+        if stream:
+            # chunk-streamed per-client buffers (DESIGN.md §12) — the same
+            # values the vmapped compress produces, O(N*chunk) live memory.
+            from repro.core.stream_engine import stream_compress_stack
+            q_bufs, res_up = stream_compress_stack(u_up, cfg, f,
+                                                   q_keys[up_rows], plan)
+        else:
+            compress = phase2_compress(cfg)
+            q_bufs, res_up = jax.vmap(
+                lambda uu, kk: compress(uu, cfg, f, kk, plan))(u_up,
+                                                               q_keys[up_rows])
         bufs_np = np.asarray(q_bufs)
 
         # ---- phase 2: reliable int32 packets through the register bank.

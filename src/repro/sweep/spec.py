@@ -44,6 +44,8 @@ class ScenarioSpec:
     capacity_frac: float = 0.05
     vote_mode: str = "topk"        # topk | threshold
     compact_mode: str = "topk"     # topk | block
+    engine: str = "monolithic"     # monolithic | stream (chunk-scanned
+                                   # round, bit-identical; DESIGN.md §12)
     # --- baseline aggregator kwargs, as a hashable (key, value) tuple
     agg_overrides: tuple = ()
     # --- task geometry
@@ -78,7 +80,8 @@ class ScenarioSpec:
                             k_frac=self.k_frac,
                             capacity_frac=self.capacity_frac,
                             vote_mode=self.vote_mode,
-                            compact_mode=self.compact_mode)
+                            compact_mode=self.compact_mode,
+                            engine=self.engine)
 
     def agg_kwargs(self) -> dict:
         """Aggregator kwargs for the classic (eager) registry interface."""

@@ -83,6 +83,10 @@ class FLConfig:
     use_pallas: bool | None = None  # override FediACConfig.use_pallas: route
                                     # the aggregation round through the fused
                                     # Pallas kernels (None = leave cfg as-is)
+    engine: str | None = None       # override FediACConfig.engine: "stream"
+                                    # runs the aggregation as the chunked
+                                    # O(N*chunk)-memory scan (DESIGN.md §12),
+                                    # bit-identical to "monolithic"
     switch: SwitchProfile = field(default_factory=SwitchProfile.high)
     local_train_s: float = 0.1     # paper: 0.1 (FEMNIST) .. 3 (CIFAR-100)
     transport: str = "memory"      # "memory" | "packet"  (DESIGN.md §9)
@@ -163,6 +167,13 @@ def make_client_round(unravel, batch: int, local_steps: int):
     return client_round
 
 
+# Folding the error-feedback carry into the fresh update stack is the round's
+# first [N, d] op; donating the stack lets XLA write the sum in place instead
+# of allocating another [N, d] buffer (values are the same add either way).
+_carry_in = jax.jit(lambda u_stack, e_stack: u_stack + e_stack,
+                    donate_argnums=(0,))
+
+
 def run_federated(clients, test, flcfg: FLConfig, *, hidden=(128, 64)) -> FLHistory:
     rng = np.random.default_rng(flcfg.seed)
     dim = clients[0].x.shape[1]
@@ -177,9 +188,15 @@ def run_federated(clients, test, flcfg: FLConfig, *, hidden=(128, 64)) -> FLHist
     assert n == flcfg.n_clients, (n, flcfg.n_clients)
 
     agg_kwargs = dict(flcfg.agg_kwargs)
-    if flcfg.use_pallas is not None and flcfg.aggregator == "fediac":
-        base_cfg = agg_kwargs.get("cfg", FediACConfig())
-        agg_kwargs["cfg"] = replace(base_cfg, use_pallas=flcfg.use_pallas)
+    if flcfg.aggregator == "fediac":
+        overrides = {}
+        if flcfg.use_pallas is not None:
+            overrides["use_pallas"] = flcfg.use_pallas
+        if flcfg.engine is not None:
+            overrides["engine"] = flcfg.engine
+        if overrides:
+            base_cfg = agg_kwargs.get("cfg", FediACConfig())
+            agg_kwargs["cfg"] = replace(base_cfg, **overrides)
     rates = client_rates(n, flcfg.seed)
     transport = make_transport(flcfg.aggregator, transport=flcfg.transport,
                                net=flcfg.net, profile=flcfg.switch,
@@ -203,7 +220,7 @@ def run_federated(clients, test, flcfg: FLConfig, *, hidden=(128, 64)) -> FLHist
         lr = flcfg.lr0 / (1.0 + np.sqrt(t) / flcfg.lr_tau)
         key, k1, k2 = jax.random.split(key, 3)
         u_stack, losses = local_round(flat, k1, lr)
-        u_stack = u_stack + e_stack
+        u_stack = _carry_in(u_stack, e_stack)
         res = transport.round(u_stack, agg_state, k2, t)
         delta, e_stack, agg_state = res.delta, res.residuals, res.state
         traffic, load = res.traffic, res.load

@@ -11,15 +11,20 @@ from benchmarks.check_regression import (compare_aggregation,
 
 def _tracked_stub():
     agg_cell = {"d": 100_000, "n_clients": 8, "vote_mode": "topk",
-                "compact_mode": "topk", "reps": 5, "engine_s": 0.05,
-                "seed_s": 0.08, "speedup": 1.6, "bit_identical": True}
+                "compact_mode": "topk", "engine": "monolithic", "reps": 5,
+                "engine_s": 0.05, "seed_s": 0.08, "speedup": 1.6,
+                "bit_identical": True, "peak_rss_mb": 800.0}
     dp_cell = {"loss": 0.0, "participation": 1.0, "final_acc": 0.81,
                "wall_clock_s": 12.345, "traffic_mb": 3.21}
     sweep_cell = {"scenario": "fediac-a2", "seed": 0, "final_acc": 0.5,
                   "traffic_mb": 1.25, "wall_clock_s": 4.5,
                   "bit_identical": True}
+    stream_cell = {**agg_cell, "engine": "stream", "d": 10_000_000,
+                   "peak_rss_mb": 1600.0}
+    for k in ("seed_s", "speedup", "bit_identical"):
+        stream_cell.pop(k)  # engine-only scale cell: the seed cannot run it
     return {
-        "aggregation": {"cells": [agg_cell]},
+        "aggregation": {"cells": [agg_cell, stream_cell]},
         "dataplane": {"rounds": 12, "memory_transport_acc": 0.81,
                       "throughput": {"packets_per_s": 1_000_000},
                       "cells": [dp_cell,
@@ -29,8 +34,11 @@ def _tracked_stub():
 
 
 def _fresh_stub(tracked):
+    mono = dict(tracked["aggregation"]["cells"][0])
     return {
-        "aggregation": dict(tracked["aggregation"]["cells"][0]),
+        "aggregation": {"monolithic": mono,
+                        "stream": {**mono, "engine": "stream",
+                                   "engine_s": 0.06}},
         "dataplane": {"lossless": dict(tracked["dataplane"]["cells"][0]),
                       "memory_acc": tracked["dataplane"]
                       ["memory_transport_acc"],
@@ -60,9 +68,24 @@ def test_gate_red_on_injected_drift():
 
 def test_gate_red_on_specific_regressions():
     tracked = _tracked_stub()
-    # lost bit-identity in the fresh aggregation cell
+    # lost bit-identity in a fresh aggregation cell (either engine)
+    for engine in ("monolithic", "stream"):
+        fresh = _fresh_stub(tracked)
+        fresh["aggregation"][engine]["bit_identical"] = False
+        assert compare_aggregation(tracked["aggregation"],
+                                   fresh["aggregation"])
+    # a tracked cell recorded slower than the seed path
+    slow = _tracked_stub()
+    slow["aggregation"]["cells"][0]["speedup"] = 0.9
     fresh = _fresh_stub(tracked)
-    fresh["aggregation"]["bit_identical"] = False
+    assert compare_aggregation(slow["aggregation"], fresh["aggregation"])
+    # a tracked cell missing its memory record
+    nomem = _tracked_stub()
+    nomem["aggregation"]["cells"][1].pop("peak_rss_mb")
+    assert compare_aggregation(nomem["aggregation"], fresh["aggregation"])
+    # fresh peak RSS blowing the 2x band (streaming memory regression)
+    fresh = _fresh_stub(tracked)
+    fresh["aggregation"]["monolithic"]["peak_rss_mb"] *= 3
     assert compare_aggregation(tracked["aggregation"], fresh["aggregation"])
     # accuracy drift in the lossless dataplane cell
     fresh = _fresh_stub(tracked)
@@ -101,9 +124,9 @@ def test_wallclock_band_is_wide():
     """Noisy 2-core timings inside the 4x band never gate."""
     tracked = _tracked_stub()
     fresh = _fresh_stub(tracked)
-    fresh["aggregation"]["engine_s"] = tracked["aggregation"]["cells"][0][
-        "engine_s"] * 3.5
+    fresh["aggregation"]["monolithic"]["engine_s"] = tracked["aggregation"][
+        "cells"][0]["engine_s"] * 3.5
     assert compare_aggregation(tracked["aggregation"],
                                fresh["aggregation"]) == []
-    fresh["aggregation"]["engine_s"] *= 2.0  # now outside 4x
+    fresh["aggregation"]["monolithic"]["engine_s"] *= 2.0  # now outside 4x
     assert compare_aggregation(tracked["aggregation"], fresh["aggregation"])
