@@ -6,15 +6,21 @@ repo root — ``BENCH_aggregation.json``, ``BENCH_dataplane.json`` and
 
 Gating policy, by how machine-dependent each quantity is:
 
-* exact — wire bytes, bit-identity flags, analytic/simulated wall-clock
-  (pure float64 numpy/Python arithmetic, IEEE-deterministic everywhere);
-* tight band (``ACC_TOL``) — training accuracies: XLA:CPU codegen is
-  host-microarchitecture-dependent, so f32 sums can differ by ulps
-  between the baseline machine and a CI runner and compound over rounds
-  (the injected-drift deltas are sized to stay detectable);
+* exact — wire bytes, bit-identity flags, analytic wall-clock (pure
+  float64 numpy/Python arithmetic, IEEE-deterministic everywhere);
+* tight band (``ACC_TOL`` / ``SIM_TOL``) — training accuracies and the
+  *simulated* packet wall-clock: XLA:CPU codegen is host-
+  microarchitecture-dependent, so f32 sums (training math; since the
+  jittable dataplane core of DESIGN.md §13, also the f32 timeline
+  cumsums) can differ by ulps between the baseline machine and a CI
+  runner and compound over rounds (the injected-drift deltas are sized
+  to stay detectable);
 * wide band (``WALL_TOL``x) — real wall-clock timings (engine seconds,
   speedups, packets/s): 2-core CI timings are noisy (same benchmark
-  varies ~2x run to run).
+  varies ~2x run to run).  The packet fleet has one *tracked-value*
+  gate on top: the recorded fleet-vs-sequential paired-ratio speedup
+  must stay >= ``FLEET_SPEEDUP_MIN`` and every tracked fleet cell must
+  be bit-identical to its sequential run.
 
   PYTHONPATH=src python -m benchmarks.check_regression
       [--fresh-out PATH]      # save the freshly computed payloads
@@ -44,6 +50,9 @@ TRACKED = {
 WALL_TOL = 4.0   # wall-clock band: fresh within [tracked/4, tracked*4]
 ACC_TOL = 0.005  # |final_acc drift| tolerated (cross-host XLA ulps only;
                  # the injected drift of 0.013 must stay detectable)
+SIM_TOL = 0.02   # relative band on the f32-simulated packet wall-clock
+FLEET_SPEEDUP_MIN = 2.0     # tracked packet-fleet paired-ratio floor
+FLEET_SMOKE_SPEEDUP_MIN = 1.1  # fresh smoke fleet: never slower than seq
 RSS_TOL = 2.0    # peak-RSS band: generous — the jax/XLA runtime floor and
                  # allocator behavior move between releases, but a streaming
                  # cell silently regressing to monolithic footprints will
@@ -73,18 +82,22 @@ def fresh_aggregation() -> dict:
 
 
 def fresh_dataplane(rounds: int) -> dict:
-    """The lossless full-participation packet cell + its in-memory twin,
-    at the tracked round count (both deterministic)."""
+    """The lossless full-participation packet cell + its in-memory twin at
+    the tracked round count (both deterministic), the drain throughput at
+    the tracked packet count (the jitted drain's dispatch overhead makes a
+    smaller size incomparable), and the smoke packet-fleet audit
+    (bit-identity + paired-ratio speedup, DESIGN.md §13)."""
     from repro.sweep import run_sweep
     from repro.sweep.grids import dataplane_grid
-    from .dataplane import _cell_dict, packet_throughput
+    from .dataplane import _cell_dict, fleet_section, packet_throughput
     spec = replace(dataplane_grid()[0], rounds=rounds)
     mem = replace(spec, name="dataplane-memory", transport="memory")
     res = {c.spec.transport: c for c in run_sweep([spec, mem], (0,))}
     cell = _cell_dict(spec, res["packet"].history)
     return {"lossless": cell,
             "memory_acc": round(res["memory"].history.acc[-1], 4),
-            "throughput": packet_throughput(n_packets=50_000)}
+            "throughput": packet_throughput(),
+            "fleet_smoke": fleet_section(smoke=True)}
 
 
 def fresh_sweep() -> dict:
@@ -174,10 +187,16 @@ def compare_dataplane(tracked: dict, fresh: dict) -> list:
         fails.append(f"dataplane lossless final_acc: fresh "
                      f"{cell['final_acc']} != tracked {ref['final_acc']} "
                      f"(tol {ACC_TOL})")
-    for k in ("traffic_mb", "wall_clock_s"):
-        if cell[k] != ref[k]:
-            fails.append(f"dataplane lossless {k}: fresh {cell[k]} != "
-                         f"tracked {ref[k]}")
+    if cell["traffic_mb"] != ref["traffic_mb"]:
+        fails.append(f"dataplane lossless traffic_mb: fresh "
+                     f"{cell['traffic_mb']} != tracked {ref['traffic_mb']}")
+    # simulated wall-clock is f32 XLA arithmetic since the jittable core
+    # (DESIGN.md §13): tight relative band, not exact
+    if abs(cell["wall_clock_s"] - ref["wall_clock_s"]) > \
+            SIM_TOL * abs(ref["wall_clock_s"]):
+        fails.append(f"dataplane lossless wall_clock_s: fresh "
+                     f"{cell['wall_clock_s']} outside {SIM_TOL:.0%} of "
+                     f"tracked {ref['wall_clock_s']}")
     if cell["final_acc"] != fresh["memory_acc"]:
         fails.append(f"lossless packet transport diverged from in-memory: "
                      f"{cell['final_acc']} != {fresh['memory_acc']}")
@@ -189,6 +208,43 @@ def compare_dataplane(tracked: dict, fresh: dict) -> list:
     if thr_f < thr_t / WALL_TOL:
         fails.append(f"dataplane throughput {thr_f} pkts/s below "
                      f"tracked/{WALL_TOL} ({thr_t}/{WALL_TOL})")
+    fails += _compare_dataplane_fleet(tracked.get("fleet"),
+                                      fresh.get("fleet_smoke"))
+    return fails
+
+
+def _compare_dataplane_fleet(t_fleet, f_fleet) -> list:
+    """The batched packet fleet (DESIGN.md §13): the tracked baseline must
+    hold per-cell bit-identity and the >= 2x paired-ratio speedup; the
+    fresh smoke audit must hold bit-identity and never run slower than
+    the sequential loop."""
+    fails = []
+    if not t_fleet:
+        return ["tracked dataplane baseline lacks the fleet section"]
+    for c in t_fleet["cells"]:
+        if not c.get("bit_identical", False):
+            fails.append(f"tracked dataplane fleet cell {c['name']} lost "
+                         "fleet/sequential bit-identity")
+        if "host_s" not in c:
+            fails.append(f"tracked dataplane fleet cell {c['name']} lacks "
+                         "host_s")
+    if not t_fleet.get("bit_identical_all", False):
+        fails.append("tracked dataplane fleet is not bit-identical to the "
+                     "sequential host path")
+    if t_fleet["speedup_paired"] < FLEET_SPEEDUP_MIN:
+        fails.append(f"tracked dataplane fleet speedup "
+                     f"{t_fleet['speedup_paired']} below the "
+                     f"{FLEET_SPEEDUP_MIN}x floor")
+    if f_fleet is None:
+        fails.append("fresh dataplane payload lacks the fleet smoke audit")
+        return fails
+    if not f_fleet.get("bit_identical_all", False):
+        fails.append("fresh dataplane fleet smoke lost fleet/sequential "
+                     "bit-identity")
+    if f_fleet["speedup_paired"] < FLEET_SMOKE_SPEEDUP_MIN:
+        fails.append(f"fresh dataplane fleet smoke speedup "
+                     f"{f_fleet['speedup_paired']} below "
+                     f"{FLEET_SMOKE_SPEEDUP_MIN}")
     return fails
 
 
@@ -237,6 +293,10 @@ def inject_drift(tracked: dict) -> dict:
     cell = next(c for c in drifted["dataplane"]["cells"]
                 if c["loss"] == 0.0 and c["participation"] == 1.0)
     cell["final_acc"] = round(cell["final_acc"] + 0.013, 4)
+    fleet = drifted["dataplane"]["fleet"]
+    fleet["cells"][0]["bit_identical"] = False
+    fleet["bit_identical_all"] = False
+    fleet["speedup_paired"] = 1.0       # below the tracked 2x floor
     drifted["sweep"]["cells"][0]["traffic_mb"] = round(
         drifted["sweep"]["cells"][0]["traffic_mb"] * 1.01, 6)
     return drifted

@@ -1,18 +1,29 @@
-"""Packet-dataplane benchmark: simulator throughput + accuracy-vs-wallclock
-under loss and partial participation (DESIGN.md §9).
+"""Packet-dataplane benchmark: simulator throughput, the loss x
+participation accuracy grid, and the batched packet fleet (DESIGN.md §9,
+§13).
 
-Two parts, both written to the tracked ``BENCH_dataplane.json``:
+Three parts, all written to the tracked ``BENCH_dataplane.json``:
 
-* **throughput** — packets/second the vectorized timeline engine pushes
+* **throughput** — packets/second the jitted timeline engine pushes
   through the M/G/1 register-window drain (the simulator's own hot path).
 * **grid** — the FediAC loss x participation grid from the sweep registry
   (``repro.sweep.grids.dataplane_grid``), executed through ``run_sweep`` —
-  packet-transport cells take the runner's sequential fallback.  The
-  lossless full-participation cell doubles as a standing regression check:
-  its accuracy must be *identical* to the in-memory transport (bit-equal
-  rounds).
+  since DESIGN.md §13 every packet cell rides ONE ``jit(vmap)`` fleet
+  program.  The lossless full-participation cell doubles as a standing
+  regression check: its accuracy must be *identical* to the in-memory
+  transport (bit-equal rounds).
+* **fleet** — the fleet-vs-sequential comparison on a small packet grid:
+  per-cell host wall-time of the sequential ``run_federated`` path, a
+  per-cell bit-identity audit (fleet history == sequential history,
+  exactly), and the paired-ratio speedup (``benchmarks/common.py``
+  interleaved timing; caches are cleared before every pass so both sides
+  pay their real compile cost — one compile for the fleet, one per cell
+  for the sequential loop).
 
   PYTHONPATH=src python -m benchmarks.dataplane [--smoke] [--out PATH]
+
+Exit status is non-zero if the fleet loses per-cell bit-identity — CI
+runs the ``--smoke`` variant on every PR as the packet-fleet smoke check.
 """
 
 from __future__ import annotations
@@ -20,17 +31,19 @@ from __future__ import annotations
 import argparse
 import json
 import os
+import statistics
 import time
 from dataclasses import replace
 
+import jax
 import numpy as np
 
-from repro.sweep import run_sweep
+from repro.sweep import run_sweep, run_cell_sequential
 from repro.sweep.grids import dataplane_grid
 from repro.switch import client_rates
 from repro.netsim.timeline import poisson_arrivals, windowed_drain
 
-from .common import emit, smoke_out_path
+from .common import emit, paired_ratio_median, smoke_out_path
 
 OUT_PATH = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
                         "BENCH_dataplane.json")
@@ -40,26 +53,42 @@ PART_GRID = [1.0, 0.5, 0.25]
 N_CLIENTS = 10
 ROUNDS = 12
 
+# the fleet-vs-sequential audit grid: six network conditions, one
+# compiled program (loss/participation ride as traced per-cell scalars).
+# The sequential loop pays one XLA compile per cell, the fleet exactly one
+# for the whole grid — more cells amortize it further.
+FLEET_ROUNDS = 6
+FLEET_CONDITIONS = [(0.0, 1.0), (0.0, 0.5), (0.01, 1.0), (0.01, 0.5),
+                    (0.05, 1.0), (0.05, 0.25)]
+FLEET_REPS = 3
+
 
 def packet_throughput(n_packets: int = 500_000, reps: int = 7) -> dict:
-    """Wall-clock packets/s of the vectorized drain (windows included).
+    """Wall-clock packets/s of the jitted vectorized drain (windows
+    included) — the same ``windowed_drain`` the traced round core uses.
 
     Best-of-reps: the smoke-sized drain finishes in single-digit ms, where
     this box's scheduler jitter swings a lone measurement 3x — and noise
     only ever *slows* a rep, so the fastest rep is the least-biased
     throughput estimate (the CI gate bands against tracked/4)."""
-    rng = np.random.default_rng(0)
     rates = client_rates(32, 0)
-    arr = poisson_arrivals(rng, rates, n_packets // 32, 0.0)
-    pkt_window = (np.arange(arr.shape[1]) // max(1, arr.shape[1] // 4)).clip(max=3)
-    windowed_drain(arr, pkt_window, 4, 3.03e-7)          # warm caches
+    arr = poisson_arrivals(jax.random.PRNGKey(0), rates, n_packets // 32, 0.0)
+    pkt_window = (np.arange(arr.shape[1])
+                  // max(1, arr.shape[1] // 4)).clip(max=3)
+
+    @jax.jit
+    def drain(a):
+        _, st = windowed_drain(a, pkt_window, 4, 3.03e-7)
+        return st.completion_s, st.n_packets
+
+    _, n_pk = jax.block_until_ready(drain(arr))          # warm/compile
     best = float("inf")
     for _ in range(reps):
         t0 = time.perf_counter()
-        _, st = windowed_drain(arr, pkt_window, 4, 3.03e-7)
+        jax.block_until_ready(drain(arr))
         best = min(best, time.perf_counter() - t0)
-    return {"n_packets": int(st.n_packets), "seconds": round(best, 4),
-            "packets_per_s": round(st.n_packets / best)}
+    return {"n_packets": int(n_pk), "seconds": round(best, 4),
+            "packets_per_s": round(int(n_pk) / best)}
 
 
 def _cell_dict(spec, hist) -> dict:
@@ -67,6 +96,68 @@ def _cell_dict(spec, hist) -> dict:
             "final_acc": round(hist.acc[-1], 4),
             "wall_clock_s": round(hist.wall_clock[-1], 3),
             "traffic_mb": round(hist.traffic_mb[-1], 3)}
+
+
+def _histories_equal(a, b) -> bool:
+    return (a.acc == b.acc and a.loss == b.loss
+            and a.wall_clock == b.wall_clock and a.traffic_mb == b.traffic_mb)
+
+
+def fleet_section(*, smoke: bool = False) -> dict:
+    """Fleet-vs-sequential on the packet audit grid: per-cell host
+    wall-time, bit-identity, paired-ratio speedup."""
+    rounds = 3 if smoke else FLEET_ROUNDS
+    conds = FLEET_CONDITIONS[:4] if smoke else FLEET_CONDITIONS
+    reps = 2 if smoke else FLEET_REPS
+    specs = [replace(s, rounds=rounds)
+             for s in dataplane_grid(sorted({lo for lo, _ in conds}),
+                                     sorted({pa for _, pa in conds}))
+             if (s.loss, s.participation) in conds]
+    assert len(specs) == len(conds), (specs, conds)
+    for spec in specs:      # warm the data cache: time compute, not numpy
+        spec.make_task(0)
+
+    seq_times, fleet_times = [], []
+    cell_times = {spec.name: [] for spec in specs}
+    seq_hists = fleet_hists = None
+    for _ in range(reps):
+        jax.clear_caches()      # sequential pays one compile per cell
+        t_seq = 0.0
+        seq_hists = {}
+        for spec in specs:
+            t0 = time.perf_counter()
+            seq_hists[spec.name] = run_cell_sequential(spec, 0)
+            dt = time.perf_counter() - t0
+            cell_times[spec.name].append(dt)
+            t_seq += dt
+        seq_times.append(t_seq)
+
+        jax.clear_caches()      # fleet pays one compile for the whole grid
+        t0 = time.perf_counter()
+        fleet_hists = {c.spec.name: c.history
+                       for c in run_sweep(specs, (0,))}
+        fleet_times.append(time.perf_counter() - t0)
+
+    cells = []
+    for spec in specs:
+        same = _histories_equal(seq_hists[spec.name], fleet_hists[spec.name])
+        cells.append({"name": spec.name, "loss": spec.loss,
+                      "participation": spec.participation,
+                      "final_acc": round(fleet_hists[spec.name].acc[-1], 4),
+                      "host_s": round(statistics.median(
+                          cell_times[spec.name]), 3),
+                      "bit_identical": bool(same)})
+    return {
+        "rounds": rounds,
+        "reps": reps,
+        "n_cells": len(specs),
+        "cells": cells,
+        "bit_identical_all": all(c["bit_identical"] for c in cells),
+        "sequential_s": round(statistics.median(seq_times), 3),
+        "fleet_s": round(statistics.median(fleet_times), 3),
+        "speedup_paired": round(paired_ratio_median(seq_times, fleet_times),
+                                3),
+    }
 
 
 def run(*, smoke: bool = False, out_path: str = OUT_PATH):
@@ -103,6 +194,17 @@ def run(*, smoke: bool = False, out_path: str = OUT_PATH):
     rows.append(("dataplane/lossless_equals_memory",
                  int(lossless["final_acc"] == mem["final_acc"]),
                  f"packet={lossless['final_acc']}_memory={mem['final_acc']}"))
+
+    fleet = fleet_section(smoke=smoke)
+    rows.append(("dataplane/fleet_speedup_paired", fleet["speedup_paired"],
+                 f"seq={fleet['sequential_s']}s_fleet={fleet['fleet_s']}s"))
+    rows.append(("dataplane/fleet_bit_identical_all",
+                 int(fleet["bit_identical_all"]),
+                 f"cells={fleet['n_cells']}"))
+    for c in fleet["cells"]:
+        rows.append((f"dataplane/fleet_host_s/{c['name']}", c["host_s"],
+                     f"bitident={c['bit_identical']}"))
+
     payload = {
         "benchmark": "dataplane",
         "smoke": smoke,
@@ -111,6 +213,7 @@ def run(*, smoke: bool = False, out_path: str = OUT_PATH):
         "throughput": thr,
         "memory_transport_acc": mem["final_acc"],
         "cells": cells,
+        "fleet": fleet,
     }
     with open(out_path, "w") as fh:
         json.dump(payload, fh, indent=2)
@@ -125,7 +228,13 @@ def main(argv=None) -> int:
                     help="tiny grid + few rounds (CI)")
     ap.add_argument("--out", default=OUT_PATH)
     args = ap.parse_args(argv)
-    emit(run(smoke=args.smoke, out_path=args.out))
+    rows = run(smoke=args.smoke, out_path=args.out)
+    emit(rows)
+    flags = [v for tag, v, _ in rows
+             if tag == "dataplane/fleet_bit_identical_all"]
+    if flags != [1]:
+        print("dataplane: packet fleet lost per-cell bit-identity", flush=True)
+        return 1
     return 0
 
 

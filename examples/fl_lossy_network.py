@@ -1,23 +1,34 @@
-"""FediAC through the executable packet dataplane (DESIGN.md §9).
+"""FediAC through the executable packet dataplane (DESIGN.md §9, §13).
 
-Runs the same federated task twice — over the idealized in-memory
-transport and over the packet-level switch dataplane — then degrades the
-network: packet loss with retransmission, partial client participation,
-stragglers bounded by the vote-quorum deadline, and a two-level
-leaf -> root switch hierarchy.  Lossless full participation is bit-exact
-with the in-memory engine, so every accuracy difference you see below is
-*caused by the network*, not by simulator drift.
+Degrades the network around the same federated task — packet loss with
+retransmission, partial client participation, stragglers (at NetConfig's
+default 4x slowdown; the vote-quorum *deadline* policy is exercised by
+``tests/test_netsim.py`` and the ``PacketTransport`` API directly, since
+``ScenarioSpec`` does not sweep it), and a two-level leaf -> root switch
+hierarchy — and runs every scenario through the *batched packet fleet*:
+since the
+jittable fixed-shape round core (DESIGN.md §13), a whole grid of network
+conditions shares ONE ``jit(vmap)`` round program inside ``run_sweep``
+instead of paying a fresh XLA compile per scenario.  Lossless full
+participation is bit-exact with the in-memory engine, so every accuracy
+difference you see below is *caused by the network*, not by simulator
+drift.
+
+The hierarchy cell (a different switch count changes the compiled
+program's structure) compiles its own one-cell fleet group in the same
+sweep call; ``--sequential`` forces every cell through the per-cell
+``run_federated`` path — the fleet's bit-identity oracle — for a
+side-by-side wall-clock comparison.
 
   PYTHONPATH=src python examples/fl_lossy_network.py [--rounds 30]
       [--clients 10] [--loss 0.05] [--participation 0.5] [--leaves 2]
 """
 
 import argparse
+import time
 
-from repro.core.fediac import FediACConfig
-from repro.data import classification, partition_dirichlet
-from repro.netsim import NetConfig
-from repro.training import FLConfig, run_federated
+from repro.sweep import run_sweep
+from repro.sweep.spec import ScenarioSpec
 
 
 def main():
@@ -27,35 +38,47 @@ def main():
     ap.add_argument("--loss", type=float, default=0.05)
     ap.add_argument("--participation", type=float, default=0.5)
     ap.add_argument("--leaves", type=int, default=2)
+    ap.add_argument("--sequential", action="store_true",
+                    help="force the per-cell run_federated path (the "
+                         "fleet's bit-identity oracle) for comparison")
     args = ap.parse_args()
 
-    data = classification(n=6000, dim=32, n_classes=10, seed=0)
-    train, test = data.test_split(0.2)
-    clients = partition_dirichlet(train, args.clients, beta=0.5, seed=0)
+    task = dict(algorithm="fediac", a=2, bits=12, n_clients=args.clients,
+                rounds=args.rounds, local_steps=3, dist="noniid", beta=0.5,
+                data_n=6000, data_dim=32, data_classes=10, test_frac=0.2)
 
-    scenarios = {
-        "memory (analytic)": dict(transport="memory", net=None),
-        "packet lossless": dict(transport="packet", net=NetConfig()),
-        f"packet loss={args.loss:g}": dict(
-            transport="packet", net=NetConfig(loss=args.loss, seed=1)),
-        f"packet part={args.participation:g}": dict(
-            transport="packet",
-            net=NetConfig(participation=args.participation, seed=1)),
-        "packet stragglers+quorum": dict(
-            transport="packet",
-            net=NetConfig(straggler_frac=0.3, straggler_slowdown=20.0,
-                          vote_deadline_s=0.5, seed=1)),
-        f"packet {args.leaves}-leaf tree": dict(
-            transport="packet", net=NetConfig(n_leaves=args.leaves)),
-    }
+    # The flat packet scenarios share one batch signature: loss,
+    # participation, straggler fraction and the net seed ride as traced
+    # per-cell inputs of a single compiled round program (the memory cell
+    # and the hierarchy cell compile separately).
+    specs = [
+        ScenarioSpec(name="memory (analytic)", **task),
+        ScenarioSpec(name="packet lossless", transport="packet", **task),
+        ScenarioSpec(name=f"packet loss={args.loss:g}", transport="packet",
+                     loss=args.loss, net_seed=1, **task),
+        ScenarioSpec(name=f"packet part={args.participation:g}",
+                     transport="packet", participation=args.participation,
+                     net_seed=1, **task),
+        ScenarioSpec(name="packet stragglers=0.3", transport="packet",
+                     straggler_frac=0.3, net_seed=1, **task),
+        ScenarioSpec(name=f"packet {args.leaves}-leaf tree",
+                     transport="packet", n_leaves=args.leaves, **task),
+    ]
+    packet = [s for s in specs if s.transport == "packet"
+              and s.n_leaves == 1]
+    assert len({s.batch_signature() for s in packet}) == 1, \
+        "the flat packet scenarios must share one fleet program"
+
+    t0 = time.perf_counter()
+    result = run_sweep(specs, (0,), sequential=args.sequential)
+    dt = time.perf_counter() - t0
+
+    mode = "sequential" if args.sequential else "fleet"
+    print(f"{len(specs)} scenarios in {dt:.1f}s ({mode})")
     print(f"{'scenario':26s} {'final acc':>9s} {'wall clock':>11s} {'traffic':>10s}")
-    for name, spec in scenarios.items():
-        cfg = FLConfig(n_clients=args.clients, rounds=args.rounds,
-                       local_steps=3, aggregator="fediac",
-                       agg_kwargs={"cfg": FediACConfig(a=2, bits=12)},
-                       seed=0, **spec)
-        h = run_federated(clients, test, cfg)
-        print(f"{name:26s} {h.acc[-1]:9.4f} {h.wall_clock[-1]:10.2f}s "
+    for cr in result:
+        h = cr.history
+        print(f"{cr.spec.name:26s} {h.acc[-1]:9.4f} {h.wall_clock[-1]:10.2f}s "
               f"{h.traffic_mb[-1]:9.2f}MB")
 
 

@@ -1,26 +1,34 @@
-"""Executable packet-level switch dataplane (DESIGN.md §9).
+"""Executable packet-level switch dataplane (DESIGN.md §9, §13).
 
 Runs FediAC rounds as packet streams through memory-limited programmable
 switches: Poisson packet timelines, loss + retransmission, stragglers and
 partial participation, a vote-quorum deadline, finite int32 register
-windows, and a leaf -> root multi-switch hierarchy.  The lossless
-full-participation configuration is bit-identical to the in-memory
-``core.fediac.aggregate_stack`` engine.
+windows, and a leaf -> root multi-switch hierarchy.  The FediAC round is
+a pure-JAX fixed-shape core (``netsim.batched``) — jitted for the
+sequential transport, ``jit(vmap)``'d by the sweep fleet — and the
+lossless full-participation configuration is bit-identical to the
+in-memory ``core.fediac.aggregate_stack`` engine.
 """
 
+from .batched import (make_fediac_packet_core, packet_dyn, reliable_upload,
+                      scale_num_table, threshold_table)
 from .dataplane import DataplaneStats, SwitchDataplane, n_windows, slot_window
 from .hierarchy import aggregate_hierarchy, drain_hierarchy, leaf_assignment
-from .policies import NetConfig, round_rng, sample_participants, sample_stragglers
-from .timeline import (DrainStats, download_time, drain_fifo, lose_packets,
-                       mg1_departures, poisson_arrivals, retransmit_delays,
-                       simulate_round_time, windowed_drain)
+from .policies import (NetConfig, net_round_key, sample_participants,
+                       sample_stragglers)
+from .timeline import (DrainStats, deadline_mask, download_time, drain_fifo,
+                       lose_packets, mg1_departures, poisson_arrivals,
+                       retransmit_delays, simulate_round_time, windowed_drain)
 from .transport import InMemoryTransport, PacketTransport, RoundResult, Transport
 
 __all__ = ["DataplaneStats", "SwitchDataplane", "n_windows", "slot_window",
            "aggregate_hierarchy",
-           "drain_hierarchy", "leaf_assignment", "NetConfig", "round_rng",
+           "drain_hierarchy", "leaf_assignment", "NetConfig", "net_round_key",
            "sample_participants", "sample_stragglers", "DrainStats",
-           "download_time", "drain_fifo", "lose_packets", "mg1_departures",
+           "deadline_mask", "download_time", "drain_fifo", "lose_packets",
+           "mg1_departures",
            "poisson_arrivals", "retransmit_delays", "simulate_round_time",
            "windowed_drain", "InMemoryTransport", "PacketTransport",
-           "RoundResult", "Transport"]
+           "RoundResult", "Transport", "make_fediac_packet_core",
+           "packet_dyn", "reliable_upload", "scale_num_table",
+           "threshold_table"]

@@ -15,6 +15,13 @@ are order-independent and the per-packet granularity only matters for the
 with wraparound — exactly what ``aggregate_stack``'s ``q_bufs.sum(0)``
 computes — so the packet path is bit-identical to the in-memory engine,
 not merely close.
+
+That same associativity is what lets the jittable round core
+(DESIGN.md §13) replace the explicit register-bank walk with one masked
+int32 ``sum(axis=0)``: this module is now the *value-plane reference
+oracle* — ``tests/test_netsim.py`` pins the masked sum against
+``aggregate_windowed``/``aggregate_hierarchy`` — while the window/pass
+accounting it defines (``n_windows``) still shapes the traced timeline.
 """
 
 from __future__ import annotations

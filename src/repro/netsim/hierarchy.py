@@ -8,7 +8,11 @@ sum upstream as MTU-sized packets, and the root switch aggregates the leaf
 partials.  Because int32 addition is associative and commutative (mod
 2^32), ``root(sum_leaf(clients))`` is bit-identical to the flat
 single-switch sum — the hierarchy changes *time*, never *values* — which
-is exactly the property the paper's multi-PS sketch relies on.
+is exactly the property the paper's multi-PS sketch relies on.  The
+jittable round core (DESIGN.md §13) therefore only simulates the
+hierarchy's *time plane* (:func:`drain_hierarchy`, fully traced); the
+NumPy register-bank walk (:func:`aggregate_hierarchy`) survives as the
+value-plane reference oracle the equivalence tests pin against.
 
 With ``n_leaves == 1`` the topology degenerates to the single switch and
 the root hop disappears (no forwarding latency), so the flat configuration
@@ -17,6 +21,9 @@ stays comparable to the analytic ``round_wall_clock`` model.
 
 from __future__ import annotations
 
+import functools
+
+import jax.numpy as jnp
 import numpy as np
 
 from .dataplane import DataplaneStats, SwitchDataplane
@@ -25,9 +32,18 @@ from .timeline import DrainStats, mg1_departures, windowed_drain
 __all__ = ["leaf_assignment", "aggregate_hierarchy", "drain_hierarchy"]
 
 
+@functools.lru_cache(maxsize=64)
+def _leaf_assignment_cached(n_clients: int, n_leaves: int) -> np.ndarray:
+    out = (np.arange(n_clients) % max(1, n_leaves)).astype(np.int32)
+    out.setflags(write=False)   # cached across rounds — never mutate
+    return out
+
+
 def leaf_assignment(n_clients: int, n_leaves: int) -> np.ndarray:
-    """int32[n_clients] — round-robin client -> leaf-switch map."""
-    return (np.arange(int(n_clients)) % max(1, int(n_leaves))).astype(np.int32)
+    """int32[n_clients] — round-robin client -> leaf-switch map.  Cached:
+    the map is recomputed-free on the per-round hot path (the transport
+    resolves it once per (N, n_leaves) instead of once per round)."""
+    return _leaf_assignment_cached(int(n_clients), int(n_leaves))
 
 
 def aggregate_hierarchy(bufs: np.ndarray, leaf_of: np.ndarray,
@@ -35,7 +51,10 @@ def aggregate_hierarchy(bufs: np.ndarray, leaf_of: np.ndarray,
                         ) -> tuple[np.ndarray, DataplaneStats]:
     """Value plane: leaf partial sums, then the root adds leaf partials.
 
-    ``bufs`` int32[N, C].  Returns (int32[C] total, merged stats).
+    ``bufs`` int32[N, C].  Returns (int32[C] total, merged stats).  This is
+    the explicit register-bank walk — the jittable core computes the same
+    value as one masked int32 ``sum(axis=0)`` (associativity), and the
+    netsim tests pin the two against each other.
     """
     if n_leaves <= 1:
         sw = SwitchDataplane(memory_slots)
@@ -54,38 +73,54 @@ def aggregate_hierarchy(bufs: np.ndarray, leaf_of: np.ndarray,
     return total, stats.merge(root.stats)
 
 
-def drain_hierarchy(arrivals: np.ndarray, leaf_of: np.ndarray,
+def drain_hierarchy(arrivals, leaf_of: np.ndarray,
                     packet_window: np.ndarray, n_windows: int,
-                    n_leaves: int, service_s: float,
+                    n_leaves: int, service_s,
                     fwd_packets_per_window: int,
-                    not_before: float = 0.0) -> DrainStats:
+                    not_before=0.0) -> DrainStats:
     """Time plane: per-leaf windowed drains, then the root services the
     forwarded partial-sum packets.
 
     Each leaf forwards ``fwd_packets_per_window`` packets the moment a
     window completes (back-to-back on the uplink, spaced by the service
     time); the root is one more FIFO queue over all forwarded packets.
+
+    Fully traced: ``arrivals`` may carry ``+inf`` rows for masked-out
+    clients (non-uploaders of the fixed-shape round core).  ``leaf_of``
+    and ``packet_window`` must be concrete host arrays — the leaf-row and
+    window-column partitions are static program structure.  A leaf whose
+    rows are all masked forwards nothing (its forwarded packets are
+    masked to ``+inf``), matching the host semantics of skipping empty
+    leaves.
     """
+    arrivals = jnp.asarray(arrivals, jnp.float32)
     if n_leaves <= 1:
         _, st = windowed_drain(arrivals, packet_window, n_windows, service_s,
                                not_before=not_before)
         return st
+    leaf_of = np.asarray(leaf_of)
+    service_s = jnp.float32(service_s)
     root_arrivals = []
-    waits = 0.0
-    n_tot = 0
+    wait_sum = jnp.float32(0.0)
+    n_tot = jnp.int32(0)
+    spacing = service_s * jnp.arange(1, int(fwd_packets_per_window) + 1,
+                                     dtype=jnp.float32)
     for leaf in range(int(n_leaves)):
-        rows = arrivals[leaf_of == leaf]
+        rows = arrivals[np.flatnonzero(leaf_of == leaf)]
         if rows.shape[0] == 0:
             continue
         completions, st = windowed_drain(rows, packet_window, n_windows,
                                          service_s, not_before=not_before)
-        waits += st.mean_wait_s * st.n_packets
-        n_tot += st.n_packets
-        spacing = service_s * np.arange(1, fwd_packets_per_window + 1)
-        root_arrivals.append((np.asarray(completions)[:, None]
-                              + spacing[None, :]).ravel())
-    flat = np.sort(np.concatenate(root_arrivals))
+        wait_sum = wait_sum + st.mean_wait_s * st.n_packets
+        n_tot = n_tot + st.n_packets
+        fwd = (completions[:, None] + spacing[None, :]).ravel()
+        # an all-masked leaf forwards nothing: mask its uplink packets out
+        root_arrivals.append(jnp.where(st.n_packets > 0, fwd, jnp.inf))
+    flat = jnp.sort(jnp.concatenate(root_arrivals))
     dep = mg1_departures(flat, service_s, assume_sorted=True)
-    waits += float((dep - flat - service_s).sum())   # root queue waits too
-    n_tot += flat.size
-    return DrainStats(float(dep[-1]), waits / max(n_tot, 1), n_tot)
+    live = jnp.isfinite(flat)
+    wait_sum = wait_sum + jnp.sum(jnp.where(live, dep - flat - service_s,
+                                            0.0))   # root queue waits too
+    n_tot = n_tot + jnp.sum(live.astype(jnp.int32))
+    completion = jnp.max(jnp.where(live, dep, -jnp.inf))
+    return DrainStats(completion, wait_sum / jnp.maximum(n_tot, 1), n_tot)

@@ -1,11 +1,18 @@
-"""Round policies of the packet dataplane (DESIGN.md §9).
+"""Round policies of the packet dataplane (DESIGN.md §9, §13).
 
 Everything stochastic about a network round is decided here, up front and
 deterministically: which clients are sampled into the round, which of them
 are stragglers this round, which packets the links drop, and how the
-vote-quorum deadline treats late voters.  All draws come from a
-``numpy.random.Generator`` seeded by ``(NetConfig.seed, round_idx)`` so a
-round is a pure function of its config — replays are bit-exact.
+vote-quorum deadline treats late voters.  All draws derive from a threefry
+key seeded by ``(NetConfig.seed, round_idx)`` (:func:`net_round_key`) so a
+round is a pure function of its config — replays are bit-exact, and the
+same draws are reproduced whether the round runs eagerly, under ``jit``,
+or batched along the fleet axis under ``vmap``.
+
+The sampling policies are *fixed-shape*: they return boolean ``[N]`` masks
+(never index arrays), with the sampled-count arithmetic done on traced
+scalars, so ``participation`` and ``straggler_frac`` can ride as per-cell
+traced inputs of one compiled round program (DESIGN.md §13).
 
 The straggler/quorum policy leans on FediAC's own robustness: the vote
 threshold ``a`` already tolerates missing voters (paper Fig. 4 shows a wide
@@ -19,11 +26,13 @@ from __future__ import annotations
 
 from dataclasses import dataclass
 
-import numpy as np
+import jax
+import jax.numpy as jnp
 
 from repro.switch.packets import MTU
 
-__all__ = ["NetConfig", "round_rng", "sample_participants", "sample_stragglers"]
+__all__ = ["NetConfig", "net_round_key", "sample_participants",
+           "sample_stragglers"]
 
 
 @dataclass(frozen=True)
@@ -60,27 +69,38 @@ class NetConfig:
             raise ValueError("memory_slots and mtu must be positive")
 
 
-def round_rng(net: NetConfig, round_idx: int) -> np.random.Generator:
-    """The one RNG of a round — seeded by (config seed, round index)."""
-    return np.random.default_rng((int(net.seed), int(round_idx)))
+def net_round_key(seed, round_idx) -> jax.Array:
+    """The one key of a round's network randomness — derived from
+    (config seed, round index).  Both arguments may be traced."""
+    return jax.random.fold_in(jax.random.PRNGKey(seed), round_idx)
 
 
-def sample_participants(rng: np.random.Generator, n_clients: int,
-                        participation: float) -> np.ndarray:
+def _ranks(u: jax.Array) -> jax.Array:
+    """rank[i] = position of u[i] in ascending sort order (stable)."""
+    order = jnp.argsort(u)
+    return jnp.zeros_like(order).at[order].set(
+        jnp.arange(order.shape[0], dtype=order.dtype))
+
+
+def sample_participants(key: jax.Array, n_clients: int,
+                        participation) -> jax.Array:
     """bool[n_clients] — exactly max(1, round(p*N)) clients, sampled
-    uniformly without replacement."""
-    n_p = max(1, int(round(participation * n_clients)))
-    mask = np.zeros(n_clients, bool)
-    mask[rng.choice(n_clients, size=min(n_p, n_clients), replace=False)] = True
-    return mask
+    uniformly without replacement (a uniform random ranking truncated at
+    the sampled count).  ``participation`` may be a traced scalar."""
+    n_p = jnp.maximum(1, jnp.round(jnp.float32(participation) * n_clients)
+                      .astype(jnp.int32))
+    return _ranks(jax.random.uniform(key, (n_clients,))) < n_p
 
 
-def sample_stragglers(rng: np.random.Generator, participants: np.ndarray,
-                      frac: float) -> np.ndarray:
-    """bool mask (same shape) — a ``frac`` subset of participants straggle."""
-    out = np.zeros_like(participants)
-    idx = np.flatnonzero(participants)
-    n_s = int(round(frac * idx.size))
-    if n_s:
-        out[rng.choice(idx, size=n_s, replace=False)] = True
-    return out
+def sample_stragglers(key: jax.Array, participants: jax.Array,
+                      frac) -> jax.Array:
+    """bool mask (same shape) — a ``frac`` subset of participants straggle.
+
+    Non-participants are pushed past every participant in the random
+    ranking, so exactly round(frac * n_participants) participants are
+    marked; ``frac`` may be a traced scalar."""
+    n_part = jnp.sum(participants.astype(jnp.int32))
+    n_s = jnp.round(jnp.float32(frac) * n_part).astype(jnp.int32)
+    u = jnp.where(participants, jax.random.uniform(key, participants.shape),
+                  2.0)
+    return participants & (_ranks(u) < n_s)

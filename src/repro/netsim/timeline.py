@@ -1,107 +1,160 @@
-"""Vectorized event timeline of the packet dataplane (DESIGN.md §9).
+"""Vectorized event timeline of the packet dataplane (DESIGN.md §9, §13).
 
 The packet-level counterpart of the analytic M/G/1 model in
 ``switch/queueing.py``: instead of expected values, every packet gets a
 sampled arrival time (Poisson per client), a sampled loss/retransmission
 history, and a departure time from an explicit FIFO service recursion —
-all as flat numpy array ops, never a per-packet Python loop.
+all as fixed-shape jax array ops (one sort + one cumulative max), never a
+per-packet Python loop, so a whole round's timeline traces into the
+jittable round core and batches along the fleet axis under ``vmap``.
 
 The FIFO recursion ``D_k = max(A_k, D_{k-1}) + S_k`` is computed in closed
 form:  with ``P = cumsum(S)``,
 
     D_k = P_k + max_{j<=k} (A_j - P_{j-1})
 
-so a whole round's queue is one sort + one cumsative max.  With loss = 0,
-full participation and the default deterministic service time the sampled
-round time converges on ``queueing.round_wall_clock`` (the agreement is
-pinned by ``tests/test_netsim.py`` at ~15% for 500-packet rounds — the gap
-is Poisson sampling noise in the slowest client's drain, shrinking as
-1/sqrt(packets)).
+so a whole round's queue is one sort + one cumulative max
+(``lax.cummax``).  *Absent* packets (lost, past-deadline, or belonging to
+a masked-out client row of the fixed-shape formulation) are encoded as
+``+inf`` arrivals: they sort to the tail, never perturb a finite prefix of
+the max-plus recursion, and are excluded from the completion/wait
+statistics — the traced equivalent of the data-dependent boolean indexing
+the host-NumPy implementation used (DESIGN.md §13 "masking rules").
+
+With loss = 0, full participation and the default deterministic service
+time the sampled round time converges on ``queueing.round_wall_clock``
+(the agreement is pinned by ``tests/test_netsim.py`` at ~15% for
+500-packet rounds — the gap is Poisson sampling noise in the slowest
+client's drain, shrinking as 1/sqrt(packets)).
 """
 
 from __future__ import annotations
 
 from dataclasses import dataclass
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.switch.queueing import UNALIGNED_FACTOR, SwitchProfile
 
 __all__ = ["poisson_arrivals", "lose_packets", "retransmit_delays",
-           "mg1_departures", "drain_fifo", "windowed_drain",
-           "simulate_round_time", "DrainStats"]
+           "deadline_mask", "mg1_departures", "drain_fifo", "windowed_drain",
+           "simulate_round_time", "DrainStats", "service_time",
+           "download_time"]
+
+_INF = jnp.inf
 
 
-def poisson_arrivals(rng: np.random.Generator, rates: np.ndarray,
-                     n_packets: int, start) -> np.ndarray:
+def poisson_arrivals(key: jax.Array, rates, n_packets: int,
+                     start) -> jax.Array:
     """[N, P] arrival times: client i emits packet j as a Poisson process of
-    rate ``rates[i]`` pkt/s starting at ``start[i]`` (its local-train end)."""
-    rates = np.asarray(rates, float)
+    rate ``rates[i]`` pkt/s starting at ``start[i]`` (its local-train end;
+    a scalar ``start`` broadcasts)."""
+    rates = jnp.asarray(rates, jnp.float32)
     n = rates.shape[0]
-    gaps = rng.exponential(1.0, size=(n, int(n_packets))) / rates[:, None]
-    return np.asarray(start, float).reshape(-1, 1) + np.cumsum(gaps, axis=1)
+    gaps = jax.random.exponential(key, (n, int(n_packets)),
+                                  jnp.float32) / rates[:, None]
+    start = jnp.reshape(jnp.broadcast_to(jnp.asarray(start, jnp.float32),
+                                         (n,)), (n, 1))
+    return start + jnp.cumsum(gaps, axis=1)
 
 
-def lose_packets(rng: np.random.Generator, shape, loss: float) -> np.ndarray:
+def lose_packets(key: jax.Array, shape, loss) -> jax.Array:
     """bool mask of *delivered* packets under i.i.d. loss (single attempt —
-    the phase-1 vote path: no retransmission, quorum absorbs the gap)."""
-    if loss <= 0.0:
-        return np.ones(shape, bool)
-    return rng.random(shape) >= loss
+    the phase-1 vote path: no retransmission, quorum absorbs the gap).
+    ``loss`` may be traced; loss == 0 delivers everything (uniforms live in
+    [0, 1))."""
+    return jax.random.uniform(key, shape) >= jnp.float32(loss)
 
 
-def retransmit_delays(rng: np.random.Generator, shape, loss: float,
-                      rto_s: float, max_retries: int
-                      ) -> tuple[np.ndarray, np.ndarray]:
+def retransmit_delays(key: jax.Array, shape, loss, rto_s,
+                      max_retries: int) -> tuple[jax.Array, jax.Array]:
     """Persistent ARQ (the phase-2 value path): every packet is eventually
     delivered; attempt counts are geometric(1-loss) truncated at
     ``max_retries + 1``.  Returns (added delay per packet, retransmission
-    count per packet — each retransmission re-emits the packet's bytes)."""
-    if loss <= 0.0:
-        return np.zeros(shape), np.zeros(shape, np.int64)
-    attempts = np.minimum(rng.geometric(1.0 - loss, size=shape),
-                          max_retries + 1)
-    retx = attempts - 1
-    return retx * rto_s, retx
+    count per packet — each retransmission re-emits the packet's bytes).
+
+    ``loss`` may be a traced scalar: the geometric draw is inverted from
+    one uniform per packet (``floor(log U / log loss) + 1``), which at
+    loss == 0 collapses to a single attempt for every packet.
+    """
+    loss = jnp.float32(loss)
+    u = jnp.maximum(jax.random.uniform(key, shape), jnp.float32(1e-38))
+    log_loss = jnp.log(jnp.clip(loss, 1e-38, None))
+    attempts = jnp.floor(jnp.log(u) / log_loss).astype(jnp.int32) + 1
+    attempts = jnp.clip(attempts, 1, int(max_retries) + 1)
+    retx = jnp.where(loss > 0.0, attempts - 1, 0)
+    return retx.astype(jnp.float32) * jnp.float32(rto_s), retx
+
+
+def deadline_mask(arrivals: jax.Array, deadline) -> jax.Array:
+    """bool mask of packets that make a quorum deadline.  The boundary is
+    *inclusive*: a packet arriving exactly at ``vote_deadline_s`` counts —
+    the masked round core and the policy tests pin this edge."""
+    return arrivals <= jnp.float32(deadline)
 
 
 @dataclass
 class DrainStats:
-    completion_s: float      # last departure from the switch
-    mean_wait_s: float       # mean FIFO queueing delay (excl. service)
-    n_packets: int
+    """Statistics of one FIFO drain.  Fields are jax scalars inside a
+    traced round core and concrete scalars when computed eagerly."""
+
+    completion_s: object     # last departure from the switch
+    mean_wait_s: object      # mean FIFO queueing delay (excl. service)
+    n_packets: object        # finite (present) packets drained
 
 
-def mg1_departures(arrivals: np.ndarray, service_s, *,
-                   assume_sorted: bool = False) -> np.ndarray:
+def mg1_departures(arrivals: jax.Array, service_s, *,
+                   assume_sorted: bool = False) -> jax.Array:
     """FIFO departure times for a flat arrival array.
 
     ``service_s`` is a scalar or per-packet array (matched to the sorted
     arrival order).  Returned in sorted-arrival order.  Pass
     ``assume_sorted=True`` when the caller already sorted (the sort is the
     dominant cost of the simulator hot path — don't pay it twice).
+    ``+inf`` arrivals (masked-out packets) yield ``+inf`` departures and
+    never disturb the finite prefix.
     """
-    a = arrivals.ravel()
+    a = jnp.asarray(arrivals, jnp.float32).ravel()
     if not assume_sorted:
-        a = np.sort(a)
-    s = np.broadcast_to(np.asarray(service_s, float), a.shape)
-    p = np.cumsum(s)
+        a = jnp.sort(a)
+    s = jnp.broadcast_to(jnp.asarray(service_s, jnp.float32), a.shape)
+    p = jnp.cumsum(s)
     # D_k = P_k + running_max(A_j - P_{j-1})
-    return p + np.maximum.accumulate(a - (p - s))
+    return p + jax.lax.cummax(a - (p - s))
 
 
-def drain_fifo(arrivals: np.ndarray, service_s) -> DrainStats:
-    if arrivals.size == 0:
-        return DrainStats(0.0, 0.0, 0)
-    a = np.sort(arrivals.ravel())
+def _masked_drain(arrivals: jax.Array, service_s) -> DrainStats:
+    """Traced drain over a (possibly +inf-masked) arrival array.
+
+    ``completion_s`` is ``-inf`` when every packet is masked — callers
+    ``where`` it against their fallback (the host path's data-dependent
+    "no packets" branch, expressed fixed-shape)."""
+    a = jnp.sort(jnp.asarray(arrivals, jnp.float32).ravel())
     d = mg1_departures(a, service_s, assume_sorted=True)
-    waits = d - a - np.broadcast_to(np.asarray(service_s, float), a.shape)
-    return DrainStats(float(d[-1]), float(waits.mean()), int(a.size))
+    live = jnp.isfinite(a)
+    n = jnp.sum(live.astype(jnp.int32))
+    s = jnp.broadcast_to(jnp.asarray(service_s, jnp.float32), a.shape)
+    waits = jnp.where(live, d - a - s, 0.0)
+    completion = jnp.max(jnp.where(live, d, -_INF))
+    return DrainStats(completion, jnp.sum(waits) / jnp.maximum(n, 1), n)
 
 
-def windowed_drain(arrivals: np.ndarray, packet_window: np.ndarray,
-                   n_windows: int, service_s: float,
-                   not_before: float = 0.0) -> tuple[list[float], DrainStats]:
+def drain_fifo(arrivals, service_s) -> DrainStats:
+    """Eager-friendly drain: empty/all-masked input degenerates to zeros."""
+    a = jnp.asarray(arrivals, jnp.float32)
+    if a.size == 0:
+        return DrainStats(0.0, 0.0, 0)
+    st = _masked_drain(a, service_s)
+    empty = st.n_packets == 0
+    return DrainStats(jnp.where(empty, 0.0, st.completion_s),
+                      st.mean_wait_s, st.n_packets)
+
+
+def windowed_drain(arrivals: jax.Array, packet_window: np.ndarray,
+                   n_windows: int, service_s,
+                   not_before=0.0) -> tuple[jax.Array, DrainStats]:
     """Drain arrivals through a register-window schedule.
 
     ``packet_window[j]`` maps packet column j to its memory window; window
@@ -109,23 +162,30 @@ def windowed_drain(arrivals: np.ndarray, packet_window: np.ndarray,
     registers are flushed between passes — ``psim`` multi-pass semantics).
     Clients hold/retransmit packets for a closed window, so an early arrival
     is clamped to its window-open time.  Loops over windows only (a handful),
-    never packets.  Returns (per-window completion times, merged stats).
+    never packets.
+
+    ``packet_window`` must be a *concrete* (host) array — the window ->
+    packet-column partition is static program structure, while ``arrivals``
+    (and the masked rows inside it) may be traced.  Returns (per-window
+    completion times, merged stats).
     """
-    t_free = float(not_before)
-    completions: list[float] = []
-    waits = 0.0
-    n_tot = 0
+    packet_window = np.asarray(packet_window)
+    t_free = jnp.float32(not_before)
+    completions = []
+    wait_sum = jnp.float32(0.0)
+    n_tot = jnp.int32(0)
     for w in range(int(n_windows)):
-        a = arrivals[:, packet_window == w]
-        if a.size == 0:
+        cols = np.flatnonzero(packet_window == w)
+        if cols.size == 0:
             completions.append(t_free)
             continue
-        st = drain_fifo(np.maximum(a, t_free), service_s)
-        t_free = st.completion_s
+        st = _masked_drain(jnp.maximum(arrivals[:, cols], t_free), service_s)
+        t_free = jnp.where(st.n_packets > 0, st.completion_s, t_free)
         completions.append(t_free)
-        waits += st.mean_wait_s * st.n_packets
-        n_tot += st.n_packets
-    return completions, DrainStats(t_free, waits / max(n_tot, 1), n_tot)
+        wait_sum = wait_sum + st.mean_wait_s * st.n_packets
+        n_tot = n_tot + st.n_packets
+    return (jnp.stack(completions),
+            DrainStats(t_free, wait_sum / jnp.maximum(n_tot, 1), n_tot))
 
 
 def service_time(profile: SwitchProfile, aligned: bool = True) -> float:
@@ -134,19 +194,21 @@ def service_time(profile: SwitchProfile, aligned: bool = True) -> float:
     return profile.rho * (1.0 if aligned else UNALIGNED_FACTOR)
 
 
-def download_time(download_packets: int, rates: np.ndarray) -> float:
+def download_time(download_packets, rates):
     """Broadcast at 5x the mean client upload rate (paper Sec. V-A2)."""
-    return int(download_packets) / (5.0 * float(np.mean(rates)))
+    return download_packets / (5.0 * jnp.mean(jnp.asarray(rates,
+                                                          jnp.float32)))
 
 
 def simulate_round_time(*, packets_per_client: int, download_packets: int,
-                        rates: np.ndarray, profile: SwitchProfile,
-                        local_train_s, rng: np.random.Generator,
-                        aligned: bool = True, loss: float = 0.0,
-                        rto_s: float = 0.05, max_retries: int = 16) -> float:
+                        rates, profile: SwitchProfile, local_train_s,
+                        key: jax.Array, aligned: bool = True,
+                        loss: float = 0.0, rto_s: float = 0.05,
+                        max_retries: int = 16) -> float:
     """Packet-level counterpart of ``queueing.round_wall_clock``: one
     sampled upload phase + broadcast, single switch, reliable delivery."""
-    arr = poisson_arrivals(rng, rates, packets_per_client, local_train_s)
-    delay, _ = retransmit_delays(rng, arr.shape, loss, rto_s, max_retries)
+    k_arr, k_retx = jax.random.split(key)
+    arr = poisson_arrivals(k_arr, rates, packets_per_client, local_train_s)
+    delay, _ = retransmit_delays(k_retx, arr.shape, loss, rto_s, max_retries)
     st = drain_fifo(arr + delay, service_time(profile, aligned))
-    return st.completion_s + download_time(download_packets, rates)
+    return float(st.completion_s + download_time(download_packets, rates))

@@ -1,5 +1,5 @@
 """The Transport abstraction: how a round's bytes reach the aggregate
-(DESIGN.md §9).
+(DESIGN.md §9, §13).
 
 Two implementations share one interface:
 
@@ -11,14 +11,25 @@ Two implementations share one interface:
   stragglers, loss + ARQ, the vote-quorum deadline, the finite register
   bank (multi-pass windows) and the optional leaf -> root hierarchy.
 
+Since the batched-dataplane refactor (DESIGN.md §13) the FediAC packet
+round is the **traced core** of ``netsim.batched`` — a pure-JAX,
+fixed-shape, jittable function — and :class:`PacketTransport` is only the
+thin Python accounting wrapper around it, mirroring the
+``make_aggregator_core`` (core, account) split of ``core/baselines.py``.
+One ``jit`` of the core serves every round of a run; the sweep fleet runs
+the *same function* under ``jit(vmap)`` so packet scenarios batch along
+the fleet axis bit-identically to this sequential path.
+
 For FediAC the packet path re-uses the exact client-side machinery of
 ``core.fediac`` (vote stacks, the shared ``RoundPlan``, ``client_compress``)
-and only replaces the ``q_bufs.sum(0)`` with the register-bank aggregation,
-so the lossless full-participation configuration is **bit-identical** to
+and only replaces the ``q_bufs.sum(0)`` with the masked uploader sum
+(bit-equal to the register-bank walk by int32 associativity), so the
+lossless full-participation configuration is **bit-identical** to
 ``aggregate_stack`` — delta, residuals and vote counts — across all
 vote/compact mode pairs (pinned by ``tests/test_netsim.py``).  For the
 baseline aggregators it prices the round's packets (alignment penalty,
-windows, loss) around the unchanged in-memory math.
+windows, loss) around the unchanged in-memory math, eagerly, through the
+same timeline/hierarchy primitives the traced core uses.
 """
 
 from __future__ import annotations
@@ -30,30 +41,18 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import compaction
 from repro.core.baselines import SwitchLoad, make_aggregator
-from repro.core.fediac import (FediACConfig, TrafficStats, build_round_plan,
-                               client_vote_stack, phase2_compress,
-                               plan_wants_dense_mask, round_traffic,
-                               scatter_sum)
-from repro.core.quantize import scale_factor
+from repro.core.fediac import TrafficStats, round_traffic
 from repro.switch import SwitchProfile, client_rates, n_packets
 
-from .dataplane import SwitchDataplane, n_windows
-from .hierarchy import aggregate_hierarchy, drain_hierarchy, leaf_assignment
-from .policies import (NetConfig, round_rng, sample_participants,
-                       sample_stragglers)
-from .timeline import (download_time, drain_fifo, lose_packets,
-                       poisson_arrivals, retransmit_delays, service_time)
+from .batched import (make_fediac_packet_core, packet_dyn, reliable_upload,
+                      retx_byte_count)
+from .hierarchy import leaf_assignment
+from .policies import NetConfig, net_round_key, sample_participants, \
+    sample_stragglers
+from .timeline import download_time, service_time
 
 __all__ = ["RoundResult", "Transport", "InMemoryTransport", "PacketTransport"]
-
-
-def _packet_sizes(total_bytes: int, n_pkts: int, mtu: int) -> np.ndarray:
-    """Per-packet wire bytes: MTU-sized except the final partial packet."""
-    sizes = np.full(n_pkts, mtu, np.int64)
-    sizes[-1] = max(1, int(total_bytes) - (n_pkts - 1) * mtu)
-    return sizes
 
 
 @dataclass
@@ -99,7 +98,10 @@ class PacketTransport:
     Parameters mirror what the FL loop knows: the aggregator name + kwargs,
     a :class:`NetConfig`, the switch service profile, per-client Poisson
     rates (derived from ``client_rates`` if omitted) and the local training
-    time.  Every round is deterministic given ``(net.seed, round_idx)``.
+    time.  Every round is deterministic given ``(net.seed, round_idx)``:
+    all network draws are threefry keys derived from that pair
+    (``policies.net_round_key``), identical whether the round runs here or
+    batched in the fleet.
     """
 
     def __init__(self, aggregator: str, agg_kwargs: dict | None = None, *,
@@ -113,164 +115,75 @@ class PacketTransport:
         self.profile = profile or SwitchProfile.high()
         self.rates = None if rates is None else np.asarray(rates, float)
         self.local_train_s = float(local_train_s)
-        self._agg = (make_aggregator(aggregator, **self.agg_kwargs)
-                     if aggregator != "fediac" else None)
+        self._net_base = jax.random.PRNGKey(self.net.seed)
+        if aggregator == "fediac":
+            from repro.core.fediac import FediACConfig
+            self.cfg = self.agg_kwargs.get("cfg", FediACConfig())
+            self._agg = None
+            self._jit_core = {}          # n_clients -> (jitted core, dyn)
+        else:
+            self.cfg = None
+            self._agg = make_aggregator(aggregator, **self.agg_kwargs)
 
     # ------------------------------------------------------------------
-    def _reliable_upload(self, rng, eff_rates_rows, start, live_slots: int,
-                         wire_bytes: int, leaf_of, svc: float,
-                         not_before: float = 0.0):
-        """Schedule one reliable upload through the register windows —
-        packet->window map, Poisson arrivals, ARQ delays, hierarchical
-        drain — shared by the FediAC phase 2 and the baseline path.
-        Returns (DrainStats, retransmission count, retransmitted bytes,
-        window count)."""
-        net = self.net
-        live = max(int(live_slots), 1)
-        n_win = n_windows(live, net.memory_slots)
-        pkts = n_packets(wire_bytes, net.mtu)
-        slots_per_pkt = -(-live // pkts)
-        pkt_window = np.minimum((np.arange(pkts) * slots_per_pkt)
-                                // net.memory_slots, n_win - 1)
-        arr = poisson_arrivals(rng, eff_rates_rows, pkts, start)
-        delay, retx = retransmit_delays(rng, arr.shape, net.loss,
-                                        net.rto_s, net.max_retries)
-        retx_bytes = int((retx * _packet_sizes(wire_bytes, pkts,
-                                               net.mtu)[None, :]).sum())
-        fwd = n_packets(min(net.memory_slots, live) * 4, net.mtu)
-        st = drain_hierarchy(arr + delay, leaf_of, pkt_window, n_win,
-                             net.n_leaves, svc, fwd, not_before=not_before)
-        return st, int(retx.sum()), retx_bytes, n_win
-
-    def _round_setup(self, n: int, rng: np.random.Generator):
-        net = self.net
+    def _round_rates(self, n: int) -> np.ndarray:
         rates = self.rates
         if rates is None or len(rates) != n:
-            rates = client_rates(n, net.seed)
-        part = sample_participants(rng, n, net.participation)
-        strag = sample_stragglers(rng, part, net.straggler_frac)
-        slow = np.where(strag, net.straggler_slowdown, 1.0)
-        train_s = self.local_train_s * slow
-        eff_rates = rates / slow
-        return rates, part, strag, train_s, eff_rates
+            rates = client_rates(n, self.net.seed)
+        return rates
 
     def round(self, u_stack, state, key, round_idx: int = 0) -> RoundResult:
-        n = int(u_stack.shape[0])
-        rng = round_rng(self.net, round_idx)
-        setup = self._round_setup(n, rng)
         if self.name == "fediac":
-            return self._fediac_round(u_stack, state, key, rng, *setup)
-        return self._generic_round(u_stack, state, key, rng, *setup)
+            return self._fediac_round(u_stack, state, key, round_idx)
+        return self._generic_round(u_stack, state, key, round_idx)
 
     # ------------------------------------------------------------------
-    # FediAC: the two-phase round, executed packet by packet
+    # FediAC: the traced fixed-shape round core + Python accounting
     # ------------------------------------------------------------------
-    def _fediac_round(self, u_stack, state, key, rng,
-                      rates, part, strag, train_s, eff_rates) -> RoundResult:
-        net, cfg = self.net, self.agg_kwargs.get("cfg", FediACConfig())
+    def _core_for(self, n: int):
+        if n not in self._jit_core:
+            core = make_fediac_packet_core(self.cfg, self.net, n)
+            dyn = packet_dyn(self.cfg, self.net, n, self.local_train_s,
+                             service_time(self.profile, aligned=True))
+            self._jit_core[n] = (jax.jit(core), dyn)
+        return self._jit_core[n]
+
+    def _fediac_round(self, u_stack, state, key, round_idx) -> RoundResult:
+        cfg = self.cfg
         u = jnp.asarray(u_stack)
         n, d = u.shape
-        keys = jax.random.split(key, 2 * n)
-        vote_keys, q_keys = keys[:n], keys[n:]
+        core, dyn = self._core_for(n)
+        rates = jnp.asarray(self._round_rates(n), jnp.float32)
+        delta, residuals, aux = core(u, key, self._net_base,
+                                     jnp.int32(round_idx), rates, dyn)
+        n_up = int(aux["n_up"])
+        n_part = int(aux["n_part"])
+        up_mask = np.asarray(aux["uploaders"])
         tr = round_traffic(cfg, d)
-        n_chunks = d // cfg.vote_chunk
-        p_idx = np.flatnonzero(part)
-        svc = service_time(self.profile, aligned=True)
-
-        # ---- phase 1: vote packets (lossy, no ARQ — the quorum absorbs).
-        # Votes are computed for the sampled participants only; per-client
-        # keys keep each row identical to the full-stack computation.
-        votes = np.asarray(client_vote_stack(u[jnp.asarray(p_idx)], cfg,
-                                             vote_keys[jnp.asarray(p_idx)]))
-        p1_pkts = n_packets(tr.phase1_bytes, net.mtu)
-        arr1 = poisson_arrivals(rng, eff_rates[p_idx], p1_pkts, train_s[p_idx])
-        delivered = lose_packets(rng, arr1.shape, net.loss)
-        if net.vote_deadline_s is not None:
-            delivered &= arr1 <= net.vote_deadline_s
-        cov = -(-n_chunks // p1_pkts)          # chunk coords per vote packet
-        pkt_of_chunk = np.minimum(np.arange(n_chunks) // cov, p1_pkts - 1)
-        chunk_ok = delivered[:, pkt_of_chunk]
-        sw = SwitchDataplane(net.memory_slots)
-        counts = sw.count_votes(votes, chunk_ok)
-        t1 = (drain_fifo(arr1[delivered], svc).completion_s
-              if delivered.any() else float(train_s[p_idx].max()))
-        if net.vote_deadline_s is not None:
-            t1 = max(t1, net.vote_deadline_s)
-
-        # ---- quorum: who goes on to phase 2.
-        voter = chunk_ok.any(axis=1)
-        up_rows = p_idx[voter] if net.drop_late_voters else p_idx
-        n_up = int(up_rows.size)
-        stats = {"vote_counts": counts, "participants": part,
-                 "uploaders": up_rows, "phase1_s": t1,
-                 "votes_lost": int((~delivered).sum()),
-                 "stragglers": int(strag.sum())}
-        if n_up == 0:
-            wall = t1 + download_time(n_packets(-(-n_chunks // 8), net.mtu), rates)
-            return RoundResult(jnp.zeros((d,), jnp.float32), u, state, tr,
-                               self._fediac_load(cfg, n, d, tr),
-                               wall_clock_s=wall, n_active=0,
-                               upload_bytes=tr.phase1_bytes * p_idx.size,
-                               stats=stats)
-
-        # ---- GIA broadcast (packed bits), then phase-2 compress — the
-        # exact core.fediac machinery against the packet-derived counts.
-        t_gia = download_time(n_packets(-(-n_chunks // 8), net.mtu), rates)
-        u_up = u[up_rows]
-        m = jnp.max(jnp.abs(u_up))
-        f = scale_factor(cfg.bits, n_up, 1.0) / jnp.clip(m, 1e-12, None)
-        stream = cfg.engine == "stream"
-        topk = cfg.compact_mode != "block"
-        plan = build_round_plan(jnp.asarray(counts), cfg, n_up,
-                                with_dense_mask=(plan_wants_dense_mask(cfg)
-                                                 or (stream and topk)),
-                                with_slot_map=stream and topk)
-        if stream:
-            # chunk-streamed per-client buffers (DESIGN.md §12) — the same
-            # values the vmapped compress produces, O(N*chunk) live memory.
-            from repro.core.stream_engine import stream_compress_stack
-            q_bufs, res_up = stream_compress_stack(u_up, cfg, f,
-                                                   q_keys[up_rows], plan)
-        else:
-            compress = phase2_compress(cfg)
-            q_bufs, res_up = jax.vmap(
-                lambda uu, kk: compress(uu, cfg, f, kk, plan))(u_up,
-                                                               q_keys[up_rows])
-        bufs_np = np.asarray(q_bufs)
-
-        # ---- phase 2: reliable int32 packets through the register bank.
-        leaf_of = leaf_assignment(n, net.n_leaves)[up_rows]
-        summed_np, dp_stats = aggregate_hierarchy(bufs_np, leaf_of,
-                                                  net.n_leaves, net.memory_slots)
-        dp_stats = dp_stats.merge(sw.stats)
-        st2, n_retx, retx_bytes, _ = self._reliable_upload(
-            rng, eff_rates[up_rows], t1 + t_gia, bufs_np.shape[1],
-            tr.phase2_bytes, leaf_of, svc, not_before=t1 + t_gia)
-        wall = st2.completion_s + download_time(n_packets(tr.phase2_bytes,
-                                                          net.mtu), rates)
-
-        # ---- de-compact + dequantize, exactly as aggregate_stack does.
-        summed = jnp.asarray(summed_np)
-        if cfg.compact_mode == "block":
-            delta = compaction.block_scatter(
-                summed, plan.keep_dense, plan.pos, d, cfg.block_size,
-                cfg.capacity_frac).astype(jnp.float32) / (n_up * f)
-        else:
-            delta = scatter_sum(summed, plan.idx, plan.keep, cfg,
-                                 d).astype(jnp.float32) / (n_up * f)
-        residuals = u.at[jnp.asarray(up_rows)].set(res_up)
-        stats.update(retransmissions=n_retx, passes=dp_stats.passes,
-                     peak_live_slots=dp_stats.peak_live_slots,
-                     aggregation_ops=dp_stats.aggregation_ops,
-                     phase2_s=st2.completion_s - t1, mean_wait_s=st2.mean_wait_s)
+        stats = {"vote_counts": np.asarray(aux["counts"]),
+                 "participants": np.asarray(aux["participants"]),
+                 "uploaders": np.flatnonzero(up_mask),
+                 "phase1_s": float(aux["phase1_s"]),
+                 "votes_lost": int(aux["votes_lost"]),
+                 "stragglers": int(aux["n_strag"]),
+                 "retransmissions": int(aux["retransmissions"]),
+                 "passes": int(aux["passes"]),
+                 "peak_live_slots": int(aux["peak_live_slots"]),
+                 "aggregation_ops": int(aux["aggregation_ops"]),
+                 "phase2_s": float(aux["phase2_s"]),
+                 "mean_wait_s": float(aux["mean_wait_s"])}
         # voters that missed the quorum still spent their phase-1 bytes,
         # and every ARQ retransmission re-emits its packet's bytes.
-        upload_bytes = (tr.phase1_bytes * p_idx.size
-                        + tr.phase2_bytes * n_up + retx_bytes)
+        retx_bytes = retx_byte_count(aux["retransmissions"],
+                                     aux["retx_last"], tr.phase2_bytes,
+                                     self.net.mtu)
+        upload_bytes = (tr.phase1_bytes * n_part + tr.phase2_bytes * n_up
+                        + retx_bytes)
         return RoundResult(delta, residuals, state, tr,
-                           self._fediac_load(cfg, n_up, d, tr),
-                           wall_clock_s=wall, n_active=n_up,
-                           upload_bytes=upload_bytes, stats=stats)
+                           self._fediac_load(cfg, n_up if n_up else n, d, tr),
+                           wall_clock_s=float(aux["wall_clock_s"]),
+                           n_active=n_up, upload_bytes=upload_bytes,
+                           stats=stats)
 
     def _fediac_load(self, cfg, n, d, tr) -> SwitchLoad:
         return SwitchLoad(
@@ -279,29 +192,46 @@ class PacketTransport:
             aligned=True)
 
     # ------------------------------------------------------------------
-    # Baselines: in-memory math, packet-priced delivery
+    # Baselines: in-memory math, packet-priced delivery (eager, but on
+    # the same keyed timeline primitives as the traced core)
     # ------------------------------------------------------------------
-    def _generic_round(self, u_stack, state, key, rng,
-                       rates, part, strag, train_s, eff_rates) -> RoundResult:
+    def _generic_round(self, u_stack, state, key, round_idx) -> RoundResult:
         net = self.net
         u = jnp.asarray(u_stack)
         n, d = u.shape
+        rates = self._round_rates(n)
+        rk = net_round_key(net.seed, round_idx)
+        k_part, k_strag, _, _, k_arr2, k_retx = jax.random.split(rk, 6)
+        part = np.asarray(sample_participants(k_part, n, net.participation))
+        strag = np.asarray(sample_stragglers(k_strag, jnp.asarray(part),
+                                             net.straggler_frac))
+        slow = np.where(strag, net.straggler_slowdown, 1.0)
+        train_s = self.local_train_s * slow
+        eff_rates = rates / slow
         p_idx = np.flatnonzero(part)
+
         delta, res_up, state, tr, load = self._agg(u[p_idx], state, key)
         svc = service_time(self.profile, aligned=load.aligned)
-        live = tr.selected if load.aligned else min(tr.selected, net.memory_slots)
+        live = tr.selected if load.aligned else min(tr.selected,
+                                                    net.memory_slots)
         leaf_of = leaf_assignment(n, net.n_leaves)[p_idx]
-        st, n_retx, retx_bytes, n_win = self._reliable_upload(
-            rng, eff_rates[p_idx], train_s[p_idx], live, tr.total_bytes,
-            leaf_of, svc)
-        wall = st.completion_s + download_time(n_packets(tr.total_bytes,
-                                                         net.mtu), rates)
+        st, n_retx, retx_last, n_win = reliable_upload(
+            k_arr2, k_retx, eff_rates[p_idx], train_s[p_idx], live,
+            tr.total_bytes, leaf_of, svc, loss=net.loss, rto_s=net.rto_s,
+            max_retries=net.max_retries, memory_slots=net.memory_slots,
+            n_leaves=net.n_leaves, mtu=net.mtu)
+        retx_bytes = retx_byte_count(n_retx, retx_last, tr.total_bytes,
+                                     net.mtu)
+        wall = float(st.completion_s
+                     + download_time(n_packets(tr.total_bytes, net.mtu),
+                                     rates))
         residuals = u.at[jnp.asarray(p_idx)].set(res_up)
         stats = {"participants": part, "uploaders": p_idx,
-                 "retransmissions": n_retx, "passes": n_win,
-                 "stragglers": int(strag.sum()), "mean_wait_s": st.mean_wait_s}
+                 "retransmissions": int(n_retx), "passes": n_win,
+                 "stragglers": int(strag.sum()),
+                 "mean_wait_s": float(st.mean_wait_s)}
         return RoundResult(delta, residuals, state, tr, load,
                            wall_clock_s=wall, n_active=int(p_idx.size),
                            upload_bytes=(tr.total_bytes * int(p_idx.size)
-                                         + retx_bytes),
+                                         + int(retx_bytes)),
                            stats=stats)

@@ -8,22 +8,33 @@ a single compilation serves the whole batch — the sequential loop pays one
 XLA compile *per cell* because every ``run_federated`` call closes over
 fresh data.
 
+Packet-transport cells (DESIGN.md §13) batch the same way: the aggregator
+half of the round program is the jittable fixed-shape packet round core
+(``netsim.batched.make_fediac_packet_core``) — the *same function* the
+sequential :class:`repro.netsim.PacketTransport` jits — with each cell's
+loss/participation/straggler rates, local train time, switch service time,
+network key and threshold table stacked as traced per-cell inputs.  The
+simulated wall-clock and the byte accounting come back as traced aux
+scalars and are priced in Python per cell, in ``run_federated``'s exact
+accumulation order.
+
 Bit-identity contract (pinned in ``tests/test_sweep.py``): each fleet
 cell's history equals its sequential ``run_federated`` run exactly.  The
 pieces that make that hold:
 
 * the per-cell key threading is byte-for-byte the sequential one
   (``PRNGKey(seed)`` consumed by the eager init, then split 3-ways per
-  round);
+  round; packet network draws fold ``(net_seed, round_idx)`` identically);
 * cells are padded to a common dataset size but keep their OWN sampling
   bound as a traced scalar — ``jax.random.randint`` draws identical values
   for traced and static bounds;
 * the numeric round is the shared :func:`repro.training.make_client_round`
-  + the aggregator *core* (``repro.core.baselines.make_aggregator_core``),
-  i.e. literally the sequential computation under ``vmap``;
+  + the aggregator *core* (``repro.core.baselines.make_aggregator_core``
+  or the packet round core), i.e. literally the sequential computation
+  under ``vmap``;
 * wall-clock/traffic pricing runs in Python per cell from the account
-  half of the aggregator split, in the exact accumulation order of
-  ``run_federated``.
+  half of the aggregator split (memory cells) or the traced aux scalars
+  (packet cells), in the exact accumulation order of ``run_federated``.
 """
 
 from __future__ import annotations
@@ -53,20 +64,10 @@ def _profile(name: str) -> SwitchProfile:
     return SwitchProfile.high() if name == "high" else SwitchProfile.low()
 
 
-def run_fleet_cells(cells):
-    """Run same-signature cells as one batched round program.
-
-    ``cells``: list of ``(ScenarioSpec, seed)`` sharing one
-    ``batch_signature()``.  Returns a list of :class:`FLHistory`, one per
-    cell, bit-identical to the sequential ``run_federated`` runs.
-    """
+def _stack_cells(cells):
+    """Per-cell eager setup — data, init, padding (exactly fl_loop's) —
+    stacked along the leading fleet axis."""
     spec0 = cells[0][0]
-    sig0 = spec0.batch_signature()
-    assert all(s.batch_signature() == sig0 for s, _ in cells), \
-        "fleet cells must share one batch signature"
-    n, rounds = spec0.n_clients, spec0.rounds
-
-    # ---- per-cell eager setup: data, init, padding (exactly fl_loop's).
     cxs, cys, sizes, flats, keys0, tests_x, tests_y = [], [], [], [], [], [], []
     unravel = None
     for spec, seed in cells:
@@ -87,14 +88,64 @@ def run_fleet_cells(cells):
         tests_y.append(np.asarray(test.y))
 
     size_max = max(sizes)
-    cx_b = jnp.asarray(np.stack([_pad_rows(c, size_max) for c in cxs]))
-    cy_b = jnp.asarray(np.stack([_pad_rows(c, size_max) for c in cys]))
-    size_b = jnp.asarray(np.array(sizes, np.int32))
-    xt_b = jnp.asarray(np.stack(tests_x))
-    yt_b = jnp.asarray(np.stack(tests_y))
-    flat_b = jnp.stack(flats)
-    key_b = jnp.stack(keys0)
-    d = int(flat_b.shape[1])
+    batch = {
+        "cx": jnp.asarray(np.stack([_pad_rows(c, size_max) for c in cxs])),
+        "cy": jnp.asarray(np.stack([_pad_rows(c, size_max) for c in cys])),
+        "size": jnp.asarray(np.array(sizes, np.int32)),
+        "xt": jnp.asarray(np.stack(tests_x)),
+        "yt": jnp.asarray(np.stack(tests_y)),
+        "flat": jnp.stack(flats),
+        "key": jnp.stack(keys0),
+    }
+    d = int(batch["flat"].shape[1])
+    lr0 = np.array([s.lr0 for s, _ in cells], np.float64)
+    lr_tau = np.array([s.lr_tau for s, _ in cells], np.float64)
+    client_round = make_client_round(unravel, spec0.batch, spec0.local_steps)
+    return batch, unravel, d, lr0, lr_tau, client_round
+
+
+def _lr_t(lr0, lr_tau, t: int):
+    # the sequential loop computes lr as a Python float (f64) that jit
+    # casts to f32; the f64->f32 rounding here is the same one.
+    return jnp.asarray((lr0 / (1.0 + np.sqrt(t) / lr_tau))
+                       .astype(np.float32))
+
+
+def _eager_loss_means(losses_b) -> np.ndarray:
+    """Per-cell round-loss means, computed exactly as the sequential loop
+    does: an *eager* jnp mean over each cell's [N] loss vector
+    (``float(losses.mean())`` in ``run_federated``) — never the fused
+    in-program reduction, whose f32 rounding can differ by a ulp."""
+    rows = np.asarray(losses_b)
+    return np.array([float(jnp.asarray(row).mean()) for row in rows],
+                    np.float64)
+
+
+def run_fleet_cells(cells):
+    """Run same-signature cells as one batched round program.
+
+    ``cells``: list of ``(ScenarioSpec, seed)`` sharing one
+    ``batch_signature()``.  Returns a list of :class:`FLHistory`, one per
+    cell, bit-identical to the sequential ``run_federated`` runs.
+    """
+    spec0 = cells[0][0]
+    sig0 = spec0.batch_signature()
+    assert all(s.batch_signature() == sig0 for s, _ in cells), \
+        "fleet cells must share one batch signature"
+    if spec0.transport == "packet":
+        return _run_packet_cells(cells)
+    return _run_memory_cells(cells)
+
+
+# ---------------------------------------------------------------------------
+# memory transport: aggregator core + analytic pricing
+# ---------------------------------------------------------------------------
+
+def _run_memory_cells(cells):
+    spec0 = cells[0][0]
+    n, rounds = spec0.n_clients, spec0.rounds
+    batch, unravel, d, lr0, lr_tau, client_round = _stack_cells(cells)
+    flat_b, key_b = batch["flat"], batch["key"]
     e_b = jnp.zeros((len(cells), n, d))
 
     # ---- dynamic per-cell scalars: vote threshold + lr schedule.
@@ -102,12 +153,8 @@ def run_fleet_cells(cells):
     dyn_b = {k: jnp.asarray(np.array([s.dyn_scalars()[k] for s, _ in cells],
                                      np.int32))
              for k in dyn0}
-    lr0 = np.array([s.lr0 for s, _ in cells], np.float64)
-    lr_tau = np.array([s.lr_tau for s, _ in cells], np.float64)
-
     core, account = make_aggregator_core(spec0.algorithm,
                                          **spec0.core_kwargs())
-    client_round = make_client_round(unravel, spec0.batch, spec0.local_steps)
 
     def cell_step(flat, e_stack, agg_state, key, lr, dyn, cx, cy, size,
                   xt, yt):
@@ -118,7 +165,10 @@ def run_fleet_cells(cells):
         flat = flat - delta
         pred = jnp.argmax(mlp_apply(unravel(flat), xt), axis=-1)
         acc = (pred == yt).mean()
-        return flat, residuals, agg_state, key, acc, losses.mean(), aux
+        # the [N] per-client loss vector is reduced EAGERLY per cell below:
+        # run_federated means it outside jit, and XLA's in-program fused
+        # reduction can round the f32 mean differently at some N
+        return flat, residuals, agg_state, key, acc, losses, aux
 
     # The fleet state (params, error-feedback residuals, aggregator state,
     # PRNG keys) is threaded through the round program and never read again
@@ -130,36 +180,127 @@ def run_fleet_cells(cells):
     agg_state = None
     accs, loss_means, auxes = [], [], []
     for t in range(1, rounds + 1):
-        # the sequential loop computes lr as a Python float (f64) that jit
-        # casts to f32; the f64->f32 rounding here is the same one.
-        lr_t = jnp.asarray((lr0 / (1.0 + np.sqrt(t) / lr_tau))
-                           .astype(np.float32))
-        (flat_b, e_b, agg_state, key_b, acc, lmean, aux) = step(
-            flat_b, e_b, agg_state, key_b, lr_t, dyn_b, cx_b, cy_b, size_b,
-            xt_b, yt_b)
+        (flat_b, e_b, agg_state, key_b, acc, losses, aux) = step(
+            flat_b, e_b, agg_state, key_b, _lr_t(lr0, lr_tau, t), dyn_b,
+            batch["cx"], batch["cy"], batch["size"], batch["xt"], batch["yt"])
         accs.append(np.asarray(acc))
-        loss_means.append(np.asarray(lmean))
+        loss_means.append(_eager_loss_means(losses))
         auxes.append({k: np.asarray(v) for k, v in aux.items()})
 
     # ---- Python-side pricing, in fl_loop's exact accumulation order.
     histories = []
     for b, (spec, seed) in enumerate(cells):
-        rates = client_rates(n, seed)
+        rates = client_rates(spec0.n_clients, seed)
         profile = _profile(spec.switch)
         hist = FLHistory([], [], [], [])
         t_cum = 0.0
         mb_cum = 0.0
         for t in range(rounds):
             aux_b = {k: int(v[b]) for k, v in auxes[t].items()}
-            traffic, load = account(n, d, aux_b)
+            traffic, load = account(spec0.n_clients, d, aux_b)
             down_packets = n_packets(traffic.total_bytes)
             t_cum += round_wall_clock(
                 packets_per_client=load.packets_per_client,
                 download_packets=down_packets, rates=rates, profile=profile,
                 local_train_s=spec.local_train_s, aligned=load.aligned)
-            upload_mb = traffic.total_bytes * n / 1e6
-            download_mb = traffic.total_bytes * n / 1e6
+            upload_mb = traffic.total_bytes * spec0.n_clients / 1e6
+            download_mb = traffic.total_bytes * spec0.n_clients / 1e6
             mb_cum += upload_mb + download_mb
+            hist.acc.append(float(accs[t][b]))
+            hist.wall_clock.append(t_cum)
+            hist.traffic_mb.append(mb_cum)
+            hist.loss.append(float(loss_means[t][b]))
+        histories.append(hist)
+    return histories
+
+
+# ---------------------------------------------------------------------------
+# packet transport: the netsim round core batched on the fleet axis
+# ---------------------------------------------------------------------------
+
+def _run_packet_cells(cells):
+    from repro.core.fediac import round_traffic
+    from repro.netsim import packet_dyn, make_fediac_packet_core
+    from repro.netsim.batched import retx_byte_count
+    from repro.netsim.timeline import service_time
+
+    spec0 = cells[0][0]
+    n, rounds = spec0.n_clients, spec0.rounds
+    batch, unravel, d, lr0, lr_tau, client_round = _stack_cells(cells)
+    flat_b, key_b = batch["flat"], batch["key"]
+    e_b = jnp.zeros((len(cells), n, d))
+
+    # The compiled program comes from the a-stripped core config (cells
+    # differing only in the vote threshold share it); each cell's resolved
+    # per-n_up threshold table + network rates ride as traced inputs.
+    cfg_core = spec0.core_kwargs()["cfg"]
+    net_static = cells[0][0].net_config()
+    pcore = make_fediac_packet_core(cfg_core, net_static, n)
+    dyn_b = jax.tree_util.tree_map(
+        lambda *xs: jnp.stack(xs),
+        *[packet_dyn(spec.fediac_config(), spec.net_config(), n,
+                     spec.local_train_s,
+                     service_time(_profile(spec.switch), aligned=True))
+          for spec, _ in cells])
+    net_key_b = jnp.stack([jax.random.PRNGKey(spec.net_seed)
+                           for spec, _ in cells])
+    rates_b = jnp.asarray(np.stack([client_rates(n, seed)
+                                    for _, seed in cells]), jnp.float32)
+
+    # only the pricing scalars leave the program: keeping the full aux
+    # (masks, vote counts) as jit outputs would force their per-round
+    # materialization and device->host copy just to be discarded
+    keep = ("wall_clock_s", "n_part", "n_up", "retransmissions",
+            "retx_last")
+
+    def cell_step(flat, e_stack, key, net_key, rates, lr, dyn, cx, cy, size,
+                  xt, yt, t):
+        key, k1, k2 = jax.random.split(key, 3)
+        u_stack, losses = client_round(flat, k1, lr, cx, cy, size)
+        u_stack = u_stack + e_stack
+        delta, residuals, aux = pcore(u_stack, k2, net_key, t, rates, dyn)
+        flat = flat - delta
+        pred = jnp.argmax(mlp_apply(unravel(flat), xt), axis=-1)
+        acc = (pred == yt).mean()
+        return (flat, residuals, key, acc, losses,
+                {k: aux[k] for k in keep})
+
+    # round_idx is shared by every lane (in_axes None); state/keys donate
+    # exactly as the memory fleet does.
+    step = jax.jit(
+        jax.vmap(cell_step,
+                 in_axes=(0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, None)),
+        donate_argnums=(0, 1, 2))
+
+    accs, loss_means, auxes = [], [], []
+    for t in range(1, rounds + 1):
+        (flat_b, e_b, key_b, acc, losses, aux) = step(
+            flat_b, e_b, key_b, net_key_b, rates_b, _lr_t(lr0, lr_tau, t),
+            dyn_b, batch["cx"], batch["cy"], batch["size"], batch["xt"],
+            batch["yt"], jnp.int32(t))
+        accs.append(np.asarray(acc))
+        loss_means.append(_eager_loss_means(losses))
+        auxes.append({k: np.asarray(v) for k, v in aux.items()})
+
+    # ---- Python-side pricing from the traced aux, in fl_loop's exact
+    # packet-transport accumulation order (simulated wall-clock; uploads
+    # from the clients that actually sent, broadcast to all N).
+    histories = []
+    mtu = net_static.mtu
+    for b, (spec, seed) in enumerate(cells):
+        tr = round_traffic(spec.fediac_config(), d)
+        hist = FLHistory([], [], [], [])
+        t_cum = 0.0
+        mb_cum = 0.0
+        for t in range(rounds):
+            t_cum += float(auxes[t]["wall_clock_s"][b])
+            retx_bytes = retx_byte_count(auxes[t]["retransmissions"][b],
+                                         auxes[t]["retx_last"][b],
+                                         tr.phase2_bytes, mtu)
+            up_bytes = (tr.phase1_bytes * int(auxes[t]["n_part"][b])
+                        + tr.phase2_bytes * int(auxes[t]["n_up"][b])
+                        + retx_bytes)
+            mb_cum += up_bytes / 1e6 + tr.total_bytes * n / 1e6
             hist.acc.append(float(accs[t][b]))
             hist.wall_clock.append(t_cum)
             hist.traffic_mb.append(mb_cum)

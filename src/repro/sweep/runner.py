@@ -3,9 +3,12 @@
 ``run_sweep`` expands a scenario grid over a seed axis, groups the cells by
 compiled-program signature, and executes each group through the vmapped
 fleet program (``fleet.run_fleet_cells``) in chunks of at most
-``max_fleet`` cells.  Packet-transport scenarios (and anything else that
-cannot ride the fleet axis) fall back to the sequential
-``run_federated`` path — same results, one process.
+``max_fleet`` cells.  Packet-transport FediAC scenarios batch like
+everything else since the jittable packet round core (DESIGN.md §13) —
+a loss x participation x straggler grid shares one compiled program;
+whatever still cannot ride the fleet axis (packet baselines, the
+streaming engine) falls back to the sequential ``run_federated`` path —
+same results, one process.
 
 Grids larger than memory (or longer than a preemption window) resume from
 an on-disk progress file: after every chunk the finished cells' histories

@@ -26,8 +26,13 @@ from repro.data import classification, partition_dirichlet, partition_iid
 __all__ = ["ScenarioSpec", "make_task", "cell_key"]
 
 _FEDIAC_DYNAMIC = ("a", "a_frac")       # resolved to the dyn {"a"} scalar
-_PRICING_ONLY = ("switch", "local_train_s")  # never enter the numerics
+_PRICING_ONLY = ("switch", "local_train_s")  # pricing for memory cells;
+                                        # per-cell traced scalars for packet
 _DATA_ONLY = ("name", "dist", "beta")   # change the data, not the program
+_NET_DYNAMIC = ("loss", "participation", "straggler_frac", "net_seed")
+                                        # packet-cell traced scalars/keys:
+                                        # a loss x participation grid rides
+                                        # one compiled round program
 
 
 @dataclass(frozen=True)
@@ -106,17 +111,19 @@ class ScenarioSpec:
             return {"a": self.fediac_config().threshold(self.n_clients)}
         return {}
 
+    def net_config(self):
+        """The :class:`repro.netsim.NetConfig` of a packet cell."""
+        from repro.netsim import NetConfig
+        return NetConfig(loss=self.loss, participation=self.participation,
+                         straggler_frac=self.straggler_frac,
+                         n_leaves=self.n_leaves, seed=self.net_seed)
+
     # ------------------------------------------------------------------
     def to_flconfig(self, seed: int):
         """The sequential :class:`repro.training.FLConfig` for one cell."""
         from repro.training.fl_loop import FLConfig
         from repro.switch import SwitchProfile
-        net = None
-        if self.transport == "packet":
-            from repro.netsim import NetConfig
-            net = NetConfig(loss=self.loss, participation=self.participation,
-                            straggler_frac=self.straggler_frac,
-                            n_leaves=self.n_leaves, seed=self.net_seed)
+        net = self.net_config() if self.transport == "packet" else None
         profile = (SwitchProfile.high() if self.switch == "high"
                    else SwitchProfile.low())
         return FLConfig(n_clients=self.n_clients, rounds=self.rounds,
@@ -136,19 +143,31 @@ class ScenarioSpec:
 
     # ------------------------------------------------------------------
     def batchable(self) -> bool:
-        """Can this scenario ride the vmapped fleet program?"""
+        """Can this scenario ride the vmapped fleet program?
+
+        Memory-transport cells batch for every registered aggregator core;
+        packet-transport cells batch for FediAC through the jittable
+        fixed-shape packet round core (``netsim.batched``, DESIGN.md §13) —
+        loss/participation/straggler rates ride as per-cell traced scalars.
+        The streaming engine keeps the sequential path (its chunk scan is
+        not exercised under the fleet vmap)."""
         from repro.core.baselines import _CORES
+        if self.transport == "packet":
+            return self.algorithm == "fediac" and self.engine == "monolithic"
         return self.transport == "memory" and self.algorithm in _CORES
 
     def batch_signature(self) -> tuple:
         """Hashable key of everything that fixes the compiled fleet program.
 
         Cells with equal signatures run as one ``vmap`` batch; the excluded
-        fields are either batched (vote threshold, lr schedule, data) or
-        pure Python-side pricing (switch profile, local train time).
+        fields are either batched (vote threshold, lr schedule, data; for
+        packet cells also loss/participation/straggler rates, the net seed,
+        the switch service time and the local train time — all per-cell
+        traced inputs of the packet round core) or pure Python-side pricing
+        (switch profile, local train time for memory cells).
         """
-        excluded = _FEDIAC_DYNAMIC + _PRICING_ONLY + _DATA_ONLY + ("lr0",
-                                                                  "lr_tau")
+        excluded = (_FEDIAC_DYNAMIC + _PRICING_ONLY + _DATA_ONLY
+                    + _NET_DYNAMIC + ("lr0", "lr_tau"))
         items = tuple(sorted((k, v) for k, v in self.__dict__.items()
                              if k not in excluded))
         return (self.algorithm,) + items

@@ -1,6 +1,7 @@
-from .packets import MTU, RoundTraffic, n_packets
+from .packets import MTU, RoundTraffic, n_packets, packet_sizes
 from .psim import ProgrammableSwitch, PSStats
 from .queueing import SwitchProfile, client_rates, round_wall_clock
 
-__all__ = ["MTU", "RoundTraffic", "n_packets", "ProgrammableSwitch", "PSStats",
+__all__ = ["MTU", "RoundTraffic", "n_packets", "packet_sizes",
+           "ProgrammableSwitch", "PSStats",
            "SwitchProfile", "client_rates", "round_wall_clock"]

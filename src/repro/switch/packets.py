@@ -4,11 +4,24 @@ from __future__ import annotations
 
 from dataclasses import dataclass
 
+import numpy as np
+
 MTU = 1500
 
 
 def n_packets(n_bytes: int, mtu: int = MTU) -> int:
     return max(1, -(-int(n_bytes) // mtu))
+
+
+def packet_sizes(n_bytes: int, mtu: int = MTU) -> np.ndarray:
+    """int64[n_packets] per-packet wire bytes: MTU-sized except the final
+    partial packet (at least 1 byte — a zero-byte payload still rides one
+    packet).  The single packet-sizing rule shared by the analytic switch
+    model and the netsim dataplane's retransmission byte accounting."""
+    p = n_packets(n_bytes, mtu)
+    sizes = np.full(p, mtu, np.int64)
+    sizes[-1] = max(1, int(n_bytes) - (p - 1) * mtu)
+    return sizes
 
 
 @dataclass

@@ -68,6 +68,9 @@ class FLConfig:
     retransmission, stragglers, partial participation, register windows
     and the leaf->root switch hierarchy, all configured by ``net`` (a
     ``netsim.NetConfig``) — and uses the *simulated* wall-clock instead.
+    The FediAC packet round runs as one jitted fixed-shape core
+    (DESIGN.md §13); the sweep fleet vmaps the same core, so packet
+    scenarios executed here and through ``repro.sweep`` are bit-identical.
     With ``net`` at its lossless full-participation defaults the packet
     transport is bit-identical to the in-memory FediAC engine.
     """

@@ -23,12 +23,19 @@ def _tracked_stub():
                    "peak_rss_mb": 1600.0}
     for k in ("seed_s", "speedup", "bit_identical"):
         stream_cell.pop(k)  # engine-only scale cell: the seed cannot run it
+    fleet_cell = {"name": "dataplane-l0-p1", "loss": 0.0,
+                  "participation": 1.0, "final_acc": 0.81, "host_s": 5.4,
+                  "bit_identical": True}
     return {
         "aggregation": {"cells": [agg_cell, stream_cell]},
         "dataplane": {"rounds": 12, "memory_transport_acc": 0.81,
                       "throughput": {"packets_per_s": 1_000_000},
                       "cells": [dp_cell,
-                                {**dp_cell, "loss": 0.05, "final_acc": 0.7}]},
+                                {**dp_cell, "loss": 0.05, "final_acc": 0.7}],
+                      "fleet": {"cells": [fleet_cell],
+                                "bit_identical_all": True,
+                                "sequential_s": 30.0, "fleet_s": 11.0,
+                                "speedup_paired": 2.7}},
         "sweep": {"cells": [sweep_cell], "speedup": 4.0},
     }
 
@@ -42,7 +49,9 @@ def _fresh_stub(tracked):
         "dataplane": {"lossless": dict(tracked["dataplane"]["cells"][0]),
                       "memory_acc": tracked["dataplane"]
                       ["memory_transport_acc"],
-                      "throughput": {"packets_per_s": 900_000}},
+                      "throughput": {"packets_per_s": 900_000},
+                      "fleet_smoke": {"cells": [], "bit_identical_all": True,
+                                      "speedup_paired": 1.6}},
         "sweep": {"cells": [dict(c) for c in tracked["sweep"]["cells"]],
                   "speedup": 3.5},
     }
@@ -95,6 +104,30 @@ def test_gate_red_on_specific_regressions():
     fresh = _fresh_stub(tracked)
     fresh["dataplane"]["memory_acc"] += 0.01
     assert compare_dataplane(tracked["dataplane"], fresh["dataplane"])
+    # simulated wall-clock drifting past the tight f32 band
+    fresh = _fresh_stub(tracked)
+    fresh["dataplane"]["lossless"]["wall_clock_s"] *= 1.05
+    assert compare_dataplane(tracked["dataplane"], fresh["dataplane"])
+    fresh = _fresh_stub(tracked)
+    fresh["dataplane"]["lossless"]["wall_clock_s"] *= 1.005  # inside band
+    assert compare_dataplane(tracked["dataplane"], fresh["dataplane"]) == []
+    # the packet fleet losing bit-identity in a fresh smoke audit
+    fresh = _fresh_stub(tracked)
+    fresh["dataplane"]["fleet_smoke"]["bit_identical_all"] = False
+    assert compare_dataplane(tracked["dataplane"], fresh["dataplane"])
+    # the fresh smoke fleet running slower than the sequential loop
+    fresh = _fresh_stub(tracked)
+    fresh["dataplane"]["fleet_smoke"]["speedup_paired"] = 0.95
+    assert compare_dataplane(tracked["dataplane"], fresh["dataplane"])
+    # the tracked fleet baseline slipping below the 2x speedup floor
+    slow_fleet = _tracked_stub()
+    slow_fleet["dataplane"]["fleet"]["speedup_paired"] = 1.7
+    fresh = _fresh_stub(tracked)
+    assert compare_dataplane(slow_fleet["dataplane"], fresh["dataplane"])
+    # a tracked fleet cell missing its host wall-time record
+    nohost = _tracked_stub()
+    nohost["dataplane"]["fleet"]["cells"][0].pop("host_s")
+    assert compare_dataplane(nohost["dataplane"], fresh["dataplane"])
     # fleet losing its throughput edge entirely
     fresh = _fresh_stub(tracked)
     fresh["sweep"]["speedup"] = 0.9

@@ -94,11 +94,61 @@ def test_batch_signature_partitions():
     pkt = ScenarioSpec(algorithm="fediac", a=2, transport="packet", **TINY)
     assert a2.batch_signature() == a4.batch_signature()
     assert a2.batch_signature() != sw.batch_signature()
-    assert a2.batchable() and sw.batchable() and not pkt.batchable()
+    assert a2.batchable() and sw.batchable()
+    # packet FediAC batches through the netsim round core (DESIGN.md §13);
+    # loss/participation/straggler rates and the net seed ride as traced
+    # per-cell scalars, so a whole grid shares one compiled program —
+    # while the transport itself still splits the group from memory cells
+    pkt_lossy = ScenarioSpec(algorithm="fediac", a=2, transport="packet",
+                             loss=0.05, participation=0.5,
+                             straggler_frac=0.25, net_seed=3, **TINY)
+    assert pkt.batchable() and pkt_lossy.batchable()
+    assert pkt.batch_signature() == pkt_lossy.batch_signature()
+    assert pkt.batch_signature() != a2.batch_signature()
+    # packet baselines and the streaming engine keep the sequential path
+    pkt_sw = ScenarioSpec(algorithm="switchml", transport="packet", **TINY)
+    pkt_stream = ScenarioSpec(algorithm="fediac", a=2, transport="packet",
+                              engine="stream", **TINY)
+    assert not pkt_sw.batchable() and not pkt_stream.batchable()
     # pricing-only fields never split a group
     hi = ScenarioSpec(algorithm="fediac", a=2, switch="high", **TINY)
     lo = ScenarioSpec(algorithm="fediac", a=2, switch="low", **TINY)
     assert hi.batch_signature() == lo.batch_signature()
+
+
+# ---------------------------------------------------------------------------
+# packet-transport cells on the fleet axis (DESIGN.md §13)
+# ---------------------------------------------------------------------------
+
+def test_packet_fleet_bit_identical_mixed_network_conditions():
+    """Lossless, lossy+partial and straggler packet cells — different vote
+    thresholds and net seeds — ride ONE vmapped program and each equals
+    its sequential PacketTransport run exactly (history bit-identity)."""
+    specs = [ScenarioSpec(name="pk-clean", algorithm="fediac", a=2,
+                          transport="packet", **TINY),
+             ScenarioSpec(name="pk-lossy", algorithm="fediac", a=2,
+                          transport="packet", loss=0.05, participation=0.5,
+                          net_seed=3, **TINY),
+             ScenarioSpec(name="pk-strag", algorithm="fediac", a=3,
+                          transport="packet", straggler_frac=0.5,
+                          net_seed=1, **TINY)]
+    assert len({s.batch_signature() for s in specs}) == 1
+    result = run_sweep(specs, (0,))
+    for cr in result:
+        _assert_same(run_cell_sequential(cr.spec, cr.seed), cr.history,
+                     cr.key)
+
+
+def test_packet_fleet_matches_memory_when_lossless():
+    """The fleet-batched lossless packet cell learns the identical
+    trajectory as the in-memory transport (same accuracy per round)."""
+    pkt = ScenarioSpec(name="pk", algorithm="fediac", a=2,
+                       transport="packet", **TINY)
+    mem = ScenarioSpec(name="mem", algorithm="fediac", a=2, **TINY)
+    res = run_sweep([pkt, mem], (0,))
+    h = {c.spec.name: c.history for c in res}
+    assert h["pk"].acc == h["mem"].acc
+    assert h["pk"].traffic_mb == h["mem"].traffic_mb
 
 
 def test_cell_key_stable_and_flat():
@@ -145,12 +195,19 @@ def test_grid_registry():
     with pytest.raises(KeyError):
         get_grid("nope")
     assert all(s.batchable() for s in smoke_grid())
-    assert not any(s.batchable() for s in get_grid("dataplane"))
+    # the dataplane grid rides the fleet axis too (DESIGN.md §13), and its
+    # cells all share one compiled round program
+    dp = get_grid("dataplane")
+    assert all(s.batchable() for s in dp)
+    assert len({s.batch_signature() for s in dp}) == 1
 
 
-def test_packet_cells_take_sequential_fallback():
+def test_packet_cells_forced_sequential_agree_with_fleet():
+    """``sequential=True`` (the bit-identity oracle path) routes packet
+    cells through run_federated + PacketTransport; the default fleet path
+    must reproduce it exactly."""
     spec = ScenarioSpec(name="pkt", algorithm="fediac", a=2,
-                        transport="packet", **TINY)
+                        transport="packet", loss=0.02, **TINY)
     res = run_sweep([spec], (0,))
-    h = run_cell_sequential(spec, 0)
-    _assert_same(h, res.cells[0].history, "packet")
+    seq = run_sweep([spec], (0,), sequential=True)
+    _assert_same(seq.cells[0].history, res.cells[0].history, "packet")
