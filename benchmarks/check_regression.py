@@ -1,8 +1,9 @@
 """CI benchmark-regression gate (DESIGN.md §10).
 
 Compares a fresh smoke run against the tracked benchmark baselines at the
-repo root — ``BENCH_aggregation.json``, ``BENCH_dataplane.json`` and
-``BENCH_sweep.json`` — and exits non-zero on drift.
+repo root — ``BENCH_aggregation.json``, ``BENCH_dataplane.json``,
+``BENCH_sweep.json`` and ``BENCH_faults.json`` — and exits non-zero on
+drift.
 
 Gating policy, by how machine-dependent each quantity is:
 
@@ -29,8 +30,9 @@ Gating policy, by how machine-dependent each quantity is:
                               # gate MUST then fail (CI asserts exit != 0)
 
 Refreshing baselines after an intentional change: re-run the producing
-benchmarks (``python -m benchmarks.{aggregation_round,dataplane,sweep}``)
-on an idle machine and commit the regenerated ``BENCH_*.json``.
+benchmarks (``python -m
+benchmarks.{aggregation_round,dataplane,sweep,faults}``) on an idle
+machine and commit the regenerated ``BENCH_*.json``.
 """
 
 from __future__ import annotations
@@ -46,6 +48,7 @@ TRACKED = {
     "aggregation": os.path.join(ROOT, "BENCH_aggregation.json"),
     "dataplane": os.path.join(ROOT, "BENCH_dataplane.json"),
     "sweep": os.path.join(ROOT, "BENCH_sweep.json"),
+    "faults": os.path.join(ROOT, "BENCH_faults.json"),
 }
 WALL_TOL = 4.0   # wall-clock band: fresh within [tracked/4, tracked*4]
 ACC_TOL = 0.005  # |final_acc drift| tolerated (cross-host XLA ulps only;
@@ -110,10 +113,21 @@ def fresh_sweep() -> dict:
         return json.load(fh)
 
 
+def fresh_faults() -> dict:
+    """The chaos smoke audits (DESIGN.md §14).  Round counts differ from
+    the tracked full run, so the gate compares the *invariant flags*
+    (zero-fault bit-identity, fleet/sequential bit-identity, bit-exact
+    resume) — which hold at any round count — not accuracies."""
+    from .faults import identity_section, recovery_section
+    return {"identity": identity_section(smoke=True),
+            "recovery": recovery_section(smoke=True)}
+
+
 def compute_fresh(tracked: dict) -> dict:
     return {"aggregation": fresh_aggregation(),
             "dataplane": fresh_dataplane(int(tracked["dataplane"]["rounds"])),
-            "sweep": fresh_sweep()}
+            "sweep": fresh_sweep(),
+            "faults": fresh_faults()}
 
 
 # ---------------------------------------------------------------------------
@@ -276,10 +290,42 @@ def compare_sweep(tracked: dict, fresh: dict) -> list:
     return fails
 
 
+def compare_faults(tracked: dict, fresh: dict) -> list:
+    """Chaos gate (DESIGN.md §14): the tracked baseline and the fresh
+    smoke run must both hold every fault invariant — fault-free
+    bit-identity with the plain dataplane, fleet/sequential bit-identity
+    for every chaos cell, and bit-exact kill-and-resume recovery."""
+    fails = []
+    for label, payload in (("tracked", tracked), ("fresh", fresh)):
+        ident = payload.get("identity")
+        rec = payload.get("recovery")
+        if not ident or not rec:
+            fails.append(f"{label} faults payload lacks identity/recovery")
+            continue
+        if not ident.get("bit_identical_faultfree", False):
+            fails.append(f"{label} chaos-clean cell diverged from the "
+                         "plain packet dataplane")
+        if not ident.get("fleet_bit_identical_all", False):
+            fails.append(f"{label} chaos fleet lost fleet/sequential "
+                         "bit-identity")
+        for c in ident.get("cells", []):
+            if not c.get("bit_identical", False):
+                fails.append(f"{label} chaos cell {c['name']} lost "
+                             "fleet/sequential bit-identity")
+        if not rec.get("resume_identical", False):
+            fails.append(f"{label} kill-and-resume diverged from the "
+                         "uninterrupted run")
+        if not rec.get("ckpt_never_perturbs", False):
+            fails.append(f"{label} checkpointing perturbed the run it "
+                         "observed")
+    return fails
+
+
 COMPARATORS = {
     "aggregation": compare_aggregation,
     "dataplane": compare_dataplane,
     "sweep": compare_sweep,
+    "faults": compare_faults,
 }
 
 
@@ -299,6 +345,8 @@ def inject_drift(tracked: dict) -> dict:
     fleet["speedup_paired"] = 1.0       # below the tracked 2x floor
     drifted["sweep"]["cells"][0]["traffic_mb"] = round(
         drifted["sweep"]["cells"][0]["traffic_mb"] * 1.01, 6)
+    drifted["faults"]["identity"]["bit_identical_faultfree"] = False
+    drifted["faults"]["recovery"]["resume_identical"] = False
     return drifted
 
 

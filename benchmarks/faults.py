@@ -1,0 +1,195 @@
+"""Chaos-dataplane benchmark: the zero-fault bit-identity audit, the
+fault-injection grid, and crash-safe recovery (DESIGN.md §14).
+
+Three parts, all written to the tracked ``BENCH_faults.json``:
+
+* **identity** — the standing invariants the chaos layer must never
+  erode: the chaos-clean cell (a :class:`FaultConfig` with every fault
+  rate at zero) trains bit-identically to the plain packet dataplane,
+  and every chaos cell — faulty or not — run ``jit(vmap)``-batched on
+  the fleet axis reproduces its sequential ``run_federated`` history
+  exactly (fault rates ride as traced per-cell scalars, DESIGN.md §13).
+* **grid** — accuracy / simulated wall-clock / traffic across the fault
+  families of ``repro.sweep.grids.chaos_grid`` (bursty GE loss, client
+  crashes, ACK-loss duplicates, the combined storm), one compiled
+  program for the whole grid.
+* **recovery** — round-granular checkpointing overhead (host-time ratio
+  vs the same run without checkpoints) and the kill-at-round-k resume
+  audit: resuming a killed run must land on the uninterrupted
+  ``FLHistory`` bit-exactly, under fault injection.
+
+  PYTHONPATH=src python -m benchmarks.faults [--smoke] [--out PATH]
+
+Exit status is non-zero if any fault-free cell loses bit-identity or a
+resume diverges — CI runs the ``--smoke`` variant on every PR as the
+chaos smoke check.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import tempfile
+import time
+from dataclasses import replace
+
+from repro.core.fediac import FediACConfig
+from repro.netsim import FaultConfig
+from repro.sweep import run_cell_sequential, run_sweep
+from repro.sweep.grids import chaos_grid
+from repro.training import FLConfig, run_federated
+
+from .common import emit, smoke_out_path
+
+OUT_PATH = os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    "BENCH_faults.json")
+
+ROUNDS = 10          # full chaos grid rounds (the grid's own default)
+SMOKE_ROUNDS = 3
+RECOVERY_ROUNDS = 8
+RECOVERY_SMOKE_ROUNDS = 4
+
+
+def _hist_equal(a, b) -> bool:
+    return (a.acc == b.acc and a.loss == b.loss
+            and a.wall_clock == b.wall_clock
+            and a.traffic_mb == b.traffic_mb)
+
+
+def identity_section(*, smoke: bool = False) -> dict:
+    """The chaos grid through the fleet, audited two ways: chaos-clean ==
+    plain packet dataplane (the zero-fault invariant), and every cell's
+    batched history == its sequential history (fault cells ride the
+    fleet axis without drifting)."""
+    rounds = SMOKE_ROUNDS if smoke else ROUNDS
+    cells = [replace(s, rounds=rounds) for s in chaos_grid()]
+    if smoke:
+        cells = cells[:3]
+    plain = replace(cells[0], name="plain-packet", chaos=False)
+    fleet = {c.spec.name: c.history for c in run_sweep(cells + [plain],
+                                                       (0,))}
+    ident_faultfree = _hist_equal(fleet["chaos-clean"],
+                                  fleet["plain-packet"])
+    per_cell = []
+    for s in cells:
+        seq = run_cell_sequential(s, 0)
+        h = fleet[s.name]
+        per_cell.append({
+            "name": s.name,
+            "bit_identical": bool(_hist_equal(h, seq)),
+            "final_acc": round(h.acc[-1], 4),
+            "wall_clock_s": round(h.wall_clock[-1], 3),
+            "traffic_mb": round(h.traffic_mb[-1], 3),
+        })
+    return {
+        "rounds": rounds,
+        "n_cells": len(cells),
+        "bit_identical_faultfree": bool(ident_faultfree),
+        "fleet_bit_identical_all": all(c["bit_identical"]
+                                       for c in per_cell),
+        "cells": per_cell,
+    }
+
+
+def recovery_section(*, smoke: bool = False) -> dict:
+    """Crash-safe recovery under fault injection: run the same chaotic FL
+    task plain, checkpointed, and killed-then-resumed; record the
+    checkpointing host-time overhead and whether the resumed history is
+    bit-exact.  The plain run goes first so it pays the one XLA compile
+    and the overhead ratio compares warm runs."""
+    from repro.data import classification, partition_dirichlet
+    rounds = RECOVERY_SMOKE_ROUNDS if smoke else RECOVERY_ROUNDS
+    kill_at = rounds // 2
+    data = classification(n=1200, dim=16, n_classes=10, seed=0)
+    train, test = data.test_split(0.25)
+    clients = partition_dirichlet(train, 6, beta=0.5, seed=0)
+    net = FaultConfig(loss=0.05, crash_rate=0.1, dup_rate=0.1, seed=2)
+
+    def run_fl(rounds_, ckpt=None, resume=False):
+        t0 = time.perf_counter()
+        h = run_federated(clients, test, FLConfig(
+            n_clients=6, rounds=rounds_, local_steps=2,
+            aggregator="fediac",
+            agg_kwargs={"cfg": FediACConfig(a=2, bits=12)}, seed=0,
+            transport="packet", net=net, ckpt_path=ckpt, resume=resume))
+        return h, time.perf_counter() - t0
+
+    run_fl(rounds)                                  # compile warmup
+    base, t_plain = run_fl(rounds)
+    with tempfile.TemporaryDirectory() as td:
+        full_ck = os.path.join(td, "full.npz")
+        ckpt_hist, t_ckpt = run_fl(rounds, ckpt=full_ck)
+        kill_ck = os.path.join(td, "killed.npz")
+        run_fl(kill_at, ckpt=kill_ck)               # the "killed" run
+        resumed, _ = run_fl(rounds, ckpt=kill_ck, resume=True)
+    return {
+        "rounds": rounds,
+        "kill_at": kill_at,
+        "resume_identical": bool(_hist_equal(base, resumed)),
+        "ckpt_never_perturbs": bool(_hist_equal(base, ckpt_hist)),
+        "ckpt_overhead_ratio": round(t_ckpt / t_plain, 3),
+        "host_s_plain": round(t_plain, 3),
+        "host_s_ckpt": round(t_ckpt, 3),
+    }
+
+
+def run(*, smoke: bool = False, out_path: str = OUT_PATH):
+    if smoke:
+        out_path = smoke_out_path(out_path, OUT_PATH,
+                                  "BENCH_faults.smoke.json")
+    ident = identity_section(smoke=smoke)
+    rows = [
+        ("faults/bit_identical_faultfree",
+         int(ident["bit_identical_faultfree"]), "chaos-clean==plain-packet"),
+        ("faults/fleet_bit_identical_all",
+         int(ident["fleet_bit_identical_all"]),
+         f"cells={ident['n_cells']}"),
+    ]
+    for c in ident["cells"]:
+        rows.append((f"faults/acc/{c['name']}", c["final_acc"],
+                     f"wall={c['wall_clock_s']}s_mb={c['traffic_mb']}"))
+    rec = recovery_section(smoke=smoke)
+    rows.append(("faults/resume_identical", int(rec["resume_identical"]),
+                 f"kill_at={rec['kill_at']}of{rec['rounds']}"))
+    rows.append(("faults/ckpt_never_perturbs",
+                 int(rec["ckpt_never_perturbs"]), "observer-only"))
+    rows.append(("faults/ckpt_overhead_ratio", rec["ckpt_overhead_ratio"],
+                 f"plain={rec['host_s_plain']}s_ckpt={rec['host_s_ckpt']}s"))
+
+    payload = {
+        "benchmark": "faults",
+        "smoke": smoke,
+        "identity": ident,
+        "recovery": rec,
+    }
+    with open(out_path, "w") as fh:
+        json.dump(payload, fh, indent=2)
+        fh.write("\n")
+    rows.append(("faults/json", out_path, "written"))
+    return rows
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny grid + few rounds (CI)")
+    ap.add_argument("--out", default=OUT_PATH)
+    args = ap.parse_args(argv)
+    rows = run(smoke=args.smoke, out_path=args.out)
+    emit(rows)
+    gates = {tag: v for tag, v, _ in rows
+             if tag in ("faults/bit_identical_faultfree",
+                        "faults/fleet_bit_identical_all",
+                        "faults/resume_identical",
+                        "faults/ckpt_never_perturbs")}
+    bad = [tag for tag, v in gates.items() if v != 1]
+    if bad:
+        print(f"faults: invariants lost: {', '.join(bad)}", flush=True)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

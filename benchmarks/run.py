@@ -16,8 +16,8 @@ import sys
 import time
 
 from . import (accuracy_vs_time, aggregation_ops, aggregation_round,
-               compression_error, dataplane, kernel_micro, noniid, roofline,
-               sweep, traffic, vote_threshold)
+               compression_error, dataplane, faults, kernel_micro, noniid,
+               roofline, sweep, traffic, vote_threshold)
 from .common import emit
 
 SECTIONS = {
@@ -30,6 +30,7 @@ SECTIONS = {
     "kernels": kernel_micro.run,        # Pallas kernel micro
     "aggregation": aggregation_round.run,  # round-plan engine vs seed
     "dataplane": dataplane.run,         # packet dataplane: loss x participation
+    "faults": faults.run,               # chaos dataplane: faults + recovery
     "sweep": sweep.run,                 # fleet runner vs sequential loop
     "roofline": roofline.run,           # dry-run roofline table
 }

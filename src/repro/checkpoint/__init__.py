@@ -1,3 +1,5 @@
-from .ckpt import load_checkpoint, save_checkpoint
+from .ckpt import (load_checkpoint, load_run_state, save_checkpoint,
+                   save_run_state)
 
-__all__ = ["save_checkpoint", "load_checkpoint"]
+__all__ = ["save_checkpoint", "load_checkpoint", "save_run_state",
+           "load_run_state"]

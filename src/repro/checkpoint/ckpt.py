@@ -46,3 +46,69 @@ def load_checkpoint(path: str, like=None):
     leaves, treedef = tree_flatten_with_path(like)
     restored = [arrays[_path_str(p)] for p, _ in leaves]
     return tree_unflatten(treedef, restored), step
+
+
+# ---------------------------------------------------------------------------
+# round-granular FL run state (crash-safe recovery, DESIGN.md §14)
+# ---------------------------------------------------------------------------
+#
+# One record per completed round: everything run_federated threads between
+# rounds (model, error-feedback stack, PRNG key, aggregator state, pricing
+# accumulators, the history so far).  The save is atomic (tmp + os.replace
+# via save_checkpoint), so a kill can lose at most the in-flight round;
+# resuming replays the remaining rounds bit-exactly — model/residual arrays
+# round-trip f32/int exactly through npz, the accumulators and history are
+# stored f64 (the precision the Python loop carries them at), and the
+# transports are stateless across rounds by construction.
+
+_HIST_FIELDS = ("acc", "wall_clock", "traffic_mb", "loss")
+
+
+def save_run_state(path: str, *, flat, e_stack, key, agg_state, round_idx,
+                   t_cum, mb_cum, history) -> None:
+    """Persist the FL loop's inter-round state after round ``round_idx``."""
+    tree = {
+        "flat": np.asarray(flat),
+        "e_stack": np.asarray(e_stack),
+        "key": np.asarray(key),
+        "t_cum": np.float64(t_cum),
+        "mb_cum": np.float64(mb_cum),
+        "hist": {f: np.asarray(getattr(history, f), np.float64)
+                 for f in _HIST_FIELDS},
+    }
+    if agg_state is not None:
+        tree["agg_state"] = agg_state
+    save_checkpoint(path, tree, step=round_idx)
+
+
+def load_run_state(path: str) -> dict:
+    """Restore :func:`save_run_state` output.
+
+    Returns a dict with keys ``flat``, ``e_stack``, ``key``, ``agg_state``
+    (None / array / nested dict — aggregators with exotic state pytrees
+    should restore through ``load_checkpoint(like=...)`` instead),
+    ``round`` (the last completed round), ``t_cum`` / ``mb_cum`` (Python
+    floats) and ``history`` (dict of Python-float lists, one per FLHistory
+    field).
+    """
+    arrays, step = load_checkpoint(path)
+    nested: dict = {}
+    for k, v in arrays.items():
+        parts = k.split("/")
+        d = nested
+        for p in parts[:-1]:
+            d = d.setdefault(p, {})
+        d[parts[-1]] = v
+    hist = nested.pop("hist", {})
+    agg_state = nested.pop("agg_state", None)
+    return {
+        "flat": nested["flat"],
+        "e_stack": nested["e_stack"],
+        "key": nested["key"],
+        "agg_state": agg_state,
+        "round": step,
+        "t_cum": float(nested["t_cum"]),
+        "mb_cum": float(nested["mb_cum"]),
+        "history": {f: [float(x) for x in hist.get(f, np.empty(0))]
+                    for f in _HIST_FIELDS},
+    }

@@ -90,6 +90,13 @@ class FediACConfig:
     engine: str = "monolithic"    # monolithic | stream
     stream_chunk: int = 0         # coords per streamed chunk (0 = default,
                                   # repro.core.stream_engine.DEFAULT_CHUNK)
+    # graceful degradation (DESIGN.md §14): when fewer than consensus_floor
+    # coordinates survive the vote threshold (bursty loss / crashed voters
+    # starved the GIA), fall back to the dense mask a = 1 for the round
+    # instead of aggregating a near-empty consensus set.  0 disables the
+    # fallback; applied once per round inside build_round_plan, so every
+    # engine (monolithic, stream, packet, allreduce) inherits it.
+    consensus_floor: int = 0
 
     def k(self, d: int) -> int:
         return max(1, int(round(self.k_frac * d)))

@@ -22,7 +22,22 @@ import jax.numpy as jnp
 
 from . import compaction
 
-__all__ = ["RoundPlan", "build_round_plan"]
+__all__ = ["RoundPlan", "build_round_plan", "consensus_floor_threshold"]
+
+
+def consensus_floor_threshold(counts: jax.Array, a, floor: int) -> jax.Array:
+    """Dense-mask fallback (DESIGN.md §14): when the consensus set collapses
+    below ``floor`` surviving coordinates — vote packets lost to bursty
+    faults, crashed voters — the round degrades to ``a = 1`` (every voted
+    coordinate is kept) instead of aggregating a near-empty selection.
+
+    ``a`` may be traced; the result only ever enters ``counts >= a``
+    comparisons, so the fallback batches on the fleet axis exactly like the
+    dynamic vote threshold itself.
+    """
+    a = jnp.asarray(a, jnp.int32)
+    live = jnp.sum((counts >= a).astype(jnp.int32))
+    return jnp.where(live < jnp.int32(floor), jnp.int32(1), a)
 
 
 class RoundPlan(NamedTuple):
@@ -75,6 +90,8 @@ def build_round_plan(counts: jax.Array, cfg, n_clients: int,
     """
     if a is None:
         a = cfg.threshold(n_clients)
+    if getattr(cfg, "consensus_floor", 0) > 0:
+        a = consensus_floor_threshold(counts, a, cfg.consensus_floor)
     n_chunks = counts.shape[-1]
     if cfg.compact_mode == "block":
         keep_dense, pos = compaction.block_select(counts, a, cfg.block_size,

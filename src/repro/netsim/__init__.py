@@ -13,8 +13,11 @@ in-memory ``core.fediac.aggregate_stack`` engine.
 from .batched import (make_fediac_packet_core, packet_dyn, reliable_upload,
                       scale_num_table, threshold_table)
 from .dataplane import DataplaneStats, SwitchDataplane, n_windows, slot_window
+from .faults import (FaultConfig, chaos_packet_dyn, gilbert_elliott_stationary,
+                     make_chaos_packet_core)
 from .hierarchy import aggregate_hierarchy, drain_hierarchy, leaf_assignment
-from .policies import (NetConfig, net_round_key, sample_participants,
+from .policies import (NetConfig, REGISTER_POLICIES, net_round_key,
+                       register_accumulate, sample_participants,
                        sample_stragglers)
 from .timeline import (DrainStats, deadline_mask, download_time, drain_fifo,
                        lose_packets, mg1_departures, poisson_arrivals,
@@ -31,4 +34,6 @@ __all__ = ["DataplaneStats", "SwitchDataplane", "n_windows", "slot_window",
            "windowed_drain", "InMemoryTransport", "PacketTransport",
            "RoundResult", "Transport", "make_fediac_packet_core",
            "packet_dyn", "reliable_upload", "scale_num_table",
-           "threshold_table"]
+           "threshold_table", "FaultConfig", "chaos_packet_dyn",
+           "gilbert_elliott_stationary", "make_chaos_packet_core",
+           "REGISTER_POLICIES", "register_accumulate"]

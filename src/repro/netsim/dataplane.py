@@ -51,13 +51,16 @@ class DataplaneStats:
     passes: int = 1              # sequential register windows (psim semantics)
     peak_live_slots: int = 0     # widest window actually resident
     aggregation_ops: int = 0     # integer slot-additions executed
+    overflow_slots: int = 0      # registers whose true sum left int32 range
+                                 # (the value wrapped silently — DESIGN.md §14)
 
     def merge(self, other: "DataplaneStats") -> "DataplaneStats":
         return DataplaneStats(
             votes_lost=self.votes_lost + other.votes_lost,
             passes=max(self.passes, other.passes),
             peak_live_slots=max(self.peak_live_slots, other.peak_live_slots),
-            aggregation_ops=self.aggregation_ops + other.aggregation_ops)
+            aggregation_ops=self.aggregation_ops + other.aggregation_ops,
+            overflow_slots=self.overflow_slots + other.overflow_slots)
 
 
 class SwitchDataplane:
@@ -96,6 +99,13 @@ class SwitchDataplane:
         adds every client's slice of the window slot-by-slot (int32, wrap
         semantics identical to ``jnp.sum(axis=0)``), then flushes to the
         output.  Returns the int32[C] aggregate.
+
+        Each window is audited against an exact int64 sum: registers whose
+        true sum left the int32 range wrapped silently in the bank (the
+        hardware behavior) and are counted in ``stats.overflow_slots`` —
+        the flag the §14 degradation policies (saturate/rescale, see
+        ``policies.register_accumulate``) key off instead of shipping the
+        corrupted value.
         """
         if not np.issubdtype(bufs.dtype, np.integer):
             raise TypeError("the dataplane only performs integer arithmetic")
@@ -110,6 +120,9 @@ class SwitchDataplane:
             np.add(self.registers[:hi - lo],
                    bufs[:, lo:hi].sum(axis=0, dtype=np.int32),
                    out=self.registers[:hi - lo], casting="unsafe")
+            exact = bufs[:, lo:hi].sum(axis=0, dtype=np.int64)
+            self.stats.overflow_slots += int(
+                (exact != self.registers[:hi - lo]).sum())
             out[lo:hi] = self.registers[:hi - lo]      # flush
             self.stats.peak_live_slots = max(self.stats.peak_live_slots, hi - lo)
             self.stats.aggregation_ops += max(n - 1, 0) * (hi - lo)

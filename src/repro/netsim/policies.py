@@ -24,20 +24,40 @@ losing votes only shrinks the consensus set.
 
 from __future__ import annotations
 
+import math
 from dataclasses import dataclass
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.switch.packets import MTU
 
 __all__ = ["NetConfig", "net_round_key", "sample_participants",
-           "sample_stragglers"]
+           "sample_stragglers", "INT32_MAX", "INT32_MIN",
+           "register_accumulate", "REGISTER_POLICIES"]
+
+INT32_MAX = np.int32(2**31 - 1)
+INT32_MIN = np.int32(-2**31)
+
+#: Register-bank overflow policies (DESIGN.md §14): how the switch closes
+#: an int32 aggregation window whose true sum exceeds the register width.
+REGISTER_POLICIES = ("wrap", "saturate", "rescale")
 
 
 @dataclass(frozen=True)
 class NetConfig:
-    """Knobs of the packet-level network simulation (one FL deployment)."""
+    """Knobs of the packet-level network simulation (one FL deployment).
+
+    ``__post_init__`` validates every timing/retry knob up front (rather
+    than letting a bad value silently distort the simulated clock): the
+    quorum deadline and the ARQ timeout must be positive finite seconds,
+    ``max_retries`` must allow at least the first transmission attempt,
+    and ``straggler_slowdown`` must be a finite factor >= 1 (an infinite
+    slowdown would poison every max-reduction the drain model takes over
+    client completion times).  Fault injection lives in the subclass
+    ``repro.netsim.faults.FaultConfig`` (DESIGN.md §14).
+    """
 
     loss: float = 0.0              # i.i.d. per-packet loss probability
     participation: float = 1.0     # fraction of clients sampled per round
@@ -61,8 +81,26 @@ class NetConfig:
             raise ValueError("participation must be in (0, 1]")
         if not 0.0 <= self.straggler_frac <= 1.0:
             raise ValueError("straggler_frac must be in [0, 1]")
-        if self.straggler_slowdown < 1.0:
-            raise ValueError("straggler_slowdown must be >= 1")
+        if not (math.isfinite(self.straggler_slowdown)
+                and self.straggler_slowdown >= 1.0):
+            raise ValueError(
+                f"straggler_slowdown must be a finite factor >= 1, got "
+                f"{self.straggler_slowdown}")
+        if self.vote_deadline_s is not None and not (
+                math.isfinite(self.vote_deadline_s)
+                and self.vote_deadline_s > 0.0):
+            raise ValueError(
+                f"vote_deadline_s must be a positive finite number of "
+                f"seconds (or None to wait for everyone), got "
+                f"{self.vote_deadline_s}")
+        if not (math.isfinite(self.rto_s) and self.rto_s > 0.0):
+            raise ValueError(
+                f"rto_s must be a positive finite retransmission timeout, "
+                f"got {self.rto_s}")
+        if self.max_retries < 1:
+            raise ValueError(
+                f"max_retries must be >= 1 (the first attempt counts), got "
+                f"{self.max_retries}")
         if self.n_leaves < 1:
             raise ValueError("n_leaves must be >= 1")
         if self.memory_slots < 1 or self.mtu < 1:
@@ -104,3 +142,113 @@ def sample_stragglers(key: jax.Array, participants: jax.Array,
     u = jnp.where(participants, jax.random.uniform(key, participants.shape),
                   2.0)
     return participants & (_ranks(u) < n_s)
+
+
+# ---------------------------------------------------------------------------
+# Register-bank overflow policies (DESIGN.md §14)
+# ---------------------------------------------------------------------------
+#
+# The switch registers are int32; a window whose true sum exceeds 2^31 - 1
+# wraps silently in hardware.  x64 is disabled in this repo, so the exact
+# detection cannot lean on a wider accumulator: instead the bank is walked
+# client-by-client with lax.scan and each int32 add runs the two's-complement
+# sign test (same-sign operands whose sum flips sign overflowed).  Because
+# int32 addition is associative modulo 2^32, the scan's wrap-mode value is
+# bitwise equal to jnp.sum — the plain dataplane sum — so the "wrap" policy
+# (and any zero-overflow window under the other policies) stays bit-identical
+# to the unfaulted aggregate while still reporting the sticky per-slot flag.
+
+def _overflow_scan(rows: jax.Array, *, clamp: bool):
+    """Accumulate int32 ``rows [N, C]`` slot-wise with overflow detection.
+
+    Returns ``(acc int32[C], overflow bool[C])`` where ``overflow`` is the
+    sticky per-slot flag.  ``clamp=True`` saturates each add at the int32
+    rails (the "saturate" register policy); ``clamp=False`` wraps (exact
+    mod-2^32 value, bitwise ``jnp.sum``).
+    """
+    rows = jnp.asarray(rows, jnp.int32)
+
+    def step(carry, row):
+        acc, ovf = carry
+        s = acc + row
+        pos = (acc > 0) & (row > 0) & (s < 0)
+        neg = (acc < 0) & (row < 0) & (s >= 0)
+        if clamp:
+            s = jnp.where(pos, jnp.int32(INT32_MAX), s)
+            s = jnp.where(neg, jnp.int32(INT32_MIN), s)
+        return (s, ovf | pos | neg), None
+
+    init = (jnp.zeros(rows.shape[1:], jnp.int32),
+            jnp.zeros(rows.shape[1:], bool))
+    (acc, ovf), _ = jax.lax.scan(step, init, rows)
+    return acc, ovf
+
+
+def _rescale_shift_bound(n_rows: int) -> int:
+    """Smallest s with n_rows * 2^31 / 2^s <= 2^30 — a shift at which any
+    n_rows int32 addends fit with a factor-2 margin (so the shift-back
+    cannot overflow either)."""
+    return max(1, math.ceil(math.log2(max(n_rows, 2))) + 1)
+
+
+def register_accumulate(rows: jax.Array, *, policy: str = "wrap",
+                        slot_window=None, n_windows: int = 1):
+    """Close one register-bank aggregation over ``rows`` int32[N, C].
+
+    Returns ``(summed int32[C], overflow bool[C], shift int32[C])``.
+    ``overflow`` always reports which slots would have wrapped under plain
+    int32 accumulation (sticky, per slot); what lands in ``summed`` — a
+    mantissa at scale ``2^shift`` (``shift`` is all-zero except under
+    rescale) — depends on the policy:
+
+    * ``"wrap"``      — hardware default: exact value mod 2^32 (bitwise
+      ``jnp.sum(rows, axis=0)``), overflow silently wrapped but flagged.
+    * ``"saturate"``  — every add clamps at the int32 rails; an overflowed
+      slot holds INT32_MAX/INT32_MIN instead of a sign-flipped wrap.
+    * ``"rescale"``   — per-*window* degradation: if any slot of a register
+      window overflowed, the whole window is re-accumulated from inputs
+      pre-shifted right by the smallest power of two that fits, and the
+      window's exponent is returned in ``shift`` (the GIA would carry it;
+      clients multiply back by ``2^shift`` during decompression).  The
+      value degrades to a coarser quantization instead of a corrupted
+      sign-flip, and a sum beyond int32 range stays representable as
+      mantissa x exponent.  Windows with no overflow keep the exact sum
+      at ``shift == 0``, so a fault-free round is bitwise the plain
+      dataplane.
+
+    ``slot_window`` (int[C], concrete) maps slots to register windows for
+    the rescale policy; ``None`` treats the bank as one window.
+    """
+    if policy not in REGISTER_POLICIES:
+        raise ValueError(
+            f"register policy must be one of {REGISTER_POLICIES}, got "
+            f"{policy!r}")
+    rows = jnp.asarray(rows, jnp.int32)
+    if policy == "saturate":
+        acc, ovf = _overflow_scan(rows, clamp=True)
+        return acc, ovf, jnp.zeros_like(acc)
+    summed, ovf = _overflow_scan(rows, clamp=False)
+    if policy == "wrap":
+        return summed, ovf, jnp.zeros_like(summed)
+    # rescale: candidate shifts 0..s_max; per slot the smallest shift whose
+    # accumulation stays in range, widened to the per-window max so every
+    # slot of a window degrades together (one exponent per window, as a
+    # register bank would implement it).
+    s_max = _rescale_shift_bound(rows.shape[0])
+    sums = [summed]
+    flags = [ovf]
+    for s in range(1, s_max + 1):
+        acc_s, ovf_s = _overflow_scan(jnp.right_shift(rows, s), clamp=False)
+        sums.append(acc_s)
+        flags.append(ovf_s)
+    sums = jnp.stack(sums)          # [S+1, C]
+    flags = jnp.stack(flags)        # [S+1, C] (all-False at s = s_max)
+    fit = jnp.argmax(~flags, axis=0).astype(jnp.int32)   # first fitting shift
+    if slot_window is None:
+        shift = jnp.broadcast_to(jnp.max(fit), fit.shape)
+    else:
+        win = jnp.asarray(slot_window, jnp.int32)
+        per_win = jax.ops.segment_max(fit, win, num_segments=int(n_windows))
+        shift = per_win[win]
+    picked = jnp.take_along_axis(sums, shift[None, :], axis=0)[0]
+    return picked, ovf, shift

@@ -142,9 +142,19 @@ class PacketTransport:
     # ------------------------------------------------------------------
     def _core_for(self, n: int):
         if n not in self._jit_core:
-            core = make_fediac_packet_core(self.cfg, self.net, n)
-            dyn = packet_dyn(self.cfg, self.net, n, self.local_train_s,
-                             service_time(self.profile, aligned=True))
+            from .faults import (FaultConfig, chaos_packet_dyn,
+                                 make_chaos_packet_core)
+            svc = service_time(self.profile, aligned=True)
+            if isinstance(self.net, FaultConfig):
+                # chaos dataplane (DESIGN.md §14): fault-injected core,
+                # bit-identical to the plain one at zero fault rates
+                core = make_chaos_packet_core(self.cfg, self.net, n)
+                dyn = chaos_packet_dyn(self.cfg, self.net, n,
+                                       self.local_train_s, svc)
+            else:
+                core = make_fediac_packet_core(self.cfg, self.net, n)
+                dyn = packet_dyn(self.cfg, self.net, n, self.local_train_s,
+                                 svc)
             self._jit_core[n] = (jax.jit(core), dyn)
         return self._jit_core[n]
 
@@ -172,6 +182,11 @@ class PacketTransport:
                  "aggregation_ops": int(aux["aggregation_ops"]),
                  "phase2_s": float(aux["phase2_s"]),
                  "mean_wait_s": float(aux["mean_wait_s"])}
+        # chaos-core extras (present only under a FaultConfig)
+        for k in ("crashed", "duplicates", "resets", "overflow_slots",
+                  "aborted", "attempts"):
+            if k in aux:
+                stats[k] = int(aux[k])
         # voters that missed the quorum still spent their phase-1 bytes,
         # and every ARQ retransmission re-emits its packet's bytes.
         retx_bytes = retx_byte_count(aux["retransmissions"],

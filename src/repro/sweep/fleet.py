@@ -222,6 +222,8 @@ def _run_packet_cells(cells):
     from repro.core.fediac import round_traffic
     from repro.netsim import packet_dyn, make_fediac_packet_core
     from repro.netsim.batched import retx_byte_count
+    from repro.netsim.faults import (FaultConfig, chaos_packet_dyn,
+                                     make_chaos_packet_core)
     from repro.netsim.timeline import service_time
 
     spec0 = cells[0][0]
@@ -233,14 +235,22 @@ def _run_packet_cells(cells):
     # The compiled program comes from the a-stripped core config (cells
     # differing only in the vote threshold share it); each cell's resolved
     # per-n_up threshold table + network rates ride as traced inputs.
+    # Chaos cells (spec.chaos -> FaultConfig, DESIGN.md §14) swap in the
+    # fault-injected core with the per-cell fault rates appended to dyn —
+    # clean and faulty cells batch through the same compiled program.
     cfg_core = spec0.core_kwargs()["cfg"]
     net_static = cells[0][0].net_config()
-    pcore = make_fediac_packet_core(cfg_core, net_static, n)
+    if isinstance(net_static, FaultConfig):
+        pcore = make_chaos_packet_core(cfg_core, net_static, n)
+        make_dyn = chaos_packet_dyn
+    else:
+        pcore = make_fediac_packet_core(cfg_core, net_static, n)
+        make_dyn = packet_dyn
     dyn_b = jax.tree_util.tree_map(
         lambda *xs: jnp.stack(xs),
-        *[packet_dyn(spec.fediac_config(), spec.net_config(), n,
-                     spec.local_train_s,
-                     service_time(_profile(spec.switch), aligned=True))
+        *[make_dyn(spec.fediac_config(), spec.net_config(), n,
+                   spec.local_train_s,
+                   service_time(_profile(spec.switch), aligned=True))
           for spec, _ in cells])
     net_key_b = jnp.stack([jax.random.PRNGKey(spec.net_seed)
                            for spec, _ in cells])

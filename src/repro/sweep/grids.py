@@ -9,7 +9,7 @@ from __future__ import annotations
 
 from .spec import ScenarioSpec
 
-__all__ = ["GRIDS", "get_grid", "smoke_grid", "algo_scenario",
+__all__ = ["GRIDS", "get_grid", "smoke_grid", "chaos_grid", "algo_scenario",
            "BASELINE_OVERRIDES", "FEDIAC_DEFAULTS"]
 
 # The paper Sec. V-A3 algorithm configurations — the single source both the
@@ -93,12 +93,36 @@ def dataplane_grid(loss_grid=(0.0, 0.01, 0.05),
             for loss in loss_grid for part in part_grid]
 
 
+def chaos_grid() -> list:
+    """DESIGN.md §14 fault-injection grid: one clean control cell plus the
+    fault families (bursty loss, crashes, duplicates, a combined storm),
+    all varying only *dynamic* fault rates on one FaultConfig structure —
+    the whole grid is a single batch signature, so every fault scenario
+    rides the fleet axis of one compiled chaos round program."""
+    task = dict(algorithm="fediac", a=2, bits=12, transport="packet",
+                chaos=True, dedup=True, register_policy="wrap",
+                n_clients=10, rounds=10, local_steps=3, dist="noniid",
+                beta=0.5, data_n=3000, data_dim=32, test_frac=0.25)
+    return [
+        ScenarioSpec(name="chaos-clean", **task),
+        ScenarioSpec(name="chaos-ge", ge_p_gb=0.05, ge_p_bg=0.4,
+                     ge_loss_bad=0.8, **task),
+        ScenarioSpec(name="chaos-crash", crash_rate=0.1, crash_p2_frac=0.5,
+                     **task),
+        ScenarioSpec(name="chaos-dup", dup_rate=0.15, **task),
+        ScenarioSpec(name="chaos-burst-crash", ge_p_gb=0.05, ge_p_bg=0.4,
+                     ge_loss_bad=0.8, crash_rate=0.1, dup_rate=0.1,
+                     reorder_jitter_s=0.002, **task),
+    ]
+
+
 GRIDS = {
     "smoke": smoke_grid,
     "fig2": fig2_grid,
     "fig3": fig3_grid,
     "fig4": fig4_grid,
     "dataplane": dataplane_grid,
+    "chaos": chaos_grid,
 }
 
 

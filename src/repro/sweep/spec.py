@@ -33,6 +33,18 @@ _NET_DYNAMIC = ("loss", "participation", "straggler_frac", "net_seed")
                                         # packet-cell traced scalars/keys:
                                         # a loss x participation grid rides
                                         # one compiled round program
+_FAULT_DYNAMIC = ("ge_p_gb", "ge_p_bg", "ge_loss_bad", "crash_rate",
+                  "crash_p2_frac", "dup_rate", "reorder_jitter_s",
+                  "reg_reset_rate", "backoff_s")
+                                        # chaos-cell traced fault rates
+                                        # (DESIGN.md §14): clean and faulty
+                                        # cells of one structural config
+                                        # share one compiled chaos program.
+                                        # The structural fault knobs (chaos,
+                                        # dedup, register_policy,
+                                        # quorum_floor, round_retries,
+                                        # consensus_floor) stay in the
+                                        # signature.
 
 
 @dataclass(frozen=True)
@@ -78,6 +90,24 @@ class ScenarioSpec:
     straggler_frac: float = 0.0
     n_leaves: int = 1              # switch hierarchy depth (1 = single PS)
     net_seed: int = 0
+    # --- chaos dataplane (DESIGN.md §14; packet transport only).  chaos=True
+    # builds a FaultConfig (fault-injected round core); the rate fields are
+    # fleet-dynamic, the policy fields structural.
+    chaos: bool = False
+    ge_p_gb: float = 0.0
+    ge_p_bg: float = 0.5
+    ge_loss_bad: float = 1.0
+    crash_rate: float = 0.0
+    crash_p2_frac: float = 0.5
+    dup_rate: float = 0.0
+    dedup: bool = True
+    reorder_jitter_s: float = 0.0
+    register_policy: str = "wrap"
+    reg_reset_rate: float = 0.0
+    quorum_floor: int = 0
+    round_retries: int = 2
+    backoff_s: float = 0.1
+    consensus_floor: int = 0       # FediACConfig dense-mask fallback floor
 
     # ------------------------------------------------------------------
     def fediac_config(self) -> FediACConfig:
@@ -86,7 +116,8 @@ class ScenarioSpec:
                             capacity_frac=self.capacity_frac,
                             vote_mode=self.vote_mode,
                             compact_mode=self.compact_mode,
-                            engine=self.engine)
+                            engine=self.engine,
+                            consensus_floor=self.consensus_floor)
 
     def agg_kwargs(self) -> dict:
         """Aggregator kwargs for the classic (eager) registry interface."""
@@ -112,11 +143,25 @@ class ScenarioSpec:
         return {}
 
     def net_config(self):
-        """The :class:`repro.netsim.NetConfig` of a packet cell."""
-        from repro.netsim import NetConfig
-        return NetConfig(loss=self.loss, participation=self.participation,
-                         straggler_frac=self.straggler_frac,
-                         n_leaves=self.n_leaves, seed=self.net_seed)
+        """The :class:`repro.netsim.NetConfig` of a packet cell — a
+        :class:`repro.netsim.FaultConfig` when ``chaos`` is set."""
+        from repro.netsim import FaultConfig, NetConfig
+        base = dict(loss=self.loss, participation=self.participation,
+                    straggler_frac=self.straggler_frac,
+                    n_leaves=self.n_leaves, seed=self.net_seed)
+        if not self.chaos:
+            return NetConfig(**base)
+        return FaultConfig(ge_p_gb=self.ge_p_gb, ge_p_bg=self.ge_p_bg,
+                           ge_loss_bad=self.ge_loss_bad,
+                           crash_rate=self.crash_rate,
+                           crash_p2_frac=self.crash_p2_frac,
+                           dup_rate=self.dup_rate, dedup=self.dedup,
+                           reorder_jitter_s=self.reorder_jitter_s,
+                           register_policy=self.register_policy,
+                           reg_reset_rate=self.reg_reset_rate,
+                           quorum_floor=self.quorum_floor,
+                           round_retries=self.round_retries,
+                           backoff_s=self.backoff_s, **base)
 
     # ------------------------------------------------------------------
     def to_flconfig(self, seed: int):
@@ -167,7 +212,7 @@ class ScenarioSpec:
         (switch profile, local train time for memory cells).
         """
         excluded = (_FEDIAC_DYNAMIC + _PRICING_ONLY + _DATA_ONLY
-                    + _NET_DYNAMIC + ("lr0", "lr_tau"))
+                    + _NET_DYNAMIC + _FAULT_DYNAMIC + ("lr0", "lr_tau"))
         items = tuple(sorted((k, v) for k, v in self.__dict__.items()
                              if k not in excluded))
         return (self.algorithm,) + items

@@ -10,12 +10,14 @@ model are the paper's.
 
 from __future__ import annotations
 
+import os
 from dataclasses import dataclass, field, replace
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.checkpoint import load_run_state, save_run_state
 from repro.core.baselines import make_transport
 from repro.core.fediac import FediACConfig
 from repro.switch import SwitchProfile, client_rates, n_packets, round_wall_clock
@@ -72,7 +74,18 @@ class FLConfig:
     (DESIGN.md §13); the sweep fleet vmaps the same core, so packet
     scenarios executed here and through ``repro.sweep`` are bit-identical.
     With ``net`` at its lossless full-participation defaults the packet
-    transport is bit-identical to the in-memory FediAC engine.
+    transport is bit-identical to the in-memory FediAC engine.  ``net``
+    may also be a ``netsim.FaultConfig`` (DESIGN.md §14): the chaos
+    dataplane — bursty loss, crashes, duplicates, register faults —
+    bit-identical to the plain core at zero fault rates.
+
+    Crash-safe recovery (DESIGN.md §14): set ``ckpt_path`` to persist the
+    loop's inter-round state (model, error-feedback stack, PRNG key,
+    aggregator state, pricing accumulators, history) atomically every
+    ``ckpt_every`` rounds; ``resume=True`` restores it and continues.  A
+    run killed at round k and resumed reproduces the uninterrupted
+    ``FLHistory`` bit-exactly — the save round-trips every carried value
+    at full precision and all per-round randomness is (seed, round)-keyed.
     """
 
     n_clients: int = 20
@@ -93,8 +106,14 @@ class FLConfig:
     switch: SwitchProfile = field(default_factory=SwitchProfile.high)
     local_train_s: float = 0.1     # paper: 0.1 (FEMNIST) .. 3 (CIFAR-100)
     transport: str = "memory"      # "memory" | "packet"  (DESIGN.md §9)
-    net: object | None = None      # netsim.NetConfig for transport="packet"
+    net: object | None = None      # netsim.NetConfig (or FaultConfig, §14)
+                                   # for transport="packet"
     seed: int = 0
+    # crash-safe recovery (DESIGN.md §14)
+    ckpt_path: str | None = None   # round-granular run-state checkpoint file
+    ckpt_every: int = 1            # save every k completed rounds
+    resume: bool = False           # restore ckpt_path (if present) and
+                                   # continue — bit-exact vs uninterrupted
 
 
 @dataclass
@@ -217,9 +236,23 @@ def run_federated(clients, test, flcfg: FLConfig, *, hidden=(128, 64)) -> FLHist
     hist = FLHistory([], [], [], [])
     t_cum = 0.0
     mb_cum = 0.0
+    start_round = 0
+    if flcfg.resume and flcfg.ckpt_path and os.path.exists(flcfg.ckpt_path):
+        # restore the inter-round state saved after the last completed
+        # round; everything re-derived above (data, rates, transport,
+        # jitted programs) is a pure function of the config, so the
+        # restored state is sufficient for bit-exact continuation.
+        st = load_run_state(flcfg.ckpt_path)
+        flat = jnp.asarray(st["flat"])
+        e_stack = jnp.asarray(st["e_stack"])
+        key = jnp.asarray(st["key"])
+        agg_state = st["agg_state"]
+        start_round = int(st["round"])
+        t_cum, mb_cum = st["t_cum"], st["mb_cum"]
+        hist = FLHistory(**st["history"])
     xt, yt = jnp.asarray(test.x), jnp.asarray(test.y)
 
-    for t in range(1, flcfg.rounds + 1):
+    for t in range(start_round + 1, flcfg.rounds + 1):
         lr = flcfg.lr0 / (1.0 + np.sqrt(t) / flcfg.lr_tau)
         key, k1, k2 = jax.random.split(key, 3)
         u_stack, losses = local_round(flat, k1, lr)
@@ -249,4 +282,9 @@ def run_federated(clients, test, flcfg: FLConfig, *, hidden=(128, 64)) -> FLHist
         hist.wall_clock.append(t_cum)
         hist.traffic_mb.append(mb_cum)
         hist.loss.append(float(losses.mean()))
+        if (flcfg.ckpt_path and flcfg.ckpt_every > 0
+                and (t % flcfg.ckpt_every == 0 or t == flcfg.rounds)):
+            save_run_state(flcfg.ckpt_path, flat=flat, e_stack=e_stack,
+                           key=key, agg_state=agg_state, round_idx=t,
+                           t_cum=t_cum, mb_cum=mb_cum, history=hist)
     return hist

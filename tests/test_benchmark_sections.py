@@ -12,7 +12,7 @@ from benchmarks.run import SECTIONS
 
 def test_registry_names_stable():
     assert {"fig2", "tables", "fig3", "fig4", "prop1", "motivation",
-            "kernels", "aggregation", "dataplane", "sweep",
+            "kernels", "aggregation", "dataplane", "faults", "sweep",
             "roofline"} <= set(SECTIONS)
 
 

@@ -5,8 +5,8 @@ recompute is CI's job)."""
 from __future__ import annotations
 
 from benchmarks.check_regression import (compare_aggregation,
-                                         compare_dataplane, compare_sweep,
-                                         inject_drift)
+                                         compare_dataplane, compare_faults,
+                                         compare_sweep, inject_drift)
 
 
 def _tracked_stub():
@@ -26,6 +26,16 @@ def _tracked_stub():
     fleet_cell = {"name": "dataplane-l0-p1", "loss": 0.0,
                   "participation": 1.0, "final_acc": 0.81, "host_s": 5.4,
                   "bit_identical": True}
+    chaos_cell = {"name": "chaos-clean", "final_acc": 0.7,
+                  "wall_clock_s": 1.6, "traffic_mb": 3.3,
+                  "bit_identical": True}
+    faults = {"identity": {"bit_identical_faultfree": True,
+                           "fleet_bit_identical_all": True,
+                           "cells": [chaos_cell,
+                                     {**chaos_cell, "name": "chaos-ge"}]},
+              "recovery": {"resume_identical": True,
+                           "ckpt_never_perturbs": True,
+                           "ckpt_overhead_ratio": 1.05}}
     return {
         "aggregation": {"cells": [agg_cell, stream_cell]},
         "dataplane": {"rounds": 12, "memory_transport_acc": 0.81,
@@ -37,6 +47,7 @@ def _tracked_stub():
                                 "sequential_s": 30.0, "fleet_s": 11.0,
                                 "speedup_paired": 2.7}},
         "sweep": {"cells": [sweep_cell], "speedup": 4.0},
+        "faults": faults,
     }
 
 
@@ -54,6 +65,11 @@ def _fresh_stub(tracked):
                                       "speedup_paired": 1.6}},
         "sweep": {"cells": [dict(c) for c in tracked["sweep"]["cells"]],
                   "speedup": 3.5},
+        "faults": {"identity": {"bit_identical_faultfree": True,
+                                "fleet_bit_identical_all": True,
+                                "cells": []},
+                   "recovery": {"resume_identical": True,
+                                "ckpt_never_perturbs": True}},
     }
 
 
@@ -64,6 +80,7 @@ def test_gate_green_on_matching_payloads():
                                fresh["aggregation"]) == []
     assert compare_dataplane(tracked["dataplane"], fresh["dataplane"]) == []
     assert compare_sweep(tracked["sweep"], fresh["sweep"]) == []
+    assert compare_faults(tracked["faults"], fresh["faults"]) == []
 
 
 def test_gate_red_on_injected_drift():
@@ -73,6 +90,7 @@ def test_gate_red_on_injected_drift():
     assert compare_aggregation(drifted["aggregation"], fresh["aggregation"])
     assert compare_dataplane(drifted["dataplane"], fresh["dataplane"])
     assert compare_sweep(drifted["sweep"], fresh["sweep"])
+    assert compare_faults(drifted["faults"], fresh["faults"])
 
 
 def test_gate_red_on_specific_regressions():
@@ -136,6 +154,21 @@ def test_gate_red_on_specific_regressions():
     fresh = _fresh_stub(tracked)
     fresh["sweep"]["cells"][0]["scenario"] = "renamed"
     assert compare_sweep(tracked["sweep"], fresh["sweep"])
+    # the fresh smoke chaos run losing fault-free bit-identity
+    fresh = _fresh_stub(tracked)
+    fresh["faults"]["identity"]["bit_identical_faultfree"] = False
+    assert compare_faults(tracked["faults"], fresh["faults"])
+    # a tracked chaos cell losing fleet/sequential bit-identity
+    chaos = _tracked_stub()
+    chaos["faults"]["identity"]["cells"][1]["bit_identical"] = False
+    fresh = _fresh_stub(tracked)
+    assert compare_faults(chaos["faults"], fresh["faults"])
+    # kill-and-resume diverging in the fresh smoke run
+    fresh = _fresh_stub(tracked)
+    fresh["faults"]["recovery"]["resume_identical"] = False
+    assert compare_faults(tracked["faults"], fresh["faults"])
+    # a faults payload missing its sections entirely
+    assert compare_faults({}, _fresh_stub(tracked)["faults"])
 
 
 def test_accuracy_tolerates_cross_host_ulps():

@@ -1,0 +1,578 @@
+"""Chaos dataplane (DESIGN.md §14): deterministic fault injection, the
+zero-fault bit-identity invariant, the graceful-degradation policies
+(sequence-number dedup, register-bank closing, quorum-or-abort, the
+consensus floor), and crash-safe run recovery.
+
+The property tests use hypothesis when it is importable and otherwise a
+deterministic seeded-enumeration shim with the same ``@given`` surface —
+either way every example is reproducible in CI.
+"""
+
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.fediac import FediACConfig, aggregate_stack
+from repro.core.round_plan import consensus_floor_threshold
+from repro.checkpoint import load_run_state, save_run_state
+from repro.netsim import (FaultConfig, NetConfig, PacketTransport,
+                          SwitchDataplane, chaos_packet_dyn,
+                          gilbert_elliott_stationary, make_chaos_packet_core,
+                          register_accumulate)
+from repro.netsim.batched import make_fediac_packet_core, packet_dyn
+from repro.netsim.dataplane import DataplaneStats
+from repro.netsim.faults import _ge_loss_probability
+from repro.netsim.policies import INT32_MAX, INT32_MIN
+from repro.training import FLConfig, FLHistory, run_federated
+
+# ---------------------------------------------------------------------------
+# property-test harness: hypothesis if available, else a deterministic shim
+# ---------------------------------------------------------------------------
+
+try:
+    from hypothesis import given as _h_given
+    from hypothesis import settings as _h_settings
+    from hypothesis import strategies as st
+
+    def given_examples(n_examples, **strategies):
+        def deco(fn):
+            return _h_settings(max_examples=n_examples, deadline=None)(
+                _h_given(**strategies)(fn))
+        return deco
+except ImportError:
+    class _Strategy:
+        def __init__(self, draw):
+            self.draw = draw
+
+    class st:  # noqa: N801 — mirrors the hypothesis namespace
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(
+                lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+        @staticmethod
+        def floats(min_value, max_value):
+            return _Strategy(
+                lambda rng: float(rng.uniform(min_value, max_value)))
+
+        @staticmethod
+        def sampled_from(elements):
+            elements = list(elements)
+            return _Strategy(
+                lambda rng: elements[int(rng.integers(len(elements)))])
+
+    def given_examples(n_examples, **strategies):
+        """Seeded enumeration standing in for hypothesis: each example's
+        draws come from one fixed PRNG stream, so failures replay."""
+        def deco(fn):
+            def wrapper():
+                rng = np.random.default_rng(0xFED1AC)
+                for _ in range(n_examples):
+                    fn(**{k: s.draw(rng) for k, s in strategies.items()})
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            return wrapper
+        return deco
+
+
+# ---------------------------------------------------------------------------
+# NetConfig / FaultConfig validation (the fail-fast layer)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("kw", [
+    {"straggler_slowdown": 0.5}, {"straggler_slowdown": float("inf")},
+    {"straggler_slowdown": float("nan")},
+    {"vote_deadline_s": 0.0}, {"vote_deadline_s": -1.0},
+    {"vote_deadline_s": float("inf")},
+    {"rto_s": 0.0}, {"rto_s": -0.05}, {"rto_s": float("nan")},
+    {"max_retries": 0}, {"max_retries": -3},
+])
+def test_netconfig_rejects_bad_timing(kw):
+    with pytest.raises(ValueError):
+        NetConfig(**kw)
+
+
+def test_netconfig_accepts_boundary_values():
+    NetConfig(straggler_slowdown=1.0, vote_deadline_s=1e-6, max_retries=1)
+    NetConfig(vote_deadline_s=None)    # None = wait for everyone
+
+
+@pytest.mark.parametrize("kw", [
+    {"crash_rate": 1.5}, {"dup_rate": -0.1}, {"ge_loss_bad": 2.0},
+    {"ge_p_gb": 0.1, "ge_p_bg": 0.0},      # absorbing bad state
+    {"reorder_jitter_s": -1.0}, {"reorder_jitter_s": float("inf")},
+    {"register_policy": "clamp"}, {"quorum_floor": -1},
+    {"round_retries": -1}, {"backoff_s": float("nan")},
+    {"rto_s": 0.0},                        # inherited validation still runs
+])
+def test_faultconfig_rejects_bad_knobs(kw):
+    with pytest.raises(ValueError):
+        FaultConfig(**kw)
+
+
+# ---------------------------------------------------------------------------
+# register-bank policies: the int32 boundary, pinned (DESIGN.md §14)
+# ---------------------------------------------------------------------------
+
+
+def test_register_wrap_is_bitwise_sum_and_flags_imply_wraps():
+    rng = np.random.default_rng(0)
+    rows = jnp.asarray(rng.integers(-2**31, 2**31, size=(13, 257),
+                                    dtype=np.int64).astype(np.int32))
+    summed, ovf, shift = register_accumulate(rows, policy="wrap")
+    np.testing.assert_array_equal(np.asarray(summed),
+                                  np.asarray(jnp.sum(rows, axis=0)))
+    assert not np.any(np.asarray(shift))
+    # a slot whose wrapped value differs from the exact sum must be flagged
+    # (the converse can't hold: cancelling overflows still trip the sticky
+    # flag)
+    exact = np.asarray(rows, np.int64).sum(0)
+    wrapped_wrong = exact != np.asarray(summed, np.int64)
+    assert np.all(~wrapped_wrong | np.asarray(ovf))
+
+
+def test_register_boundary_value_pins():
+    """Regression pin at the 2^31 rail: the largest representable sum is
+    exact and unflagged; one past it is flagged under every policy, and
+    what lands in the register is each policy's documented answer."""
+    at_max = jnp.asarray([[INT32_MAX - 1], [1]], jnp.int32)
+    s, o, sh = register_accumulate(at_max)
+    assert int(s[0]) == 2**31 - 1 and not bool(o[0]) and int(sh[0]) == 0
+
+    over = jnp.asarray([[INT32_MAX], [1]], jnp.int32)
+    s, o, _ = register_accumulate(over, policy="wrap")
+    assert int(s[0]) == -2**31 and bool(o[0])          # the silent wrap
+    s, o, _ = register_accumulate(over, policy="saturate")
+    assert int(s[0]) == 2**31 - 1 and bool(o[0])
+    s, o, sh = register_accumulate(over, policy="rescale")
+    assert bool(o[0]) and int(sh[0]) >= 1
+    # mantissa x 2^shift recovers the true sum up to the truncated low bits
+    assert abs(int(s[0]) * 2**int(sh[0]) - 2**31) <= 2 * 2**int(sh[0])
+
+    neg = jnp.asarray([[INT32_MIN], [-1]], jnp.int32)
+    s, o, _ = register_accumulate(neg, policy="saturate")
+    assert int(s[0]) == -2**31 and bool(o[0])
+
+
+def test_register_rescale_bounds_error():
+    """Every slot overflowing: the mantissa/exponent pair recovers the
+    out-of-range sum to within n_rows * 2^shift (right-shift truncation),
+    where saturate/wrap would be off by ~the whole magnitude."""
+    rng = np.random.default_rng(1)
+    rows = jnp.asarray(rng.integers(2**28, 2**30, size=(24, 96),
+                                    dtype=np.int64).astype(np.int32))
+    exact = np.asarray(rows, np.int64).sum(0)
+    s, o, sh = register_accumulate(rows, policy="rescale")
+    assert bool(np.all(np.asarray(o)))
+    val = np.asarray(s, np.float64) * np.exp2(np.asarray(sh, np.float64))
+    bound = rows.shape[0] * np.exp2(np.asarray(sh, np.float64))
+    assert np.all(np.abs(val - exact) <= bound)
+    # no overflow -> exact sum at shift 0 (the bit-identity clause)
+    small = rows >> 8
+    s2, o2, sh2 = register_accumulate(small, policy="rescale")
+    assert not bool(np.any(o2)) and not bool(np.any(sh2))
+    np.testing.assert_array_equal(np.asarray(s2, np.int64),
+                                  np.asarray(small, np.int64).sum(0))
+
+
+def test_register_rescale_windows_degrade_together():
+    """One exponent per register window: a hot window's slots all take the
+    window max shift; a clean window keeps exact sums at shift 0."""
+    hot = np.full((8, 4), 2**29, np.int32)
+    cold = np.ones((8, 4), np.int32)
+    rows = jnp.asarray(np.concatenate([hot, cold], axis=1))
+    win = np.array([0] * 4 + [1] * 4, np.int32)
+    s, o, sh = register_accumulate(rows, policy="rescale",
+                                   slot_window=win, n_windows=2)
+    sh = np.asarray(sh)
+    assert len(set(sh[:4].tolist())) == 1 and sh[0] >= 1
+    assert np.all(sh[4:] == 0)
+    np.testing.assert_array_equal(np.asarray(s)[4:], 8)
+
+
+def test_switch_dataplane_overflow_audit():
+    """The host-path register bank audits each window against an exact
+    int64 sum and counts silently-wrapped registers (satellite of §14)."""
+    dp = SwitchDataplane(memory_slots=8)
+    bufs = np.zeros((2, 8), np.int32)
+    bufs[0, 3] = 2**31 - 1
+    bufs[1, 3] = 1                     # slot 3 wraps
+    bufs[0, 5] = 2**31 - 2
+    bufs[1, 5] = 1                     # slot 5 lands exactly on the rail
+    out = dp.aggregate_windowed(bufs)
+    assert dp.stats.overflow_slots == 1
+    assert out[5] == 2**31 - 1
+    assert out[3] == -2**31            # hardware wrap, recorded not hidden
+    merged = dp.stats.merge(DataplaneStats(overflow_slots=2))
+    assert merged.overflow_slots == 3
+
+
+# ---------------------------------------------------------------------------
+# consensus floor: dense-mask fallback when the consensus set collapses
+# ---------------------------------------------------------------------------
+
+
+def test_consensus_floor_threshold_values():
+    counts = jnp.asarray([5, 2, 2, 1, 0], jnp.int32)
+    # live(a=3) == 1 < floor 4: collapse to a=1 (every voted chunk)
+    assert int(consensus_floor_threshold(counts, 3, 4)) == 1
+    # live(a=2) == 3 >= floor 3: threshold untouched
+    assert int(consensus_floor_threshold(counts, 2, 3)) == 2
+    assert int(consensus_floor_threshold(counts, 3, 1)) == 3
+
+
+def test_consensus_floor_dense_fallback_in_aggregate():
+    """An over-strict vote threshold starves the consensus set; the floor
+    falls back toward the dense mask instead of shipping a near-empty
+    round.  floor=0 (the default) leaves the plan bitwise untouched."""
+    u = jax.random.normal(jax.random.PRNGKey(0), (6, 512)) ** 3
+    key = jax.random.PRNGKey(1)
+    base = aggregate_stack(u, FediACConfig(a=6), key)
+    zero = aggregate_stack(u, FediACConfig(a=6, consensus_floor=0), key)
+    assert bool(jnp.all(base[0] == zero[0]))
+    floored = aggregate_stack(
+        u, FediACConfig(a=6, consensus_floor=256), key)
+    nnz_base = int(jnp.sum(base[0] != 0.0))
+    nnz_floor = int(jnp.sum(floored[0] != 0.0))
+    assert nnz_floor > nnz_base
+
+
+# ---------------------------------------------------------------------------
+# the zero-fault invariant: chaos core == plain core, bitwise
+# ---------------------------------------------------------------------------
+
+_N, _D = 8, 600
+
+
+def _probe_inputs():
+    rng = np.random.default_rng(1)
+    u = jnp.asarray(rng.standard_normal((_N, _D)), jnp.float32)
+    rates = jnp.full((_N,), 12.5e6, jnp.float32)
+    return u, rates
+
+
+@pytest.mark.parametrize("policy", ["wrap", "saturate", "rescale"])
+def test_chaos_core_faultfree_bit_identical_to_plain(policy):
+    """With every fault knob at its zero default the chaos core returns
+    the plain core's delta, residuals and every aux entry bitwise — under
+    loss, partial participation, stragglers and a deadline — for all
+    three register policies (clean rounds never reach the degraded
+    paths)."""
+    cfg = FediACConfig(bits=12, a=3, alpha=0.1)
+    netkw = dict(loss=0.15, participation=0.8, straggler_frac=0.25,
+                 vote_deadline_s=1.5, seed=3)
+    plain_net = NetConfig(**netkw)
+    fault_net = FaultConfig(**netkw, register_policy=policy)
+    pcore = make_fediac_packet_core(cfg, plain_net, _N)
+    ccore = make_chaos_packet_core(cfg, fault_net, _N)
+    pd = packet_dyn(cfg, plain_net, _N, 1.0, 1e-5)
+    cd = chaos_packet_dyn(cfg, fault_net, _N, 1.0, 1e-5)
+    u, rates = _probe_inputs()
+    nk = jax.random.PRNGKey(plain_net.seed)
+    for t in range(2):
+        key = jax.random.fold_in(jax.random.PRNGKey(9), t)
+        d1, r1, a1 = pcore(u, key, nk, t, rates, pd)
+        d2, r2, a2 = ccore(u, key, nk, t, rates, cd)
+        np.testing.assert_array_equal(np.asarray(d1), np.asarray(d2))
+        np.testing.assert_array_equal(np.asarray(r1), np.asarray(r2))
+        for k in a1:
+            np.testing.assert_array_equal(np.asarray(a1[k]),
+                                          np.asarray(a2[k]), err_msg=k)
+        u = u * 0.9 + d1[None, :] + r1
+
+
+def test_chaos_transport_faultfree_matches_plain():
+    """The PacketTransport dispatch: a zero-rate FaultConfig rides the
+    chaos core yet reproduces the plain round, and surfaces the chaos
+    stats (all zero on a clean round)."""
+    cfg = FediACConfig(a=2)
+    u = jax.random.normal(jax.random.PRNGKey(1), (8, 2048)) ** 3
+    key = jax.random.PRNGKey(0)
+    netkw = dict(loss=0.1, participation=0.75, seed=2)
+    rp = PacketTransport("fediac", {"cfg": cfg},
+                         net=NetConfig(**netkw)).round(u, None, key, 1)
+    rc = PacketTransport("fediac", {"cfg": cfg},
+                         net=FaultConfig(**netkw)).round(u, None, key, 1)
+    assert bool(jnp.all(rp.delta == rc.delta))
+    assert bool(jnp.all(rp.residuals == rc.residuals))
+    assert rp.wall_clock_s == rc.wall_clock_s
+    assert rp.upload_bytes == rc.upload_bytes
+    for k in ("crashed", "duplicates", "resets", "overflow_slots",
+              "aborted"):
+        assert rc.stats[k] == 0, k
+    assert rc.stats["attempts"] == 1
+
+
+def test_fl_chaos_faultfree_matches_plain_packet(small_fl):
+    """FL-level acceptance: a fault-free chaos configuration's training
+    run is bit-identical to sequential run_federated over the plain
+    packet transport."""
+    clients, test = small_fl
+    kw = dict(n_clients=6, rounds=3, local_steps=2, aggregator="fediac",
+              agg_kwargs={"cfg": FediACConfig(a=2, bits=12)}, seed=0,
+              transport="packet")
+    h_plain = run_federated(clients, test,
+                            FLConfig(net=NetConfig(loss=0.02, seed=1), **kw))
+    h_chaos = run_federated(clients, test,
+                            FLConfig(net=FaultConfig(loss=0.02, seed=1),
+                                     **kw))
+    assert h_plain.acc == h_chaos.acc
+    assert h_plain.loss == h_chaos.loss
+    assert h_plain.wall_clock == h_chaos.wall_clock
+    assert h_plain.traffic_mb == h_chaos.traffic_mb
+
+
+def test_chaos_cells_batch_on_fleet_axis():
+    """Fault scenarios ride the fleet: the chaos grid's cells share one
+    batch signature (rates are dynamic), and each batched cell's history
+    equals its sequential run_federated history exactly."""
+    from dataclasses import replace
+
+    from repro.sweep import run_cell_sequential, run_sweep
+    from repro.sweep.grids import chaos_grid
+
+    specs = [replace(s, rounds=3) for s in chaos_grid()[:3]]
+    assert len({s.batch_signature() for s in specs}) == 1
+    fleet = {c.spec.name: c.history for c in run_sweep(specs, (0,))}
+    for s in specs:
+        seq = run_cell_sequential(s, 0)
+        h = fleet[s.name]
+        assert h.acc == seq.acc, s.name
+        assert h.loss == seq.loss, s.name
+        assert h.wall_clock == seq.wall_clock, s.name
+        assert h.traffic_mb == seq.traffic_mb, s.name
+
+
+# ---------------------------------------------------------------------------
+# fault models and degradation policies
+# ---------------------------------------------------------------------------
+
+_DUP = None
+
+
+def _dup_harness():
+    """One jitted chaos core reused across property examples — dup_rate is
+    dynamic, so every example is a cache hit on the same program."""
+    global _DUP
+    if _DUP is None:
+        cfg = FediACConfig(a=3)
+        net = FaultConfig(loss=0.05, participation=0.9, seed=5)
+        core = jax.jit(make_chaos_packet_core(cfg, net, _N))
+        dyn0 = chaos_packet_dyn(cfg, net, _N, 1.0, 1e-5)
+        u, rates = _probe_inputs()
+        _DUP = (core, dyn0, u, rates)
+    return _DUP
+
+
+@given_examples(6, rate=st.floats(min_value=0.1, max_value=0.9),
+                round_idx=st.integers(min_value=0, max_value=40))
+def test_duplicate_delivery_idempotent(rate, round_idx):
+    """Property (ACK-loss dedup): k-fold duplicate delivery equals single
+    delivery — under sequence-number suppression the committed aggregate,
+    residuals and vote counts are bitwise invariant to any duplication
+    rate; only the time/byte accounting moves."""
+    core, dyn0, u, rates = _dup_harness()
+    key, nk = jax.random.PRNGKey(7), jax.random.PRNGKey(5)
+    d0, r0, a0 = core(u, key, nk, round_idx, rates, dyn0)
+    dyn = dict(dyn0, dup_rate=jnp.float32(rate))
+    d1, r1, a1 = core(u, key, nk, round_idx, rates, dyn)
+    np.testing.assert_array_equal(np.asarray(d0), np.asarray(d1))
+    np.testing.assert_array_equal(np.asarray(r0), np.asarray(r1))
+    np.testing.assert_array_equal(np.asarray(a0["counts"]),
+                                  np.asarray(a1["counts"]))
+    assert int(a1["duplicates"]) > 0
+    assert int(a1["retransmissions"]) >= int(a0["retransmissions"])
+
+
+def test_no_dedup_admits_double_counts():
+    """Without duplicate suppression a duplicated packet's slots deposit
+    twice — the corruption the sequence-number policy exists to stop."""
+    cfg = FediACConfig(a=2)
+    u = jax.random.normal(jax.random.PRNGKey(1), (8, 2048)) ** 3
+    key = jax.random.PRNGKey(0)
+    netkw = dict(dup_rate=0.9, seed=6)
+    r_dd = PacketTransport("fediac", {"cfg": cfg},
+                           net=FaultConfig(dedup=True, **netkw)).round(
+        u, None, key, 0)
+    r_nd = PacketTransport("fediac", {"cfg": cfg},
+                           net=FaultConfig(dedup=False, **netkw)).round(
+        u, None, key, 0)
+    assert r_nd.stats["duplicates"] > 0
+    assert not bool(jnp.all(r_dd.delta == r_nd.delta))
+
+
+@given_examples(6, p_gb=st.floats(min_value=0.02, max_value=0.3),
+                p_bg=st.floats(min_value=0.1, max_value=0.6))
+def test_ge_marginal_matches_stationary(p_gb, p_bg):
+    """Property (bursty loss): the empirical bad-state occupancy of the
+    Gilbert–Elliott chain matches the stationary distribution
+    p_gb / (p_gb + p_bg) once past burn-in."""
+    n_pkts = 4000
+    probs = np.asarray(_ge_loss_probability(
+        jax.random.PRNGKey(11), (16, n_pkts), 0.05, p_gb, p_bg, 0.9))
+    bad = probs == np.float32(0.9)
+    pi = gilbert_elliott_stationary(p_gb, p_bg)
+    emp = bad[:, n_pkts // 4:].mean()        # chain starts good: burn-in
+    assert abs(emp - pi) < 0.04
+
+
+def test_ge_zero_rate_is_iid_loss():
+    probs = np.asarray(_ge_loss_probability(
+        jax.random.PRNGKey(2), (8, 100), 0.07, 0.0, 0.5, 1.0))
+    assert np.all(probs == np.float32(0.07))
+    assert gilbert_elliott_stationary(0.0, 0.5) == 0.0
+    assert gilbert_elliott_stationary(0.1, 0.3) == pytest.approx(0.25)
+
+
+def test_crash_all_phase2_commits_nothing():
+    """All-or-nothing commit: every client crashing mid-upload leaves a
+    zero delta and full residual carry-over — never a partial aggregate."""
+    cfg = FediACConfig(a=2)
+    u = jax.random.normal(jax.random.PRNGKey(1), (8, 2048)) ** 3
+    net = FaultConfig(crash_rate=1.0, crash_p2_frac=1.0, seed=0)
+    r = PacketTransport("fediac", {"cfg": cfg}, net=net).round(
+        u, None, jax.random.PRNGKey(0), 0)
+    assert r.n_active == 0
+    assert bool(jnp.all(r.delta == 0.0))
+    assert bool(jnp.all(r.residuals == u))
+    assert r.stats["crashed"] == u.shape[0]
+
+
+def test_quorum_abort_and_retry_backoff():
+    """Quorum-or-abort: an unreachable floor exhausts every retry and
+    aborts (zero delta, time still spent, extra attempts burn more
+    simulated clock); a reachable floor closes on the first attempt."""
+    cfg = FediACConfig(a=2)
+    u = jax.random.normal(jax.random.PRNGKey(1), (8, 2048)) ** 3
+    key = jax.random.PRNGKey(0)
+    n = u.shape[0]
+    mk = lambda **kw: PacketTransport(          # noqa: E731
+        "fediac", {"cfg": cfg}, net=FaultConfig(seed=1, **kw))
+    r = mk(quorum_floor=n + 1, round_retries=2, backoff_s=0.2).round(
+        u, None, key, 0)
+    assert r.stats["aborted"] == 1
+    assert r.stats["attempts"] == 3
+    assert bool(jnp.all(r.delta == 0.0))
+    assert bool(jnp.all(r.residuals == u))
+    r0 = mk(quorum_floor=n + 1, round_retries=0, backoff_s=0.2).round(
+        u, None, key, 0)
+    assert r0.stats["attempts"] == 1
+    assert r.wall_clock_s > r0.wall_clock_s
+    ok = mk(quorum_floor=1, round_retries=2).round(u, None, key, 0)
+    assert ok.stats["aborted"] == 0 and ok.stats["attempts"] == 1
+    assert ok.n_active >= 1
+
+
+# ---------------------------------------------------------------------------
+# crash-safe recovery: round checkpoints and bit-exact resume
+# ---------------------------------------------------------------------------
+
+
+def test_run_state_roundtrip(tmp_path):
+    path = str(tmp_path / "state.npz")
+    flat = np.linspace(-1, 1, 37, dtype=np.float32)
+    e = (np.arange(12, dtype=np.float32) / 7).reshape(3, 4)
+    key = np.asarray(jax.random.PRNGKey(5))
+    hist = FLHistory(acc=[0.1, 0.2], wall_clock=[1.5, 3.25],
+                     traffic_mb=[0.5, 1.0], loss=[2.0, 1.5])
+    save_run_state(path, flat=flat, e_stack=e, key=key, agg_state=None,
+                   round_idx=2, t_cum=3.25, mb_cum=1.0, history=hist)
+    st_ = load_run_state(path)
+    np.testing.assert_array_equal(st_["flat"], flat)
+    np.testing.assert_array_equal(st_["e_stack"], e)
+    np.testing.assert_array_equal(st_["key"], key)
+    assert st_["agg_state"] is None
+    assert st_["round"] == 2
+    assert st_["t_cum"] == 3.25 and st_["mb_cum"] == 1.0
+    assert st_["history"]["acc"] == [0.1, 0.2]
+    assert st_["history"]["wall_clock"] == [1.5, 3.25]
+    assert st_["history"]["loss"] == [2.0, 1.5]
+    # atomic write: no .tmp left behind
+    assert not os.path.exists(path + ".tmp")
+
+
+@pytest.fixture(scope="module")
+def small_fl():
+    from repro.data import classification, partition_dirichlet
+    data = classification(n=1500, dim=16, n_classes=10, seed=0)
+    train, test = data.test_split(0.25)
+    return partition_dirichlet(train, 6, beta=0.5, seed=0), test
+
+
+_RESUME = None
+
+
+def _resume_harness():
+    """Shared data + the uninterrupted reference run for the kill/resume
+    property (module-global: the shim's property wrapper takes no pytest
+    fixtures)."""
+    global _RESUME
+    if _RESUME is None:
+        from repro.data import classification, partition_dirichlet
+        data = classification(n=1500, dim=16, n_classes=10, seed=0)
+        train, test = data.test_split(0.25)
+        clients = partition_dirichlet(train, 6, beta=0.5, seed=0)
+        full = _resume_run(clients, test, 6)
+        _RESUME = (clients, test, full)
+    return _RESUME
+
+
+def _resume_run(clients, test, rounds, ckpt=None, resume=False, net=None):
+    kw = dict(n_clients=6, rounds=rounds, local_steps=2,
+              aggregator="fediac",
+              agg_kwargs={"cfg": FediACConfig(a=2, bits=12)}, seed=0,
+              ckpt_path=ckpt, resume=resume)
+    if net is not None:
+        kw.update(transport="packet", net=net)
+    return run_federated(clients, test, FLConfig(**kw))
+
+
+@given_examples(3, k=st.integers(min_value=1, max_value=5))
+def test_kill_at_any_round_resume_bit_identical(k):
+    """Property (crash-safe recovery): training to round k, dying, and
+    resuming from the checkpoint reproduces the uninterrupted run's
+    FLHistory bit-exactly — for any kill round."""
+    clients, test, full = _resume_harness()
+    with tempfile.TemporaryDirectory() as td:
+        ck = os.path.join(td, f"kill{k}.npz")
+        _resume_run(clients, test, k, ckpt=ck)          # the "killed" run
+        resumed = _resume_run(clients, test, 6, ckpt=ck, resume=True)
+    assert resumed.acc == full.acc
+    assert resumed.loss == full.loss
+    assert resumed.wall_clock == full.wall_clock
+    assert resumed.traffic_mb == full.traffic_mb
+
+
+def test_checkpointing_never_perturbs_the_run():
+    """Writing round checkpoints is observation, not interference: the
+    checkpointed run's history equals the plain run's bitwise."""
+    clients, test, full = _resume_harness()
+    with tempfile.TemporaryDirectory() as td:
+        ck = os.path.join(td, "observer.npz")
+        h = _resume_run(clients, test, 6, ckpt=ck)
+        st_ = load_run_state(ck)
+    assert h.acc == full.acc and h.wall_clock == full.wall_clock
+    assert st_["round"] == 6
+    assert st_["history"]["acc"] == full.acc
+
+
+def test_resume_under_chaos_bit_identical(small_fl, tmp_path):
+    """Recovery composes with fault injection: fault draws are a pure
+    function of (seed, round), so a resumed chaotic run replays the same
+    faults and lands on the uninterrupted history exactly."""
+    clients, test = small_fl
+    net = FaultConfig(loss=0.05, crash_rate=0.15, dup_rate=0.2,
+                      ge_p_gb=0.05, participation=0.9, seed=4)
+    full = _resume_run(clients, test, 4, net=net)
+    ck = str(tmp_path / "chaos.npz")
+    _resume_run(clients, test, 2, ckpt=ck, net=net)
+    resumed = _resume_run(clients, test, 4, ckpt=ck, resume=True, net=net)
+    assert resumed.acc == full.acc
+    assert resumed.loss == full.loss
+    assert resumed.wall_clock == full.wall_clock
+    assert resumed.traffic_mb == full.traffic_mb
