@@ -2,8 +2,8 @@
 
 Compares a fresh smoke run against the tracked benchmark baselines at the
 repo root — ``BENCH_aggregation.json``, ``BENCH_dataplane.json``,
-``BENCH_sweep.json`` and ``BENCH_faults.json`` — and exits non-zero on
-drift.
+``BENCH_sweep.json``, ``BENCH_faults.json`` and ``BENCH_obs.json`` — and
+exits non-zero on drift.
 
 Gating policy, by how machine-dependent each quantity is:
 
@@ -31,7 +31,7 @@ Gating policy, by how machine-dependent each quantity is:
 
 Refreshing baselines after an intentional change: re-run the producing
 benchmarks (``python -m
-benchmarks.{aggregation_round,dataplane,sweep,faults}``) on an idle
+benchmarks.{aggregation_round,dataplane,sweep,faults,obs}``) on an idle
 machine and commit the regenerated ``BENCH_*.json``.
 """
 
@@ -49,6 +49,7 @@ TRACKED = {
     "dataplane": os.path.join(ROOT, "BENCH_dataplane.json"),
     "sweep": os.path.join(ROOT, "BENCH_sweep.json"),
     "faults": os.path.join(ROOT, "BENCH_faults.json"),
+    "obs": os.path.join(ROOT, "BENCH_obs.json"),
 }
 WALL_TOL = 4.0   # wall-clock band: fresh within [tracked/4, tracked*4]
 ACC_TOL = 0.005  # |final_acc drift| tolerated (cross-host XLA ulps only;
@@ -56,6 +57,8 @@ ACC_TOL = 0.005  # |final_acc drift| tolerated (cross-host XLA ulps only;
 SIM_TOL = 0.02   # relative band on the f32-simulated packet wall-clock
 FLEET_SPEEDUP_MIN = 2.0     # tracked packet-fleet paired-ratio floor
 FLEET_SMOKE_SPEEDUP_MIN = 1.1  # fresh smoke fleet: never slower than seq
+OBS_OVERHEAD_MAX = 1.10     # probe cost: traced/untraced paired-ratio
+                            # ceiling on the tracked smoke cell (§15)
 RSS_TOL = 2.0    # peak-RSS band: generous — the jax/XLA runtime floor and
                  # allocator behavior move between releases, but a streaming
                  # cell silently regressing to monolithic footprints will
@@ -123,11 +126,21 @@ def fresh_faults() -> dict:
             "recovery": recovery_section(smoke=True)}
 
 
+def fresh_obs() -> dict:
+    """The telemetry smoke audits (DESIGN.md §15): a traced lossy cell's
+    schema validity + report render, and the probe-overhead paired ratio
+    on the tracked smoke cell."""
+    from .obs import overhead_section, trace_section
+    return {"trace": trace_section(smoke=True),
+            "overhead": overhead_section(smoke=True)}
+
+
 def compute_fresh(tracked: dict) -> dict:
     return {"aggregation": fresh_aggregation(),
             "dataplane": fresh_dataplane(int(tracked["dataplane"]["rounds"])),
             "sweep": fresh_sweep(),
-            "faults": fresh_faults()}
+            "faults": fresh_faults(),
+            "obs": fresh_obs()}
 
 
 # ---------------------------------------------------------------------------
@@ -321,11 +334,41 @@ def compare_faults(tracked: dict, fresh: dict) -> list:
     return fails
 
 
+def compare_obs(tracked: dict, fresh: dict) -> list:
+    """Telemetry gate (DESIGN.md §15): the tracked baseline and the fresh
+    smoke run must both hold the observability invariants — every trace
+    record schema-valid, the round report rendering with full per-round
+    coverage, and the probe overhead on the tracked smoke cell inside
+    the ``OBS_OVERHEAD_MAX`` paired-ratio budget."""
+    fails = []
+    for label, payload in (("tracked", tracked), ("fresh", fresh)):
+        tr = payload.get("trace")
+        ov = payload.get("overhead")
+        if not tr or not ov:
+            fails.append(f"{label} obs payload lacks trace/overhead")
+            continue
+        if tr.get("schema_errors", 1) != 0:
+            fails.append(f"{label} obs trace has {tr.get('schema_errors')} "
+                         "schema errors")
+        if not tr.get("report_renders", False):
+            fails.append(f"{label} obs round report failed to render")
+        if not tr.get("rounds_covered", False) or \
+                not tr.get("per_round_complete", False):
+            fails.append(f"{label} obs trace is missing per-round "
+                         "spans/metrics")
+        if ov["overhead_ratio"] > OBS_OVERHEAD_MAX:
+            fails.append(f"{label} obs probe overhead "
+                         f"{ov['overhead_ratio']} above the "
+                         f"{OBS_OVERHEAD_MAX}x budget")
+    return fails
+
+
 COMPARATORS = {
     "aggregation": compare_aggregation,
     "dataplane": compare_dataplane,
     "sweep": compare_sweep,
     "faults": compare_faults,
+    "obs": compare_obs,
 }
 
 
@@ -347,6 +390,8 @@ def inject_drift(tracked: dict) -> dict:
         drifted["sweep"]["cells"][0]["traffic_mb"] * 1.01, 6)
     drifted["faults"]["identity"]["bit_identical_faultfree"] = False
     drifted["faults"]["recovery"]["resume_identical"] = False
+    drifted["obs"]["trace"]["schema_errors"] = 3
+    drifted["obs"]["overhead"]["overhead_ratio"] = 2.0
     return drifted
 
 

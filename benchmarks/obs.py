@@ -1,0 +1,204 @@
+"""Telemetry benchmark: the traced-cell audit and the probe-overhead gate
+(DESIGN.md §15).
+
+Two parts, both written to the tracked ``BENCH_obs.json``:
+
+* **trace** — run a traced lossy packet FL cell end to end with a
+  :class:`repro.obs.RecordingProbe`, schema-validate every emitted JSONL
+  record, render the round report, and pin that every round produced its
+  span hierarchy and metrics (the CI obs smoke step runs exactly this and
+  fails on schema drift).
+* **overhead** — the traced-vs-untraced paired-ratio cost of the probe on
+  the tracked smoke cell: one warmed packet round with the full recording
+  path (round span, stats extraction, ``to_metrics`` norms, registry +
+  JSONL emission) against the bare round, interleaved reps, median of
+  per-rep ratios (``benchmarks.common.paired_ratio_median`` — this box's
+  wall clock bursts ~2x, and a paired median is the statistic that
+  survives it).  The acceptance bar is <= ``OVERHEAD_MAX`` (1.10x).
+
+  PYTHONPATH=src python -m benchmarks.obs [--smoke] [--out PATH]
+
+Exit status is non-zero if the trace fails validation, the report fails to
+render, or the measured overhead exceeds the bar.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import tempfile
+
+import jax
+
+from repro.core.fediac import FediACConfig
+from repro.netsim import NetConfig, PacketTransport
+from repro.obs import (RecordingProbe, load_trace, render_report,
+                       validate_records)
+from repro.obs.report import round_rows
+from repro.training import FLConfig, run_federated
+
+from .common import emit, interleaved_times, paired_ratio_median, \
+    smoke_out_path
+
+OUT_PATH = os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    "BENCH_obs.json")
+
+TRACE_ROUNDS = 3          # the CI smoke cell is deliberately tiny
+OVERHEAD_REPS = 40
+OVERHEAD_SMOKE_REPS = 15
+OVERHEAD_MAX = 1.10       # acceptance bar: traced/untraced paired ratio
+OVERHEAD_D = 16_384       # tracked smoke cell: 8 clients x 16k params
+
+
+def trace_section(*, smoke: bool = False) -> dict:
+    """A 3-round traced lossy cell: validate + render + coverage pins."""
+    from repro.data import classification, partition_dirichlet
+    data = classification(n=1200, dim=16, n_classes=10, seed=0)
+    train, test = data.test_split(0.25)
+    clients = partition_dirichlet(train, 6, beta=0.5, seed=0)
+    flcfg = FLConfig(n_clients=6, rounds=TRACE_ROUNDS, local_steps=2,
+                     aggregator="fediac",
+                     agg_kwargs={"cfg": FediACConfig(a=2, bits=12)}, seed=0,
+                     transport="packet",
+                     net=NetConfig(loss=0.05, participation=0.8))
+    trace = os.path.join(tempfile.gettempdir(), "BENCH_obs.trace.jsonl")
+    if os.path.exists(trace):
+        os.unlink(trace)
+    with RecordingProbe(trace, profiler=True) as probe:
+        hist = run_federated(clients, test, flcfg, probe=probe)
+    records = load_trace(trace)
+    errors = validate_records(records)
+    rows = round_rows(records)
+    try:
+        report = render_report(records)
+        report_renders = bool(report.strip())
+    except Exception:
+        report_renders = False
+    rounds_covered = [r["round"] for r in rows] == \
+        list(range(1, TRACE_ROUNDS + 1))
+    per_round_ok = all(r["sim_s"] > 0 and "phase1-vote" in r["phases"]
+                       and r["metrics"].get("upload_bytes", 0) > 0
+                       for r in rows)
+    return {
+        "rounds": TRACE_ROUNDS,
+        "records": len(records),
+        "schema_errors": len(errors),
+        "schema_error_samples": errors[:5],
+        "report_renders": report_renders,
+        "rounds_covered": bool(rounds_covered),
+        "per_round_complete": bool(per_round_ok),
+        "final_acc": round(hist.acc[-1], 4),
+        "trace_path": trace,
+    }
+
+
+def overhead_section(*, smoke: bool = False) -> dict:
+    """Traced-vs-untraced paired ratio of one warmed packet round.
+
+    The traced closure is the full per-round recording path of the FL
+    loop: the round span, the probed transport, the ``to_metrics``
+    extraction (including the device norms) and the registry + JSONL
+    emission.  The untraced closure is the bare round on an un-probed
+    transport.  Both block on the round's outputs.
+    """
+    reps = OVERHEAD_SMOKE_REPS if smoke else OVERHEAD_REPS
+    cfg = FediACConfig(a=2, bits=12)
+    u = jax.random.normal(jax.random.PRNGKey(1), (8, OVERHEAD_D)) ** 3
+    key = jax.random.PRNGKey(42)
+    net = NetConfig()
+    plain = PacketTransport("fediac", {"cfg": cfg}, net=net)
+    probed = PacketTransport("fediac", {"cfg": cfg}, net=net)
+    trace = os.path.join(tempfile.gettempdir(), "BENCH_obs.overhead.jsonl")
+    if os.path.exists(trace):
+        os.unlink(trace)
+    probe = RecordingProbe(trace, profiler=True)
+    probed.attach_probe(probe)
+
+    def untraced():
+        r = plain.round(u, None, key, round_idx=1)
+        jax.block_until_ready(r.delta)
+
+    def traced():
+        with probe.span("round", round=1):
+            r = probed.round(u, None, key, round_idx=1)
+            jax.block_until_ready(r.delta)
+            probe.metrics(r.to_metrics(), round=1)
+            st = r.stats
+            probe.sim_phase("phase1-vote", 0.0, st["phase1_s"], round=1)
+            probe.sim_phase("phase2-aggregate", st["phase1_s"],
+                            st["phase1_s"] + st["phase2_s"], round=1)
+
+    untraced()                       # compile + warm both paths
+    traced()
+    times = interleaved_times({"traced": traced, "untraced": untraced},
+                              reps=reps)
+    probe.close()
+    ratio = paired_ratio_median(times["traced"], times["untraced"])
+    ms = lambda xs: round(1e3 * sum(xs) / len(xs), 3)  # noqa: E731
+    return {
+        "d": OVERHEAD_D,
+        "n_clients": 8,
+        "reps": reps,
+        "overhead_ratio": round(ratio, 4),
+        "overhead_max": OVERHEAD_MAX,
+        "traced_ms_mean": ms(times["traced"]),
+        "untraced_ms_mean": ms(times["untraced"]),
+        "within_budget": bool(ratio <= OVERHEAD_MAX),
+    }
+
+
+def run(*, smoke: bool = False, out_path: str = OUT_PATH):
+    if smoke:
+        out_path = smoke_out_path(out_path, OUT_PATH, "BENCH_obs.smoke.json")
+    tr = trace_section(smoke=smoke)
+    ov = overhead_section(smoke=smoke)
+    rows = [
+        ("obs/schema_errors", tr["schema_errors"],
+         f"records={tr['records']}"),
+        ("obs/report_renders", int(tr["report_renders"]),
+         f"rounds_covered={int(tr['rounds_covered'])}"),
+        ("obs/per_round_complete", int(tr["per_round_complete"]),
+         f"rounds={tr['rounds']}"),
+        ("obs/overhead_ratio", ov["overhead_ratio"],
+         f"max={OVERHEAD_MAX}_d={ov['d']}_reps={ov['reps']}"),
+        ("obs/overhead_within_budget", int(ov["within_budget"]),
+         f"traced={ov['traced_ms_mean']}ms_untraced="
+         f"{ov['untraced_ms_mean']}ms"),
+    ]
+    payload = {
+        "benchmark": "obs",
+        "smoke": smoke,
+        "trace": tr,
+        "overhead": ov,
+    }
+    with open(out_path, "w") as fh:
+        json.dump(payload, fh, indent=2)
+        fh.write("\n")
+    rows.append(("obs/json", out_path, "written"))
+    return rows
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="fewer overhead reps (CI)")
+    ap.add_argument("--out", default=OUT_PATH)
+    args = ap.parse_args(argv)
+    rows = run(smoke=args.smoke, out_path=args.out)
+    emit(rows)
+    gates = {tag: v for tag, v, _ in rows
+             if tag in ("obs/schema_errors", "obs/report_renders",
+                        "obs/per_round_complete",
+                        "obs/overhead_within_budget")}
+    bad = [tag for tag, v in gates.items()
+           if (v != 0 if tag == "obs/schema_errors" else v != 1)]
+    if bad:
+        print(f"obs: invariants lost: {', '.join(bad)}", flush=True)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

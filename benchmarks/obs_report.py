@@ -1,0 +1,68 @@
+"""Render a ``repro.obs`` JSONL trace as a round report (DESIGN.md §15).
+
+  PYTHONPATH=src python -m benchmarks.obs_report run.jsonl
+  PYTHONPATH=src python -m benchmarks.obs_report run.jsonl --markdown
+  PYTHONPATH=src python -m benchmarks.obs_report run.jsonl --chrome out.json
+
+The default output is the terminal round table (per-round host/sim time,
+phase breakdown, accuracy/loss, consensus size, bytes, fault counters)
+plus the run meta, fault totals and jit compile/execute split when the
+trace carries them.  ``--markdown`` emits the same report as a GitHub
+table; ``--chrome`` additionally exports the spans as a Perfetto /
+``chrome://tracing`` trace (host wall clock on pid 0, simulated network
+clock on pid 1).
+
+The trace is schema-validated before rendering; validation errors are
+printed to stderr and make the exit status non-zero (``--no-validate``
+renders best-effort anyway, for truncated traces from crashed runs).
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+
+from repro.obs import (load_trace, render_markdown, render_report,
+                       validate_records, write_chrome_trace)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="benchmarks.obs_report",
+        description="Render a repro.obs JSONL trace as a round report.")
+    ap.add_argument("trace", help="JSONL trace file (repro.obs.Tracer)")
+    ap.add_argument("--markdown", action="store_true",
+                    help="emit a GitHub-flavoured markdown report")
+    ap.add_argument("--chrome", metavar="OUT.json", default=None,
+                    help="also export a Perfetto/chrome://tracing file")
+    ap.add_argument("--no-validate", action="store_true",
+                    help="skip schema validation (render a truncated or "
+                         "partial trace best-effort)")
+    args = ap.parse_args(argv)
+
+    try:
+        records = load_trace(args.trace)
+    except (OSError, ValueError) as e:
+        print(f"obs_report: cannot load {args.trace}: {e}", file=sys.stderr)
+        return 2
+
+    status = 0
+    if not args.no_validate:
+        errors = validate_records(records)
+        if errors:
+            for err in errors:
+                print(f"obs_report: schema: {err}", file=sys.stderr)
+            status = 1
+
+    render = render_markdown if args.markdown else render_report
+    print(render(records))
+
+    if args.chrome:
+        n = write_chrome_trace(records, args.chrome)
+        print(f"\nchrome trace: {args.chrome} ({n} events) — open in "
+              "https://ui.perfetto.dev", file=sys.stderr)
+    return status
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

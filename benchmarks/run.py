@@ -17,7 +17,7 @@ import time
 
 from . import (accuracy_vs_time, aggregation_ops, aggregation_round,
                compression_error, dataplane, faults, kernel_micro, noniid,
-               roofline, sweep, traffic, vote_threshold)
+               obs, roofline, sweep, traffic, vote_threshold)
 from .common import emit
 
 SECTIONS = {
@@ -33,6 +33,7 @@ SECTIONS = {
     "faults": faults.run,               # chaos dataplane: faults + recovery
     "sweep": sweep.run,                 # fleet runner vs sequential loop
     "roofline": roofline.run,           # dry-run roofline table
+    "obs": obs.run,                     # telemetry: trace audit + overhead
 }
 
 

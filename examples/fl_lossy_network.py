@@ -22,6 +22,17 @@ side-by-side wall-clock comparison.
 
   PYTHONPATH=src python examples/fl_lossy_network.py [--rounds 30]
       [--clients 10] [--loss 0.05] [--participation 0.5] [--leaves 2]
+      [--trace run.jsonl]
+
+``--trace`` records the whole sweep through a ``repro.obs``
+RecordingProbe (DESIGN.md §15) — per-round spans, metrics and the jit
+compile/execute split land in the JSONL file, and
+
+  PYTHONPATH=src python -m benchmarks.obs_report run.jsonl
+
+renders the round report.  Tracing never perturbs results: the probe
+only observes stats the engines already return, so the table below is
+bit-identical with and without it.
 """
 
 import argparse
@@ -41,6 +52,9 @@ def main():
     ap.add_argument("--sequential", action="store_true",
                     help="force the per-cell run_federated path (the "
                          "fleet's bit-identity oracle) for comparison")
+    ap.add_argument("--trace", metavar="PATH", default=None,
+                    help="record a repro.obs JSONL trace of the sweep; "
+                         "render it with python -m benchmarks.obs_report")
     args = ap.parse_args()
 
     task = dict(algorithm="fediac", a=2, bits=12, n_clients=args.clients,
@@ -69,9 +83,18 @@ def main():
     assert len({s.batch_signature() for s in packet}) == 1, \
         "the flat packet scenarios must share one fleet program"
 
+    probe = None
+    if args.trace:
+        from repro.obs import RecordingProbe
+        probe = RecordingProbe(args.trace, profiler=True)
+        probe.run_start(kind="fl_lossy_network", scenarios=len(specs),
+                        rounds=args.rounds, n_clients=args.clients)
+
     t0 = time.perf_counter()
-    result = run_sweep(specs, (0,), sequential=args.sequential)
+    result = run_sweep(specs, (0,), sequential=args.sequential, probe=probe)
     dt = time.perf_counter() - t0
+    if probe is not None:
+        probe.close()
 
     mode = "sequential" if args.sequential else "fleet"
     print(f"{len(specs)} scenarios in {dt:.1f}s ({mode})")
@@ -80,6 +103,9 @@ def main():
         h = cr.history
         print(f"{cr.spec.name:26s} {h.acc[-1]:9.4f} {h.wall_clock[-1]:10.2f}s "
               f"{h.traffic_mb[-1]:9.2f}MB")
+    if args.trace:
+        print(f"\ntrace: {args.trace} — render with\n"
+              f"  PYTHONPATH=src python -m benchmarks.obs_report {args.trace}")
 
 
 if __name__ == "__main__":

@@ -364,7 +364,7 @@ def aggregate_stack(u_stack: jax.Array, cfg: FediACConfig, key: jax.Array,
 
 
 def aggregate_round(u_stack: jax.Array, cfg: FediACConfig, key: jax.Array,
-                    *, a=None):
+                    *, a=None, probe=None):
     """Run one stacked round on the engine ``cfg.engine`` selects.
 
     ``"monolithic"`` is :func:`aggregate_stack`; ``"stream"`` is the
@@ -372,14 +372,30 @@ def aggregate_round(u_stack: jax.Array, cfg: FediACConfig, key: jax.Array,
     same signature and return contract, bit-identical outputs, O(N·chunk)
     peak memory (DESIGN.md §12).  The FL loop and the fleet runner pick
     the engine through this single dispatch.
+
+    ``probe`` (a ``repro.obs`` RoundProbe) puts a host span around the
+    engine call for *eager* callers; it never enters the traced math, so
+    outputs are probe-independent (DESIGN.md §15).  Leave it ``None``
+    when calling under ``jit``/``vmap``.
     """
     if cfg.engine == "stream":
         from .stream_engine import aggregate_stream
-        return aggregate_stream(u_stack, cfg, key, a=a)
-    if cfg.engine != "monolithic":
+        engine = "stream"
+
+        def run():
+            return aggregate_stream(u_stack, cfg, key, a=a)
+    elif cfg.engine == "monolithic":
+        engine = "monolithic"
+
+        def run():
+            return aggregate_stack(u_stack, cfg, key, a=a)
+    else:
         raise ValueError(f"unknown FediAC engine {cfg.engine!r} "
                          "(expected 'monolithic' or 'stream')")
-    return aggregate_stack(u_stack, cfg, key, a=a)
+    if probe is not None and getattr(probe, "enabled", False):
+        with probe.span(f"engine-{engine}"):
+            return run()
+    return run()
 
 
 # ---------------------------------------------------------------------------

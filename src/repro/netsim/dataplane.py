@@ -26,7 +26,7 @@ accounting it defines (``n_windows``) still shapes the traced timeline.
 
 from __future__ import annotations
 
-from dataclasses import dataclass
+from dataclasses import dataclass, fields
 
 import numpy as np
 
@@ -54,13 +54,24 @@ class DataplaneStats:
     overflow_slots: int = 0      # registers whose true sum left int32 range
                                  # (the value wrapped silently — DESIGN.md §14)
 
+    # fields that combine by max across switches (levels run concurrently,
+    # so the hierarchy's pass count / residency is the widest switch's, not
+    # the sum); every other field is an additive event count.  Listing the
+    # *exceptions* keeps ``merge`` field-complete by construction: a field
+    # added to this dataclass is summed unless deliberately put here.
+    _MAX_FIELDS = frozenset({"passes", "peak_live_slots"})
+
     def merge(self, other: "DataplaneStats") -> "DataplaneStats":
-        return DataplaneStats(
-            votes_lost=self.votes_lost + other.votes_lost,
-            passes=max(self.passes, other.passes),
-            peak_live_slots=max(self.peak_live_slots, other.peak_live_slots),
-            aggregation_ops=self.aggregation_ops + other.aggregation_ops,
-            overflow_slots=self.overflow_slots + other.overflow_slots)
+        vals = {}
+        for f in fields(self):
+            a, b = getattr(self, f.name), getattr(other, f.name)
+            vals[f.name] = max(a, b) if f.name in self._MAX_FIELDS else a + b
+        return DataplaneStats(**vals)
+
+    def to_metrics(self) -> dict:
+        """The unified metric emission path (DESIGN.md §15): every field,
+        as {name: float} — same contract as ``RoundResult.to_metrics``."""
+        return {f.name: float(getattr(self, f.name)) for f in fields(self)}
 
 
 class SwitchDataplane:

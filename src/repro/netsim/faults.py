@@ -64,8 +64,15 @@ from .policies import (NetConfig, REGISTER_POLICIES, register_accumulate,
 from .timeline import (_masked_drain, deadline_mask, download_time,
                        poisson_arrivals, retransmit_delays)
 
-__all__ = ["FaultConfig", "FAULT_DYN_FIELDS", "make_chaos_packet_core",
-           "chaos_packet_dyn", "gilbert_elliott_stationary"]
+__all__ = ["FaultConfig", "FAULT_DYN_FIELDS", "CHAOS_STAT_FIELDS",
+           "make_chaos_packet_core", "chaos_packet_dyn",
+           "gilbert_elliott_stationary"]
+
+#: the chaos-only aux scalars the core returns on top of the benign ones —
+#: the single source of truth for downstream stat extraction
+#: (``PacketTransport`` folds exactly these into its stats dict).
+CHAOS_STAT_FIELDS = ("crashed", "duplicates", "resets", "overflow_slots",
+                     "aborted", "attempts")
 
 #: traced per-cell fault rates, appended to the benign PACKET_DYN_FIELDS —
 #: cells differing only in these share one compiled chaos program.

@@ -74,6 +74,54 @@ class RoundResult:
                                 # per active client
     stats: dict = field(default_factory=dict)
 
+    def to_metrics(self) -> dict:
+        """The unified metric emission path (DESIGN.md §15): every scalar
+        stat plus derived consensus/health gauges, as {name: float}.
+
+        Only enabled probes call this — it is the one place that pays for
+        host transfers (the delta/residual norms), so the un-probed hot
+        path never does.
+        """
+        out = {"n_active": float(self.n_active)}
+        if self.upload_bytes is not None:
+            out["upload_bytes"] = float(self.upload_bytes)
+        if self.wall_clock_s is not None:
+            out["wall_clock_s"] = float(self.wall_clock_s)
+        tr = self.traffic
+        if tr is not None:
+            out["phase1_bytes"] = float(tr.phase1_bytes)
+            out["phase2_bytes"] = float(tr.phase2_bytes)
+        part = self.stats.get("participants")
+        if part is not None:
+            out["n_part"] = float(np.asarray(part).sum())
+        up = self.stats.get("uploaders")
+        if up is not None:
+            out["n_up"] = float(np.asarray(up).size)
+        for k, v in self.stats.items():
+            if k in out or isinstance(v, (np.ndarray, jax.Array,
+                                          list, tuple)):
+                continue
+            try:
+                out[k] = float(v)
+            except (TypeError, ValueError):
+                continue
+        counts = self.stats.get("vote_counts")
+        if counts is not None:
+            c = np.asarray(counts, float)
+            n_part = out.get("n_part", 0.0)
+            if c.size and n_part > 0:
+                # mean fraction of participants voting for a chunk
+                out["vote_agreement_frac"] = float(c.mean() / n_part)
+            a = self.stats.get("vote_threshold_a")
+            if a is not None:
+                # chunks whose votes met the consensus threshold
+                out["consensus_k"] = float((c >= float(a)).sum())
+        if self.delta is not None:
+            out["delta_norm"] = float(jnp.linalg.norm(self.delta))
+        if self.residuals is not None:
+            out["residual_norm"] = float(jnp.linalg.norm(self.residuals))
+        return out
+
 
 class Transport(Protocol):
     def round(self, u_stack: jax.Array, state: Any, key: jax.Array,
@@ -85,6 +133,13 @@ class InMemoryTransport:
 
     def __init__(self, agg):
         self.agg = agg
+        self.probe = None
+
+    def attach_probe(self, probe) -> None:
+        """Store a ``repro.obs`` RoundProbe (observation only — the
+        in-memory round math is untouched; the FL loop emits this
+        transport's RoundResult metrics)."""
+        self.probe = probe
 
     def round(self, u_stack, state, key, round_idx: int = 0) -> RoundResult:
         delta, residuals, state, traffic, load = self.agg(u_stack, state, key)
@@ -124,6 +179,18 @@ class PacketTransport:
         else:
             self.cfg = None
             self._agg = make_aggregator(aggregator, **self.agg_kwargs)
+        self.probe = None
+
+    def attach_probe(self, probe) -> None:
+        """Attach a ``repro.obs`` RoundProbe.  Observation only: the probe
+        wraps the jitted packet cores host-side (compile/execute counting)
+        — the traced programs and their outputs are bit-identical with or
+        without it (DESIGN.md §15)."""
+        self.probe = probe
+        if probe is not None and probe.enabled:
+            self._jit_core = {
+                n: (probe.wrap_jit(core, f"packet_core[n={n}]"), dyn)
+                for n, (core, dyn) in self._jit_core.items()}
 
     # ------------------------------------------------------------------
     def _round_rates(self, n: int) -> np.ndarray:
@@ -155,7 +222,10 @@ class PacketTransport:
                 core = make_fediac_packet_core(self.cfg, self.net, n)
                 dyn = packet_dyn(self.cfg, self.net, n, self.local_train_s,
                                  svc)
-            self._jit_core[n] = (jax.jit(core), dyn)
+            jitted = jax.jit(core)
+            if self.probe is not None and self.probe.enabled:
+                jitted = self.probe.wrap_jit(jitted, f"packet_core[n={n}]")
+            self._jit_core[n] = (jitted, dyn)
         return self._jit_core[n]
 
     def _fediac_round(self, u_stack, state, key, round_idx) -> RoundResult:
@@ -181,10 +251,17 @@ class PacketTransport:
                  "peak_live_slots": int(aux["peak_live_slots"]),
                  "aggregation_ops": int(aux["aggregation_ops"]),
                  "phase2_s": float(aux["phase2_s"]),
-                 "mean_wait_s": float(aux["mean_wait_s"])}
+                 "mean_wait_s": float(aux["mean_wait_s"]),
+                 # consensus/occupancy context for the obs layer; the core
+                 # resolves a from the announced uploader count (m=0 maps
+                 # to 1, matching threshold_table)
+                 "vote_threshold_a": float(cfg.threshold(n_up)) if n_up
+                                     else 1.0,
+                 "register_occupancy": (float(aux["peak_live_slots"])
+                                        / float(self.net.memory_slots))}
         # chaos-core extras (present only under a FaultConfig)
-        for k in ("crashed", "duplicates", "resets", "overflow_slots",
-                  "aborted", "attempts"):
+        from .faults import CHAOS_STAT_FIELDS
+        for k in CHAOS_STAT_FIELDS:
             if k in aux:
                 stats[k] = int(aux[k])
         # voters that missed the quorum still spent their phase-1 bytes,

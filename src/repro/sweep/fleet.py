@@ -44,6 +44,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.baselines import make_aggregator_core
+from repro.obs.probe import as_probe
 from repro.switch import SwitchProfile, client_rates, n_packets, round_wall_clock
 from repro.training.fl_loop import (FLHistory, _stack_clients, init_mlp,
                                     make_client_round, mlp_apply)
@@ -121,27 +122,46 @@ def _eager_loss_means(losses_b) -> np.ndarray:
                     np.float64)
 
 
-def run_fleet_cells(cells):
+def run_fleet_cells(cells, *, probe=None):
     """Run same-signature cells as one batched round program.
 
     ``cells``: list of ``(ScenarioSpec, seed)`` sharing one
     ``batch_signature()``.  Returns a list of :class:`FLHistory`, one per
     cell, bit-identical to the sequential ``run_federated`` runs.
+
+    ``probe`` (a ``repro.obs`` RoundProbe) observes the fleet host-side:
+    fleet-round spans, per-cell metrics labelled ``cell``/``seed``, and a
+    wrapped step for compile counting.  The traced program and the ``keep``
+    aux set are probe-independent, so any probe — including the default
+    NullProbe — leaves every cell history bit-identical (DESIGN.md §15).
     """
+    probe = as_probe(probe)
     spec0 = cells[0][0]
     sig0 = spec0.batch_signature()
     assert all(s.batch_signature() == sig0 for s, _ in cells), \
         "fleet cells must share one batch signature"
     if spec0.transport == "packet":
-        return _run_packet_cells(cells)
-    return _run_memory_cells(cells)
+        return _run_packet_cells(cells, probe)
+    return _run_memory_cells(cells, probe)
+
+
+def _emit_cell(probe, spec, seed, hist, extras=None) -> None:
+    """Per-cell summary metrics, labelled by scenario name and seed (only
+    called when ``probe.enabled``)."""
+    last = hist.records[-1]
+    payload = {"acc": last.acc, "loss": last.loss,
+               "wall_clock_cum_s": last.wall_clock,
+               "traffic_cum_mb": last.traffic_mb}
+    if extras:
+        payload.update(extras)
+    probe.metrics(payload, labels={"cell": spec.name, "seed": str(seed)})
 
 
 # ---------------------------------------------------------------------------
 # memory transport: aggregator core + analytic pricing
 # ---------------------------------------------------------------------------
 
-def _run_memory_cells(cells):
+def _run_memory_cells(cells, probe):
     spec0 = cells[0][0]
     n, rounds = spec0.n_clients, spec0.rounds
     batch, unravel, d, lr0, lr_tau, client_round = _stack_cells(cells)
@@ -176,16 +196,19 @@ def _run_memory_cells(cells):
     # stack in place instead of doubling it every round.  Donation changes
     # no values, so the sequential bit-identity contract is untouched.
     step = jax.jit(jax.vmap(cell_step), donate_argnums=(0, 1, 2, 3))
+    step = probe.wrap_jit(step, f"fleet_step_memory[{len(cells)}x{n}]")
 
     agg_state = None
     accs, loss_means, auxes = [], [], []
     for t in range(1, rounds + 1):
-        (flat_b, e_b, agg_state, key_b, acc, losses, aux) = step(
-            flat_b, e_b, agg_state, key_b, _lr_t(lr0, lr_tau, t), dyn_b,
-            batch["cx"], batch["cy"], batch["size"], batch["xt"], batch["yt"])
-        accs.append(np.asarray(acc))
-        loss_means.append(_eager_loss_means(losses))
-        auxes.append({k: np.asarray(v) for k, v in aux.items()})
+        with probe.span("fleet-round", round=t, cells=len(cells)):
+            (flat_b, e_b, agg_state, key_b, acc, losses, aux) = step(
+                flat_b, e_b, agg_state, key_b, _lr_t(lr0, lr_tau, t), dyn_b,
+                batch["cx"], batch["cy"], batch["size"], batch["xt"],
+                batch["yt"])
+            accs.append(np.asarray(acc))
+            loss_means.append(_eager_loss_means(losses))
+            auxes.append({k: np.asarray(v) for k, v in aux.items()})
 
     # ---- Python-side pricing, in fl_loop's exact accumulation order.
     histories = []
@@ -206,10 +229,11 @@ def _run_memory_cells(cells):
             upload_mb = traffic.total_bytes * spec0.n_clients / 1e6
             download_mb = traffic.total_bytes * spec0.n_clients / 1e6
             mb_cum += upload_mb + download_mb
-            hist.acc.append(float(accs[t][b]))
-            hist.wall_clock.append(t_cum)
-            hist.traffic_mb.append(mb_cum)
-            hist.loss.append(float(loss_means[t][b]))
+            hist.append_round(acc=float(accs[t][b]), wall_clock=t_cum,
+                              traffic_mb=mb_cum,
+                              loss=float(loss_means[t][b]))
+        if probe.enabled:
+            _emit_cell(probe, spec, seed, hist)
         histories.append(hist)
     return histories
 
@@ -218,7 +242,7 @@ def _run_memory_cells(cells):
 # packet transport: the netsim round core batched on the fleet axis
 # ---------------------------------------------------------------------------
 
-def _run_packet_cells(cells):
+def _run_packet_cells(cells, probe):
     from repro.core.fediac import round_traffic
     from repro.netsim import packet_dyn, make_fediac_packet_core
     from repro.netsim.batched import retx_byte_count
@@ -281,16 +305,18 @@ def _run_packet_cells(cells):
         jax.vmap(cell_step,
                  in_axes=(0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, None)),
         donate_argnums=(0, 1, 2))
+    step = probe.wrap_jit(step, f"fleet_step_packet[{len(cells)}x{n}]")
 
     accs, loss_means, auxes = [], [], []
     for t in range(1, rounds + 1):
-        (flat_b, e_b, key_b, acc, losses, aux) = step(
-            flat_b, e_b, key_b, net_key_b, rates_b, _lr_t(lr0, lr_tau, t),
-            dyn_b, batch["cx"], batch["cy"], batch["size"], batch["xt"],
-            batch["yt"], jnp.int32(t))
-        accs.append(np.asarray(acc))
-        loss_means.append(_eager_loss_means(losses))
-        auxes.append({k: np.asarray(v) for k, v in aux.items()})
+        with probe.span("fleet-round", round=t, cells=len(cells)):
+            (flat_b, e_b, key_b, acc, losses, aux) = step(
+                flat_b, e_b, key_b, net_key_b, rates_b,
+                _lr_t(lr0, lr_tau, t), dyn_b, batch["cx"], batch["cy"],
+                batch["size"], batch["xt"], batch["yt"], jnp.int32(t))
+            accs.append(np.asarray(acc))
+            loss_means.append(_eager_loss_means(losses))
+            auxes.append({k: np.asarray(v) for k, v in aux.items()})
 
     # ---- Python-side pricing from the traced aux, in fl_loop's exact
     # packet-transport accumulation order (simulated wall-clock; uploads
@@ -302,6 +328,7 @@ def _run_packet_cells(cells):
         hist = FLHistory([], [], [], [])
         t_cum = 0.0
         mb_cum = 0.0
+        retx_total = 0
         for t in range(rounds):
             t_cum += float(auxes[t]["wall_clock_s"][b])
             retx_bytes = retx_byte_count(auxes[t]["retransmissions"][b],
@@ -311,9 +338,14 @@ def _run_packet_cells(cells):
                         + tr.phase2_bytes * int(auxes[t]["n_up"][b])
                         + retx_bytes)
             mb_cum += up_bytes / 1e6 + tr.total_bytes * n / 1e6
-            hist.acc.append(float(accs[t][b]))
-            hist.wall_clock.append(t_cum)
-            hist.traffic_mb.append(mb_cum)
-            hist.loss.append(float(loss_means[t][b]))
+            retx_total += int(auxes[t]["retransmissions"][b])
+            hist.append_round(acc=float(accs[t][b]), wall_clock=t_cum,
+                              traffic_mb=mb_cum,
+                              loss=float(loss_means[t][b]))
+        if probe.enabled:
+            _emit_cell(probe, spec, seed, hist,
+                       extras={"retransmissions": retx_total,
+                               "n_part": int(auxes[-1]["n_part"][b]),
+                               "n_up": int(auxes[-1]["n_up"][b])})
         histories.append(hist)
     return histories

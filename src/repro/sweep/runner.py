@@ -59,11 +59,12 @@ class SweepResult:
         return self.by_key()[cell_key(spec, seed)].history
 
 
-def run_cell_sequential(spec: ScenarioSpec, seed: int) -> FLHistory:
+def run_cell_sequential(spec: ScenarioSpec, seed: int, *,
+                        probe=None) -> FLHistory:
     """One cell through the classic per-cell ``run_federated`` loop."""
     clients, test = spec.make_task(seed)
     return run_federated(list(clients), test, spec.to_flconfig(seed),
-                         hidden=spec.hidden)
+                         hidden=spec.hidden, probe=probe)
 
 
 # ---------------------------------------------------------------------------
@@ -108,14 +109,16 @@ def _to_record(h: FLHistory) -> dict:
 
 def run_sweep(specs, seeds=(0,), *, max_fleet: int = 16,
               progress_path: str | None = None,
-              sequential: bool = False) -> SweepResult:
+              sequential: bool = False, probe=None) -> SweepResult:
     """Run every (scenario, seed) cell of ``specs`` x ``seeds``.
 
     ``max_fleet`` bounds the fleet axis (chunking keeps device memory flat
     for grids larger than memory); ``sequential=True`` forces the per-cell
     ``run_federated`` path (the fleet-vs-sequential benchmark's baseline
     and the bit-identity oracle).  ``progress_path`` enables chunk-level
-    resume.
+    resume.  ``probe`` (a ``repro.obs`` RoundProbe) is threaded through
+    both execution paths; cell histories are probe-independent
+    (DESIGN.md §15).
     """
     cells = [(spec, seed) for spec in specs for seed in seeds]
     keys = [cell_key(spec, seed) for spec, seed in cells]
@@ -143,13 +146,14 @@ def run_sweep(specs, seeds=(0,), *, max_fleet: int = 16,
     for group in fleet_groups.values():
         for lo in range(0, len(group), max_fleet):
             chunk = group[lo:lo + max_fleet]
-            hists = run_fleet_cells([(s, seed) for s, seed, _ in chunk])
+            hists = run_fleet_cells([(s, seed) for s, seed, _ in chunk],
+                                    probe=probe)
             for (spec, seed, k), hist in zip(chunk, hists):
                 _record(spec, seed, k, hist)
             _save_progress(progress_path, done)
 
     for spec, seed, k in seq_cells:
-        _record(spec, seed, k, run_cell_sequential(spec, seed))
+        _record(spec, seed, k, run_cell_sequential(spec, seed, probe=probe))
         _save_progress(progress_path, done)
 
     ordered = [results[k] for k in keys]

@@ -20,6 +20,7 @@ import numpy as np
 from repro.checkpoint import load_run_state, save_run_state
 from repro.core.baselines import make_transport
 from repro.core.fediac import FediACConfig
+from repro.obs.probe import as_probe
 from repro.switch import SwitchProfile, client_rates, n_packets, round_wall_clock
 
 
@@ -117,25 +118,87 @@ class FLConfig:
 
 
 @dataclass
+class RoundRecord:
+    """One completed round's observations.
+
+    ``wall_clock`` and ``traffic_mb`` are *cumulative* (seconds / MB since
+    round 1), matching what the legacy parallel lists always stored.
+    """
+
+    acc: float
+    wall_clock: float      # cumulative seconds
+    traffic_mb: float      # cumulative MB (upload + download, all clients)
+    loss: float
+
+    def to_metrics(self) -> dict:
+        return {"acc": self.acc, "wall_clock_cum_s": self.wall_clock,
+                "traffic_cum_mb": self.traffic_mb, "loss": self.loss}
+
+
 class FLHistory:
-    acc: list
-    wall_clock: list       # cumulative seconds
-    traffic_mb: list       # cumulative MB (upload + download, all clients)
-    loss: list
+    """Per-round :class:`RoundRecord` list behind the legacy list-of-floats
+    attribute API.
+
+    The legacy attributes (``acc``/``wall_clock``/``traffic_mb``/``loss``)
+    are read-only *views* — fresh float lists computed from ``records`` —
+    so ``sweep/runner.py`` and ``checkpoint/ckpt.py`` round-trip
+    bit-exactly through them, but appending to a view is lost: grow a
+    history with :meth:`append_round`.
+    """
+
+    __slots__ = ("records",)
+
+    def __init__(self, acc=(), wall_clock=(), traffic_mb=(), loss=()):
+        self.records = [RoundRecord(a, w, m, l)
+                        for a, w, m, l in zip(acc, wall_clock,
+                                              traffic_mb, loss)]
+
+    def append_round(self, *, acc: float, wall_clock: float,
+                     traffic_mb: float, loss: float) -> RoundRecord:
+        rec = RoundRecord(acc, wall_clock, traffic_mb, loss)
+        self.records.append(rec)
+        return rec
+
+    # legacy parallel-list API (read-only views over ``records``)
+    @property
+    def acc(self) -> list:
+        return [r.acc for r in self.records]
+
+    @property
+    def wall_clock(self) -> list:
+        return [r.wall_clock for r in self.records]
+
+    @property
+    def traffic_mb(self) -> list:
+        return [r.traffic_mb for r in self.records]
+
+    @property
+    def loss(self) -> list:
+        return [r.loss for r in self.records]
+
+    def __len__(self) -> int:
+        return len(self.records)
+
+    def __eq__(self, other) -> bool:
+        return (isinstance(other, FLHistory)
+                and self.records == other.records)
+
+    def __repr__(self) -> str:
+        return f"FLHistory({len(self.records)} rounds)"
 
     def acc_at_time(self, t: float) -> float:
         """Final accuracy achieved within a wall-clock budget (Fig. 2 readout)."""
         best = 0.0
-        for a, w in zip(self.acc, self.wall_clock):
-            if w <= t:
-                best = max(best, a)
+        for r in self.records:
+            if r.wall_clock <= t:
+                best = max(best, r.acc)
         return best
 
     def traffic_to_accuracy(self, target: float) -> float | None:
         """MB consumed until the target test accuracy (Tables I/II readout)."""
-        for a, mb in zip(self.acc, self.traffic_mb):
-            if a >= target:
-                return mb
+        for r in self.records:
+            if r.acc >= target:
+                return r.traffic_mb
         return None
 
 
@@ -196,7 +259,16 @@ _carry_in = jax.jit(lambda u_stack, e_stack: u_stack + e_stack,
                     donate_argnums=(0,))
 
 
-def run_federated(clients, test, flcfg: FLConfig, *, hidden=(128, 64)) -> FLHistory:
+def run_federated(clients, test, flcfg: FLConfig, *, hidden=(128, 64),
+                  probe=None) -> FLHistory:
+    """Run the FL loop; ``probe`` is an optional ``repro.obs`` RoundProbe.
+
+    Probes observe only host-side values the loop already computes (plus
+    the transport's stats dict), so any probe — including the default
+    ``NullProbe`` — leaves every compiled program and every output
+    bit-identical (DESIGN.md §15).
+    """
+    probe = as_probe(probe)
     rng = np.random.default_rng(flcfg.seed)
     dim = clients[0].x.shape[1]
     n_classes = clients[0].n_classes
@@ -229,6 +301,14 @@ def run_federated(clients, test, flcfg: FLConfig, *, hidden=(128, 64)) -> FLHist
     local_round = jax.jit(
         lambda flat_params, key, lr: client_round(flat_params, key, lr,
                                                   cx, cy, size))
+    # host-side observation only: wrap_jit counts compiles/cache hits
+    # around the same jitted callables (NullProbe returns them unchanged),
+    # and transports with probe support report their stats dicts.
+    local_round = probe.wrap_jit(local_round, "local_round")
+    carry_in = probe.wrap_jit(_carry_in, "carry_in")
+    attach = getattr(transport, "attach_probe", None)
+    if attach is not None:
+        attach(probe)
 
     e_stack = jnp.zeros((n, d))
     flat = flat0
@@ -252,39 +332,82 @@ def run_federated(clients, test, flcfg: FLConfig, *, hidden=(128, 64)) -> FLHist
         hist = FLHistory(**st["history"])
     xt, yt = jnp.asarray(test.x), jnp.asarray(test.y)
 
-    for t in range(start_round + 1, flcfg.rounds + 1):
-        lr = flcfg.lr0 / (1.0 + np.sqrt(t) / flcfg.lr_tau)
-        key, k1, k2 = jax.random.split(key, 3)
-        u_stack, losses = local_round(flat, k1, lr)
-        u_stack = _carry_in(u_stack, e_stack)
-        res = transport.round(u_stack, agg_state, k2, t)
-        delta, e_stack, agg_state = res.delta, res.residuals, res.state
-        traffic, load = res.traffic, res.load
-        flat = flat - delta
+    if probe.enabled:
+        probe.run_start(kind="fl_run", aggregator=flcfg.aggregator,
+                        transport=flcfg.transport, engine=flcfg.engine,
+                        n_clients=n, rounds=flcfg.rounds, seed=flcfg.seed,
+                        resumed_from=start_round if start_round else None)
 
-        if res.wall_clock_s is not None:
-            t_cum += res.wall_clock_s       # packet-simulated round time
-        else:
-            down_packets = n_packets(traffic.total_bytes)
-            t_cum += round_wall_clock(
-                packets_per_client=load.packets_per_client,
-                download_packets=down_packets, rates=rates, profile=flcfg.switch,
-                local_train_s=flcfg.local_train_s, aligned=load.aligned)
-        # uploads come from the clients that actually sent this round
-        # (the packet transport reports exact bytes — dropped voters still
-        # spent phase 1); the broadcast reaches all N clients.
-        up_bytes = (res.upload_bytes if res.upload_bytes is not None
-                    else traffic.total_bytes * res.n_active)
-        upload_mb = up_bytes / 1e6
-        download_mb = traffic.total_bytes * n / 1e6
-        mb_cum += upload_mb + download_mb
-        hist.acc.append(accuracy(unravel(flat), xt, yt))
-        hist.wall_clock.append(t_cum)
-        hist.traffic_mb.append(mb_cum)
-        hist.loss.append(float(losses.mean()))
-        if (flcfg.ckpt_path and flcfg.ckpt_every > 0
-                and (t % flcfg.ckpt_every == 0 or t == flcfg.rounds)):
-            save_run_state(flcfg.ckpt_path, flat=flat, e_stack=e_stack,
-                           key=key, agg_state=agg_state, round_idx=t,
-                           t_cum=t_cum, mb_cum=mb_cum, history=hist)
+    for t in range(start_round + 1, flcfg.rounds + 1):
+        with probe.span("round", round=t):
+            lr = flcfg.lr0 / (1.0 + np.sqrt(t) / flcfg.lr_tau)
+            key, k1, k2 = jax.random.split(key, 3)
+            with probe.span("local-train", round=t):
+                u_stack, losses = local_round(flat, k1, lr)
+                u_stack = carry_in(u_stack, e_stack)
+            with probe.span("aggregate", round=t):
+                res = transport.round(u_stack, agg_state, k2, t)
+            delta, e_stack, agg_state = res.delta, res.residuals, res.state
+            traffic, load = res.traffic, res.load
+            flat = flat - delta
+
+            sim_t0 = t_cum
+            if res.wall_clock_s is not None:
+                t_cum += res.wall_clock_s       # packet-simulated round time
+            else:
+                down_packets = n_packets(traffic.total_bytes)
+                t_cum += round_wall_clock(
+                    packets_per_client=load.packets_per_client,
+                    download_packets=down_packets, rates=rates,
+                    profile=flcfg.switch,
+                    local_train_s=flcfg.local_train_s, aligned=load.aligned)
+            # uploads come from the clients that actually sent this round
+            # (the packet transport reports exact bytes — dropped voters
+            # still spent phase 1); the broadcast reaches all N clients.
+            up_bytes = (res.upload_bytes if res.upload_bytes is not None
+                        else traffic.total_bytes * res.n_active)
+            upload_mb = up_bytes / 1e6
+            download_mb = traffic.total_bytes * n / 1e6
+            mb_cum += upload_mb + download_mb
+            with probe.span("eval", round=t):
+                acc_t = accuracy(unravel(flat), xt, yt)
+            rec = hist.append_round(acc=acc_t, wall_clock=t_cum,
+                                    traffic_mb=mb_cum,
+                                    loss=float(losses.mean()))
+            if probe.enabled:
+                _emit_round(probe, t, rec, res, sim_t0, t_cum,
+                            up_bytes, traffic.total_bytes * n)
+            if (flcfg.ckpt_path and flcfg.ckpt_every > 0
+                    and (t % flcfg.ckpt_every == 0 or t == flcfg.rounds)):
+                with probe.span("ckpt", round=t):
+                    save_run_state(flcfg.ckpt_path, flat=flat,
+                                   e_stack=e_stack, key=key,
+                                   agg_state=agg_state, round_idx=t,
+                                   t_cum=t_cum, mb_cum=mb_cum, history=hist)
     return hist
+
+
+def _emit_round(probe, t: int, rec: RoundRecord, res, sim_t0: float,
+                sim_t1: float, up_bytes: float, bcast_bytes: float) -> None:
+    """Feed one completed round to an enabled probe.
+
+    Only called when ``probe.enabled`` — everything here reads values the
+    round already produced (RoundRecord, RoundResult stats), so disabled
+    runs skip even the dict construction.
+    """
+    payload = dict(res.to_metrics())
+    payload.update(acc=rec.acc, loss=rec.loss, upload_bytes=up_bytes,
+                   broadcast_bytes=bcast_bytes,
+                   wall_clock_s=sim_t1 - sim_t0)
+    probe.metrics(payload, round=t)
+    # the simulated round timeline: phase 1 (voting) then phase 2
+    # (aggregation), on the cumulative sim clock
+    st = res.stats or {}
+    p1, p2 = st.get("phase1_s"), st.get("phase2_s")
+    if p1 is not None:
+        probe.sim_phase("phase1-vote", sim_t0, sim_t0 + float(p1), round=t)
+        if p2 is not None:
+            probe.sim_phase("phase2-aggregate", sim_t0 + float(p1),
+                            sim_t0 + float(p1) + float(p2), round=t)
+    else:
+        probe.sim_phase("sim-round", sim_t0, sim_t1, round=t)

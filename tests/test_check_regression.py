@@ -6,7 +6,8 @@ from __future__ import annotations
 
 from benchmarks.check_regression import (compare_aggregation,
                                          compare_dataplane, compare_faults,
-                                         compare_sweep, inject_drift)
+                                         compare_obs, compare_sweep,
+                                         inject_drift)
 
 
 def _tracked_stub():
@@ -36,6 +37,11 @@ def _tracked_stub():
               "recovery": {"resume_identical": True,
                            "ckpt_never_perturbs": True,
                            "ckpt_overhead_ratio": 1.05}}
+    obs = {"trace": {"rounds": 3, "records": 96, "schema_errors": 0,
+                     "report_renders": True, "rounds_covered": True,
+                     "per_round_complete": True},
+           "overhead": {"overhead_ratio": 1.05, "overhead_max": 1.10,
+                        "within_budget": True}}
     return {
         "aggregation": {"cells": [agg_cell, stream_cell]},
         "dataplane": {"rounds": 12, "memory_transport_acc": 0.81,
@@ -48,6 +54,7 @@ def _tracked_stub():
                                 "speedup_paired": 2.7}},
         "sweep": {"cells": [sweep_cell], "speedup": 4.0},
         "faults": faults,
+        "obs": obs,
     }
 
 
@@ -70,6 +77,9 @@ def _fresh_stub(tracked):
                                 "cells": []},
                    "recovery": {"resume_identical": True,
                                 "ckpt_never_perturbs": True}},
+        "obs": {"trace": dict(tracked["obs"]["trace"]),
+                "overhead": {**tracked["obs"]["overhead"],
+                             "overhead_ratio": 1.08}},
     }
 
 
@@ -81,6 +91,7 @@ def test_gate_green_on_matching_payloads():
     assert compare_dataplane(tracked["dataplane"], fresh["dataplane"]) == []
     assert compare_sweep(tracked["sweep"], fresh["sweep"]) == []
     assert compare_faults(tracked["faults"], fresh["faults"]) == []
+    assert compare_obs(tracked["obs"], fresh["obs"]) == []
 
 
 def test_gate_red_on_injected_drift():
@@ -91,6 +102,7 @@ def test_gate_red_on_injected_drift():
     assert compare_dataplane(drifted["dataplane"], fresh["dataplane"])
     assert compare_sweep(drifted["sweep"], fresh["sweep"])
     assert compare_faults(drifted["faults"], fresh["faults"])
+    assert compare_obs(drifted["obs"], fresh["obs"])
 
 
 def test_gate_red_on_specific_regressions():
@@ -169,6 +181,20 @@ def test_gate_red_on_specific_regressions():
     assert compare_faults(tracked["faults"], fresh["faults"])
     # a faults payload missing its sections entirely
     assert compare_faults({}, _fresh_stub(tracked)["faults"])
+    # a fresh trace picking up schema errors
+    fresh = _fresh_stub(tracked)
+    fresh["obs"]["trace"]["schema_errors"] = 2
+    assert compare_obs(tracked["obs"], fresh["obs"])
+    # the fresh probe overhead blowing the 1.10x budget
+    fresh = _fresh_stub(tracked)
+    fresh["obs"]["overhead"]["overhead_ratio"] = 1.25
+    assert compare_obs(tracked["obs"], fresh["obs"])
+    # a trace losing per-round span/metric coverage
+    fresh = _fresh_stub(tracked)
+    fresh["obs"]["trace"]["per_round_complete"] = False
+    assert compare_obs(tracked["obs"], fresh["obs"])
+    # an obs payload missing its sections entirely
+    assert compare_obs({}, _fresh_stub(tracked)["obs"])
 
 
 def test_accuracy_tolerates_cross_host_ulps():

@@ -1,0 +1,382 @@
+"""Unified round telemetry (DESIGN.md §15): the typed metrics registry,
+the JSONL span tracer, probe no-perturbation (NullProbe AND RecordingProbe
+bit-identity across vote x compact pairs, a chaos cell and the fleet),
+crash-safe trace merging across kill + resume, the field-complete
+``DataplaneStats.merge``, and the unified ``to_metrics`` emission path.
+"""
+
+import dataclasses
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.fediac import FediACConfig, aggregate_round, aggregate_stack
+from repro.netsim import FaultConfig, NetConfig, PacketTransport
+from repro.netsim.dataplane import DataplaneStats
+from repro.netsim.faults import CHAOS_STAT_FIELDS
+from repro.obs import (JaxProfiler, MetricsRegistry, NullProbe,
+                       RecordingProbe, SCHEMA_VERSION, Tracer, chrome_trace,
+                       load_trace, metric_kind, render_report,
+                       validate_records)
+from repro.obs.report import round_rows
+from repro.training import FLConfig, FLHistory, run_federated
+from repro.training.fl_loop import RoundRecord
+
+MODES = [("topk", "topk"), ("topk", "block"),
+         ("threshold", "topk"), ("threshold", "block")]
+
+
+@pytest.fixture(scope="module")
+def u_stack():
+    return jax.random.normal(jax.random.PRNGKey(1), (8, 2048)) ** 3
+
+
+@pytest.fixture(scope="module")
+def small_fl():
+    from repro.data import classification, partition_dirichlet
+    data = classification(n=1500, dim=16, n_classes=10, seed=0)
+    train, test = data.test_split(0.25)
+    return partition_dirichlet(train, 6, beta=0.5, seed=0), test
+
+
+def _flcfg(rounds=3, **kw):
+    base = dict(n_clients=6, rounds=rounds, local_steps=2,
+                aggregator="fediac",
+                agg_kwargs={"cfg": FediACConfig(a=2, bits=12)}, seed=0)
+    base.update(kw)
+    return FLConfig(**base)
+
+
+def _hist_equal(a: FLHistory, b: FLHistory) -> bool:
+    return (a.acc == b.acc and a.wall_clock == b.wall_clock
+            and a.traffic_mb == b.traffic_mb and a.loss == b.loss)
+
+
+# ---------------------------------------------------------------------------
+# metrics registry
+# ---------------------------------------------------------------------------
+
+def test_registry_types_and_routing():
+    reg = MetricsRegistry()
+    reg.record("retransmissions", 2)          # counter by taxonomy
+    reg.record("retransmissions", 3)
+    reg.record("consensus_k", 41)             # gauge: last value wins
+    reg.record("consensus_k", 17)
+    reg.record("phase1_s", 0.5)               # histogram
+    reg.record("phase1_s", 1.5)
+    assert reg.get("retransmissions").value() == 5.0
+    assert reg.get("consensus_k").value() == 17.0
+    h = reg.get("phase1_s").stats()
+    assert h["count"] == 2 and h["sum"] == 2.0
+    assert h["min"] == 0.5 and h["max"] == 1.5
+
+
+def test_registry_kind_conflict_raises():
+    reg = MetricsRegistry()
+    reg.counter("x").inc(1)
+    with pytest.raises(TypeError):
+        reg.gauge("x")
+
+
+def test_counter_rejects_negative():
+    reg = MetricsRegistry()
+    with pytest.raises(ValueError):
+        reg.counter("n").inc(-1)
+
+
+def test_registry_labels_and_snapshot_json():
+    reg = MetricsRegistry()
+    reg.record("acc", 0.5, cell="a", seed="0")
+    reg.record("acc", 0.7, cell="b", seed="0")
+    reg.record("votes_lost", 4, cell="a")
+    snap = reg.snapshot()
+    json.dumps(snap)                          # must be JSON-serializable
+    series = {tuple(sorted(s["labels"].items())): s["value"]
+              for s in snap["acc"]["series"]}
+    assert series[(("cell", "a"), ("seed", "0"))] == 0.5
+    assert series[(("cell", "b"), ("seed", "0"))] == 0.7
+
+
+def test_taxonomy_kinds():
+    assert metric_kind("arq_retransmits") == "counter"
+    assert metric_kind("overflow_slots") == "counter"
+    assert metric_kind("consensus_k") == "gauge"
+    assert metric_kind("register_occupancy") == "gauge"
+    assert metric_kind("upload_bytes") == "histogram"
+    assert metric_kind("never-heard-of-it") == "gauge"
+
+
+# ---------------------------------------------------------------------------
+# tracer + schema validation
+# ---------------------------------------------------------------------------
+
+def test_tracer_schema_valid_and_nested(tmp_path):
+    path = str(tmp_path / "t.jsonl")
+    tr = Tracer(path, run_attrs={"demo": 1})
+    with tr.span("round", round=1):
+        with tr.span("eval", round=1):
+            pass
+        tr.sim_span("phase1-vote", 0.0, 0.25, round=1)
+    tr.metric("acc", 0.5, kind="gauge", round=1)
+    tr.summary({"acc": {"kind": "gauge"}})
+    tr.close()
+    recs = load_trace(path)
+    assert validate_records(recs) == []
+    assert recs[0]["type"] == "meta" and recs[0]["schema"] == SCHEMA_VERSION
+    spans = {r["name"]: r for r in recs if r["type"] == "span"}
+    # the inner span closed first and carries the round span as parent
+    assert spans["eval"]["parent"] == spans["round"]["id"]
+    assert spans["phase1-vote"]["clock"] == "sim"
+    assert spans["round"]["clock"] == "host"
+
+
+def test_validation_catches_drift():
+    meta = {"type": "meta", "schema": SCHEMA_VERSION, "run": {}}
+    good_span = {"type": "span", "name": "x", "id": 0, "parent": None,
+                 "t0": 0.0, "t1": 1.0, "dur_s": 1.0, "clock": "host",
+                 "round": 1, "attrs": {}}
+    assert validate_records([meta, good_span]) == []
+    assert validate_records([]) != []
+    assert validate_records([good_span]) != []        # must open with meta
+    assert validate_records([{**meta, "schema": 999}]) != []
+    assert validate_records([meta, {**good_span, "clock": "moon"}]) != []
+    assert validate_records([meta, {**good_span, "t1": -2.0,
+                                    "dur_s": -2.0}]) != []
+    assert validate_records([meta, {"type": "metric", "name": "a",
+                                    "value": "NaNish", "kind": "gauge",
+                                    "labels": {}}]) != []
+    assert validate_records([meta, {"type": "wat"}]) != []
+
+
+def test_chrome_trace_export(tmp_path):
+    tr = Tracer()
+    with tr.span("round", round=1):
+        tr.sim_span("phase1-vote", 0.0, 0.5, round=1)
+    ct = chrome_trace(tr.records)
+    xs = [e for e in ct["traceEvents"] if e.get("ph") == "X"]
+    assert {e["pid"] for e in xs} == {0, 1}           # host + sim tracks
+    sim = next(e for e in xs if e["pid"] == 1)
+    assert sim["dur"] == pytest.approx(0.5e6)         # microseconds
+    json.dumps(ct)
+
+
+# ---------------------------------------------------------------------------
+# probe no-perturbation: bit-identity with and without recording
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("vote_mode,compact_mode", MODES)
+def test_probe_bit_identity_all_mode_pairs(u_stack, vote_mode, compact_mode):
+    """All four vote x compact pairs: the packet round with an attached
+    RecordingProbe (the maximal observer) returns bitwise the unprobed
+    round — and both match aggregate_stack."""
+    cfg = FediACConfig(vote_mode=vote_mode, compact_mode=compact_mode, a=2)
+    key = jax.random.PRNGKey(42)
+    delta0, res0, _, _ = aggregate_stack(u_stack, cfg, key)
+    plain = PacketTransport("fediac", {"cfg": cfg}, net=NetConfig())
+    r0 = plain.round(u_stack, None, key, round_idx=0)
+    probed = PacketTransport("fediac", {"cfg": cfg}, net=NetConfig())
+    with RecordingProbe(profiler=True) as probe:
+        probed.attach_probe(probe)
+        r1 = probed.round(u_stack, None, key, round_idx=0)
+        m = r1.to_metrics()
+    assert bool(jnp.all(delta0 == r0.delta) & jnp.all(delta0 == r1.delta))
+    assert bool(jnp.all(res0 == r0.residuals) & jnp.all(res0 == r1.residuals))
+    assert r0.stats.keys() == r1.stats.keys()
+    # the unified emission path exposes the consensus gauges
+    assert m["consensus_k"] > 0 and 0.0 < m["vote_agreement_frac"] <= 1.0
+    assert m["residual_norm"] >= 0.0 and m["n_up"] == 8.0
+
+
+def test_nullprobe_chaos_cell_bit_identical(small_fl):
+    """One chaos cell: fault-injected FL with the default probe, an
+    explicit NullProbe and a RecordingProbe all land on one history."""
+    clients, test = small_fl
+    net = FaultConfig(loss=0.05, crash_rate=0.15, dup_rate=0.2,
+                      ge_p_gb=0.05, participation=0.9, seed=4)
+    kw = dict(transport="packet", net=net)
+    h0 = run_federated(clients, test, _flcfg(**kw))
+    h_null = run_federated(clients, test, _flcfg(**kw), probe=NullProbe())
+    with RecordingProbe() as probe:
+        h_rec = run_federated(clients, test, _flcfg(**kw), probe=probe)
+        n_metrics = sum(r["type"] == "metric" for r in probe.tracer.records)
+    assert _hist_equal(h0, h_null) and _hist_equal(h0, h_rec)
+    assert n_metrics > 0                      # it actually observed
+
+
+def test_fleet_probe_bit_identical():
+    """Fleet cells: a recording probe changes no history (the traced
+    program and its ``keep`` aux set are probe-independent)."""
+    from repro.sweep.fleet import run_fleet_cells
+    from repro.sweep.spec import ScenarioSpec
+    specs = [ScenarioSpec(name="obs-a", n_clients=4, rounds=2),
+             ScenarioSpec(name="obs-b", n_clients=4, rounds=2)]
+    cells = [(s, 0) for s in specs]
+    plain = run_fleet_cells(cells)
+    with RecordingProbe() as probe:
+        probed = run_fleet_cells(cells, probe=probe)
+        snap = probe.registry.snapshot()
+    assert all(_hist_equal(a, b) for a, b in zip(plain, probed))
+    labels = {tuple(sorted(s["labels"].items()))
+              for s in snap["acc"]["series"]}
+    assert (("cell", "obs-a"), ("seed", "0")) in labels
+    assert (("cell", "obs-b"), ("seed", "0")) in labels
+
+
+def test_recorded_fl_trace_validates_and_reports(small_fl, tmp_path):
+    clients, test = small_fl
+    path = str(tmp_path / "run.jsonl")
+    with RecordingProbe(path, profiler=True) as probe:
+        run_federated(clients, test,
+                      _flcfg(transport="packet", net=NetConfig()),
+                      probe=probe)
+    recs = load_trace(path)
+    assert validate_records(recs) == []
+    rows = round_rows(recs)
+    assert [r["round"] for r in rows] == [1, 2, 3]
+    for r in rows:
+        assert r["sim_s"] > 0 and "phase1-vote" in r["phases"]
+        assert r["metrics"]["upload_bytes"] > 0
+        assert r["metrics"]["consensus_k"] > 0
+    report = render_report(recs)
+    assert "round" in report and "phase1-vote_s" in report
+    # the profiler summary reached the trace
+    summary = recs[-1]
+    assert summary["type"] == "summary" and "__jit__" in summary["metrics"]
+    assert summary["metrics"]["__jit__"]["local_round"]["compiles"] >= 1
+
+
+# ---------------------------------------------------------------------------
+# crash-safe traces: kill at round k + resume = one seamless stream
+# ---------------------------------------------------------------------------
+
+def test_kill_and_resume_trace_merges_seamlessly(small_fl, tmp_path):
+    clients, test = small_fl
+    ck = str(tmp_path / "run.npz")
+    trace = str(tmp_path / "run.jsonl")
+    with RecordingProbe(trace) as probe:               # the "killed" run
+        h_part = run_federated(clients, test, _flcfg(rounds=2, ckpt_path=ck),
+                               probe=probe)
+    with RecordingProbe(trace) as probe:               # resumed process
+        h_res = run_federated(clients, test,
+                              _flcfg(rounds=4, ckpt_path=ck, resume=True),
+                              probe=probe)
+    h_full = run_federated(clients, test, _flcfg(rounds=4))
+    assert _hist_equal(h_res, h_full)
+    recs = load_trace(trace)
+    assert validate_records(recs) == []                # merged file is valid
+    metas = [r for r in recs if r["type"] == "meta"]
+    assert len(metas) == 4                             # 2 attaches x 2 recs
+    resumed_meta = [m for m in metas
+                    if m.get("run", {}).get("resumed_from") is not None]
+    assert resumed_meta and resumed_meta[0]["run"]["resumed_from"] == 2
+    # rounds 1..4 each traced exactly once across the two processes
+    round_spans = sorted(r["round"] for r in recs
+                         if r["type"] == "span" and r["name"] == "round")
+    assert round_spans == [1, 2, 3, 4]
+    assert h_part.acc == h_full.acc[:2]
+
+
+# ---------------------------------------------------------------------------
+# stat-carrier unification
+# ---------------------------------------------------------------------------
+
+def test_dataplane_merge_field_complete():
+    """merge must handle every dataclass field — fields added later are
+    summed unless explicitly routed to max (the PR-2 silent-drop bug)."""
+    flds = [f.name for f in dataclasses.fields(DataplaneStats)]
+    a = DataplaneStats(**{f: 2 + i for i, f in enumerate(flds)})
+    b = DataplaneStats(**{f: 30 + i for i, f in enumerate(flds)})
+    m = a.merge(b)
+    for f in flds:
+        va, vb, vm = getattr(a, f), getattr(b, f), getattr(m, f)
+        if f in DataplaneStats._MAX_FIELDS:
+            assert vm == max(va, vb), f
+        else:
+            assert vm == va + vb, f
+    # overflow_slots was the PR-2 casualty: pin it explicitly
+    assert m.overflow_slots == a.overflow_slots + b.overflow_slots
+    assert DataplaneStats._MAX_FIELDS <= set(flds)
+
+
+def test_dataplane_to_metrics_covers_every_field():
+    st = DataplaneStats(votes_lost=3, passes=2, peak_live_slots=9,
+                        aggregation_ops=40, overflow_slots=1)
+    m = st.to_metrics()
+    assert m == {"votes_lost": 3.0, "passes": 2.0, "peak_live_slots": 9.0,
+                 "aggregation_ops": 40.0, "overflow_slots": 1.0}
+    assert all(isinstance(v, float) for v in m.values())
+
+
+def test_chaos_stat_fields_reach_transport_stats(u_stack):
+    tp = PacketTransport("fediac", {"cfg": FediACConfig(a=2)},
+                         net=FaultConfig(loss=0.0))
+    r = tp.round(u_stack, None, jax.random.PRNGKey(0), round_idx=0)
+    for f in CHAOS_STAT_FIELDS:
+        assert f in r.stats, f
+    m = r.to_metrics()
+    for f in CHAOS_STAT_FIELDS:
+        assert f in m, f
+
+
+def test_flhistory_structured_records_with_legacy_views():
+    h = FLHistory()
+    h.append_round(acc=0.1, wall_clock=1.0, traffic_mb=2.0, loss=0.9)
+    h.append_round(acc=0.2, wall_clock=3.0, traffic_mb=4.0, loss=0.8)
+    assert h.records == [RoundRecord(0.1, 1.0, 2.0, 0.9),
+                         RoundRecord(0.2, 3.0, 4.0, 0.8)]
+    assert h.acc == [0.1, 0.2] and h.loss == [0.9, 0.8]
+    assert h.wall_clock == [1.0, 3.0] and h.traffic_mb == [2.0, 4.0]
+    assert len(h) == 2
+    # both legacy constructor forms still work (ckpt + sweep round-trips)
+    assert FLHistory([0.1, 0.2], [1.0, 3.0], [2.0, 4.0], [0.9, 0.8]) == h
+    assert FLHistory(acc=[0.1, 0.2], wall_clock=[1.0, 3.0],
+                     traffic_mb=[2.0, 4.0], loss=[0.9, 0.8]) == h
+    assert h.acc_at_time(1.5) == 0.1
+    assert h.traffic_to_accuracy(0.15) == 4.0
+    assert h.records[0].to_metrics()["acc"] == 0.1
+
+
+def test_flhistory_ckpt_roundtrip_bit_exact(tmp_path):
+    from repro.checkpoint import load_run_state, save_run_state
+    h = FLHistory(acc=[0.125, 0.25], wall_clock=[1.5, 3.25],
+                  traffic_mb=[0.5, 1.0], loss=[2.0, 1.0])
+    p = str(tmp_path / "h.npz")
+    save_run_state(p, flat=jnp.zeros(3), e_stack=jnp.zeros((2, 3)),
+                   key=jax.random.PRNGKey(0), agg_state=None, round_idx=2,
+                   t_cum=3.25, mb_cum=1.0, history=h)
+    st = load_run_state(p)
+    assert FLHistory(**st["history"]) == h
+
+
+# ---------------------------------------------------------------------------
+# profiling hooks
+# ---------------------------------------------------------------------------
+
+def test_jaxprof_compile_vs_execute_split():
+    prof = JaxProfiler()
+    fn = prof.wrap(jax.jit(lambda x: x * 2), "double")
+    x = jnp.arange(4.0)
+    np.testing.assert_array_equal(np.asarray(fn(x)), np.asarray(x * 2))
+    fn(x + 1)
+    e = prof.entries["double"]
+    assert e.calls == 2 and e.compiles == 1 and e.cache_hits == 1
+    assert e.compile_wall_s > 0
+    snap = prof.snapshot()
+    json.dumps(snap)
+    assert snap["double"]["cache_hits"] == 1
+
+
+def test_aggregate_round_probe_spans(u_stack):
+    cfg = FediACConfig(a=2)
+    key = jax.random.PRNGKey(7)
+    d0, r0, _, _ = aggregate_round(u_stack, cfg, key)
+    with RecordingProbe() as probe:
+        d1, r1, _, _ = aggregate_round(u_stack, cfg, key, probe=probe)
+        names = [r["name"] for r in probe.tracer.records
+                 if r["type"] == "span"]
+    assert bool(jnp.all(d0 == d1)) and bool(jnp.all(r0 == r1))
+    assert "engine-monolithic" in names
