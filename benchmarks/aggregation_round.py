@@ -49,6 +49,112 @@ STREAM_GRID = [(1_000_000, 8, "topk", "topk", True),
                (10_000_000, 8, "topk", "topk", False)]
 REPS = 5
 
+# The sharded-engine scale cell (DESIGN.md §16).  The headline is *per-
+# device peak memory* at d ~ 1e8 — read from XLA's per-device
+# ``memory_analysis()`` of the compiled round, so the cell never has to
+# materialize 1e8-sized buffers — compared against the streaming engine
+# compiled for a single device in the same process.  The width is mesh-
+# and block-aligned (8 devices x 4096-blocks) so the engine is measured
+# without pad/slice copies, exactly as it runs at scale.  Wall-clock is
+# timed at a size both engines execute comfortably, and bit-identity vs
+# ``aggregate_stack`` is checked at a size the monolithic oracle holds.
+SHARD_DEVICES = 8
+SHARD_D = 8 * 4096 * 3052          # 100_007_936 ~ 1e8, pad-free on the mesh
+SHARD_TIMING_D = 8 * 4096 * 305    # ~1e7: the stream scale-cell size
+SHARD_BITIDENT_D = 8 * 4096 * 30   # ~1e6: oracle-comparable
+
+
+def bench_sharded_cell(*, d: int = SHARD_D, timing_d: int = SHARD_TIMING_D,
+                       bitident_d: int = SHARD_BITIDENT_D,
+                       devices: int = SHARD_DEVICES, reps: int = 3) -> dict:
+    """The sharded-engine scale cell.  Requires ``devices`` visible jax
+    devices — run through ``_sharded_measured_cell``, which forces the
+    host-platform device count in a spawned child."""
+    from repro.core.engines import EngineSpec
+    from repro.core.fediac import (FediACConfig, aggregate_round,
+                                   aggregate_stack)
+
+    assert len(jax.devices()) >= devices, (len(jax.devices()), devices)
+    vote_mode, compact_mode = "threshold", "block"
+    base_cfg = FediACConfig(vote_mode=vote_mode, compact_mode=compact_mode)
+    shard_cfg = FediACConfig(
+        vote_mode=vote_mode, compact_mode=compact_mode,
+        engine=EngineSpec(name="sharded", devices=devices))
+    stream_cfg = FediACConfig(vote_mode=vote_mode, compact_mode=compact_mode,
+                              engine="stream")
+    n = 8
+    key = jax.random.PRNGKey(0)
+
+    def round_fn(cfg):
+        return jax.jit(lambda u, k: aggregate_round(u, cfg, k)[:3])
+
+    def per_device_peak_mb(cfg, dd: int) -> float:
+        m = round_fn(cfg).lower(
+            jax.ShapeDtypeStruct((n, dd), jnp.float32),
+            jax.ShapeDtypeStruct(key.shape, key.dtype)
+        ).compile().memory_analysis()
+        return round((m.temp_size_in_bytes + m.argument_size_in_bytes +
+                      m.output_size_in_bytes - m.alias_size_in_bytes)
+                     / 2 ** 20, 1)
+
+    per_dev = per_device_peak_mb(shard_cfg, d)
+    stream_mb = per_device_peak_mb(stream_cfg, d)
+
+    ub = jax.block_until_ready(
+        jax.random.normal(jax.random.PRNGKey(1), (n, bitident_d)) ** 3)
+    ref = aggregate_stack(ub, base_cfg, key)
+    got = aggregate_round(ub, shard_cfg, key)
+    identical = (all(bool(jnp.all(a == b))
+                     for a, b in zip(ref[:3], got[:3]))
+                 and ref[3] == got[3])
+    del ref, got, ub
+
+    ut = jax.block_until_ready(
+        jax.random.normal(jax.random.PRNGKey(2), (n, timing_d)) ** 3)
+    fns = {}
+    for label, cfg in (("engine", shard_cfg), ("stream", stream_cfg)):
+        fn = round_fn(cfg)
+        jax.block_until_ready(fn(ut, key))  # compile + warm
+        fns[label] = (lambda fn=fn: jax.block_until_ready(fn(ut, key)))
+    times = interleaved_times(fns, reps=reps)
+    return {
+        "d": d, "n_clients": n, "vote_mode": vote_mode,
+        "compact_mode": compact_mode, "engine": "sharded",
+        "devices": devices, "reps": reps,
+        "engine_s": round(statistics.median(times["engine"]), 4),
+        "stream_s": round(statistics.median(times["stream"]), 4),
+        # paired ratio vs the stream engine at timing_d; fake host-platform
+        # devices share the machine's cores, so this is a fidelity record
+        # (gated by wide band), not a speedup claim.
+        "vs_stream": round(paired_ratio_median(times["stream"],
+                                               times["engine"]), 3),
+        "timing_d": timing_d, "bitident_d": bitident_d,
+        "bit_identical": identical,
+        "per_device_peak_mb": per_dev, "stream_peak_mb": stream_mb,
+        "mem_ratio": round(per_dev / stream_mb, 4),
+    }
+
+
+def _sharded_measured_cell(**kwargs) -> dict:
+    """The sharded cell always runs in its own spawned process: the fake
+    device count is forced via ``XLA_FLAGS``, which only takes effect at
+    jax init, and ``run_isolated``'s child inherits the patched env."""
+    from .memprof import run_isolated
+    devices = kwargs.get("devices", SHARD_DEVICES)
+    flag = f"--xla_force_host_platform_device_count={devices}"
+    old = os.environ.get("XLA_FLAGS")
+    os.environ["XLA_FLAGS"] = f"{old} {flag}" if old else flag
+    try:
+        cell, peak = run_isolated(
+            "benchmarks.aggregation_round:bench_sharded_cell", **kwargs)
+    finally:
+        if old is None:
+            os.environ.pop("XLA_FLAGS", None)
+        else:
+            os.environ["XLA_FLAGS"] = old
+    cell["peak_rss_mb"] = peak
+    return cell
+
 
 def bench_cell(d: int, n: int, vote_mode: str, compact_mode: str,
                *, engine: str = "monolithic", stream_chunk: int = 0,
@@ -128,12 +234,21 @@ def run(*, compare_seed: bool = True, smoke: bool = False, rss: bool = True,
                                     compare_seed=compare_seed and vs_seed,
                                     reps=min(reps, 3) if d > 2_000_000
                                     else reps))
+    shard_kwargs = (dict(d=SHARD_BITIDENT_D, timing_d=4 * 32_768,
+                         bitident_d=4 * 32_768, reps=2) if smoke else {})
+    cells.append(_sharded_measured_cell(**shard_kwargs))
     for cell in cells:
         tag = (f"agg/{cell['engine']}/{cell['vote_mode']}-"
                f"{cell['compact_mode']}/d{cell['d']}/n{cell['n_clients']}")
         extra = (f"_rss={cell['peak_rss_mb']}MB" if "peak_rss_mb" in cell
                  else "")
-        if "speedup" in cell:
+        if "mem_ratio" in cell:
+            rows.append((tag, cell["mem_ratio"],
+                         f"perdev={cell['per_device_peak_mb']}MB_stream="
+                         f"{cell['stream_peak_mb']}MB_vs_stream="
+                         f"{cell['vs_stream']}_bitident="
+                         f"{cell['bit_identical']}{extra}"))
+        elif "speedup" in cell:
             rows.append((tag, cell["speedup"],
                          f"engine={cell['engine_s']}s_seed={cell['seed_s']}s_"
                          f"bitident={cell['bit_identical']}{extra}"))

@@ -63,6 +63,14 @@ RSS_TOL = 2.0    # peak-RSS band: generous — the jax/XLA runtime floor and
                  # allocator behavior move between releases, but a streaming
                  # cell silently regressing to monolithic footprints will
                  # blow 2x
+# Sharded-engine per-device memory (DESIGN.md §16): the tracked scale
+# cell's per-device peak must stay ~1/devices of the streaming engine's
+# (measured 0.117 at d~1e8 on 8 devices).  The smoke cell runs ~100x
+# smaller, where the replicated fixed overheads (keys, histograms, the
+# XLA runtime floor) weigh more, so it gets a looser ceiling (measured
+# 0.184 at d~1e6).
+SHARD_MEM_FACTOR = 1.6        # tracked cell: mem_ratio <= 1.6 / devices
+SHARD_SMOKE_MEM_FACTOR = 2.4  # fresh smoke cell: <= 2.4 / devices
 
 
 # ---------------------------------------------------------------------------
@@ -76,14 +84,19 @@ def fresh_aggregation() -> dict:
     ``peak_rss_mb`` values are comparable.  The streaming cell forces a
     small ``stream_chunk`` so the d=1e5 smoke size still exercises a real
     multi-chunk scan (at the default chunk it would be a single chunk and
-    a streaming memory regression could hide)."""
-    from .aggregation_round import _measured_cell
+    a streaming memory regression could hide).  The sharded smoke cell
+    spawns its own 8-fake-device child (DESIGN.md §16) and re-measures the
+    per-device memory_analysis ratio and oracle bit-identity."""
+    from .aggregation_round import _measured_cell, _sharded_measured_cell
     return {
         "monolithic": _measured_cell(100_000, 8, "topk", "topk", rss=True,
                                      compare_seed=True, reps=2),
         "stream": _measured_cell(100_000, 8, "topk", "topk", rss=True,
                                  engine="stream", stream_chunk=1 << 14,
                                  compare_seed=True, reps=2),
+        "sharded": _sharded_measured_cell(d=8 * 4096 * 30,
+                                          timing_d=4 * 32_768,
+                                          bitident_d=4 * 32_768, reps=2),
     }
 
 
@@ -172,6 +185,13 @@ def compare_aggregation(tracked: dict, fresh: dict) -> list:
                              f"{cell['speedup']} < 1.0)")
         if "peak_rss_mb" not in cell:
             fails.append(f"tracked aggregation cell {tag} lacks peak_rss_mb")
+    shard = next((c for c in tracked["cells"]
+                  if c.get("engine") == "sharded"), None)
+    if shard is None:
+        fails.append("tracked aggregation baseline lacks the sharded "
+                     "scale cell")
+    else:
+        fails += _check_sharded_cell(shard, "tracked", SHARD_MEM_FACTOR)
     fm = fresh["monolithic"]
     ref = next((c for c in tracked["cells"]
                 if (c["d"], c["n_clients"], c["vote_mode"],
@@ -200,6 +220,30 @@ def compare_aggregation(tracked: dict, fresh: dict) -> list:
             fails.append(f"fresh {engine} aggregation peak_rss_mb "
                          f"{fc['peak_rss_mb']} outside {RSS_TOL}x band of "
                          f"tracked {ref['peak_rss_mb']}")
+    fs = fresh.get("sharded")
+    if fs is None:
+        fails.append("fresh aggregation payload lacks the sharded smoke "
+                     "cell")
+    else:
+        fails += _check_sharded_cell(fs, "fresh", SHARD_SMOKE_MEM_FACTOR)
+    return fails
+
+
+def _check_sharded_cell(cell: dict, label: str, mem_factor: float) -> list:
+    """The sharded-engine invariants (DESIGN.md §16), scale-independent:
+    oracle bit-identity and a per-device peak-memory ratio ~1/devices of
+    the streaming engine.  (Wall-clock vs stream is recorded in the cell
+    but not floored: fake host-platform devices share the machine's
+    cores, so the ratio says nothing portable about real meshes.)"""
+    fails = []
+    if not cell.get("bit_identical", False):
+        fails.append(f"{label} sharded aggregation cell is not "
+                     "bit-identical to aggregate_stack")
+    lim = mem_factor / cell.get("devices", 8)
+    if cell.get("mem_ratio", 1.0) > lim:
+        fails.append(f"{label} sharded per-device memory ratio "
+                     f"{cell.get('mem_ratio')} above {lim:.3f} "
+                     "(~1/devices of the streaming engine)")
     return fails
 
 
@@ -379,6 +423,11 @@ def inject_drift(tracked: dict) -> dict:
     if "peak_rss_mb" in drifted["aggregation"]["cells"][0]:
         drifted["aggregation"]["cells"][0]["peak_rss_mb"] = round(
             drifted["aggregation"]["cells"][0]["peak_rss_mb"] * 8, 1)
+    shard = next((c for c in drifted["aggregation"]["cells"]
+                  if c.get("engine") == "sharded"), None)
+    if shard is not None:   # sharding regressed to replicated footprints
+        shard["bit_identical"] = False
+        shard["mem_ratio"] = 1.0
     cell = next(c for c in drifted["dataplane"]["cells"]
                 if c["loss"] == 0.0 and c["participation"] == 1.0)
     cell["final_acc"] = round(cell["final_acc"] + 0.013, 4)

@@ -1,0 +1,58 @@
+"""The stable public surface of the reproduction.
+
+Import supported entry points from here::
+
+    from repro.api import FediACConfig, EngineSpec, run_federated
+
+Everything re-exported below is covered by the api-snapshot test
+(``tests/test_engines_api.py``): adding to this surface is a deliberate
+act (update the snapshot), removing or renaming breaks the test.  Module
+paths inside ``repro.*`` may move between releases; ``repro.api`` names
+do not.
+
+The surface, by layer:
+
+* **round engines** — :class:`FediACConfig` + :class:`EngineSpec` select
+  and tune an engine; :func:`aggregate_round` runs one stacked round on
+  it (``aggregate_stack`` is the monolithic oracle every engine is
+  bit-identical to); :func:`build_round_plan` exposes the shared
+  phase-1 → phase-2 consensus plan.
+* **training** — :func:`run_federated` drives the FL loop from an
+  :class:`FLConfig` (transport, network model, engine overrides),
+  returning an :class:`FLHistory`.
+* **sweeps** — :func:`run_sweep` executes a grid of
+  :class:`ScenarioSpec` cells through the fleet runner.
+* **network + fault models** — :class:`NetConfig` / :class:`FaultConfig`
+  configure the packet dataplane and its chaos extensions.
+* **observability** — :class:`RoundProbe` is the probe interface;
+  :class:`RecordingProbe` writes the JSONL trace, :data:`NULL_PROBE`
+  is the zero-overhead default.
+"""
+
+from __future__ import annotations
+
+from repro.core.engines import EngineSpec
+from repro.core.fediac import (FediACConfig, RoundPlan, TrafficStats,
+                               aggregate_round, aggregate_stack,
+                               build_round_plan)
+from repro.netsim.faults import FaultConfig
+from repro.netsim.policies import NetConfig
+from repro.obs.probe import (NULL_PROBE, NullProbe, RecordingProbe,
+                             RoundProbe)
+from repro.sweep.runner import run_sweep
+from repro.sweep.spec import ScenarioSpec
+from repro.training.fl_loop import FLConfig, FLHistory, run_federated
+
+__all__ = [
+    # round engines
+    "EngineSpec", "FediACConfig", "RoundPlan", "TrafficStats",
+    "aggregate_round", "aggregate_stack", "build_round_plan",
+    # training
+    "FLConfig", "FLHistory", "run_federated",
+    # sweeps
+    "ScenarioSpec", "run_sweep",
+    # network + fault models
+    "NetConfig", "FaultConfig",
+    # observability
+    "NULL_PROBE", "NullProbe", "RecordingProbe", "RoundProbe",
+]

@@ -1,7 +1,10 @@
 """FediAC core: voting-based consensus model compression (paper Sec. IV)."""
 
-from .fediac import (FediACConfig, RoundPlan, TrafficStats, aggregate_stack,
-                     build_round_plan, dense_allreduce, fediac_allreduce)
+from .engines import EngineSpec
+from .fediac import (FediACConfig, RoundPlan, TrafficStats, aggregate_round,
+                     aggregate_stack, build_round_plan, dense_allreduce,
+                     fediac_allreduce)
+from .shard_engine import aggregate_shard
 from .powerlaw import (PowerLawFit, fit_power_law, gamma_compression_error,
                        expected_uploaded, min_bits, scale_factor)
 from .quantize import dequantize, quantize, stochastic_round
@@ -10,7 +13,8 @@ from .voting import gia_from_counts, vote_mask
 from .baselines import make_aggregator
 
 __all__ = [
-    "FediACConfig", "TrafficStats", "aggregate_stack", "fediac_allreduce",
+    "EngineSpec", "FediACConfig", "TrafficStats", "aggregate_round",
+    "aggregate_stack", "aggregate_shard", "fediac_allreduce",
     "dense_allreduce", "RoundPlan", "build_round_plan", "aggregate_stack_seed",
     "PowerLawFit", "fit_power_law",
     "gamma_compression_error", "expected_uploaded", "min_bits", "scale_factor",

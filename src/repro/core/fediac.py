@@ -38,6 +38,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.compat import axis_size
+from repro.validate import (check_at_least, check_choice, check_interval,
+                            require)
 
 from . import compaction, voting
 from .quantize import dequantize, quantize, scale_factor
@@ -67,7 +69,10 @@ class FediACConfig:
                                   # e.g. 4x at N=2 pods)
     use_pallas: bool = False      # route the client round through the fused
                                   # Pallas kernels (gather_quant/vote_pack,
-                                  # DESIGN.md §3)
+                                  # DESIGN.md §3).  As an *engine selector*
+                                  # this field is deprecated — prefer
+                                  # EngineSpec(use_pallas=True); the low-
+                                  # level compress paths still read it.
     # sort-free mode for billion-parameter vectors (DESIGN.md §2): threshold
     # voting from the Def.1 power-law fit + cumsum block compaction.  The
     # exact top-k machinery needs O(d log d) sorts with ~20 GiB of workspace
@@ -84,12 +89,16 @@ class FediACConfig:
                                   # shard (paper-faithful); tensor: per-leaf
                                   # aggregation — peak memory follows the
                                   # largest tensor instead of the full shard
-    # engine selection for the stacked round (DESIGN.md §12): monolithic
-    # materializes [N, d] temporaries; stream runs the round as a chunk
-    # scan with O(N*chunk) peak memory, bit-identical output.
-    engine: str = "monolithic"    # monolithic | stream
-    stream_chunk: int = 0         # coords per streamed chunk (0 = default,
-                                  # repro.core.stream_engine.DEFAULT_CHUNK)
+    # engine selection for the stacked round (DESIGN.md §12, §16): a
+    # registered name or an engines.EngineSpec.  monolithic materializes
+    # [N, d] temporaries; stream runs the round as a chunk scan with
+    # O(N*chunk) peak memory; sharded splits the coordinate axis over a
+    # device mesh — all bit-identical.  Tuning knobs (stream chunk, mesh
+    # size/axis, pallas fusion) live on the EngineSpec.
+    engine: "str | EngineSpec" = "monolithic"  # monolithic | stream | sharded
+    stream_chunk: int = 0         # DEPRECATED: use EngineSpec(chunk=...);
+                                  # still forwards (engines.resolve warns
+                                  # once).  0 = engine default.
     # graceful degradation (DESIGN.md §14): when fewer than consensus_floor
     # coordinates survive the vote threshold (bursty loss / crashed voters
     # starved the GIA), fall back to the dense mask a = 1 for the round
@@ -97,6 +106,26 @@ class FediACConfig:
     # fallback; applied once per round inside build_round_plan, so every
     # engine (monolithic, stream, packet, allreduce) inherits it.
     consensus_floor: int = 0
+
+    def __post_init__(self):
+        check_interval("k_frac", self.k_frac, 0.0, 1.0, lo_open=True)
+        check_interval("capacity_frac", self.capacity_frac, 0.0, 1.0,
+                       lo_open=True)
+        check_interval("a_frac", self.a_frac, 0.0, 1.0, lo_open=True)
+        if self.a is not None:
+            check_at_least("a", self.a, 1)
+        check_at_least("bits", self.bits, 1)
+        check_at_least("vote_chunk", self.vote_chunk, 1)
+        check_at_least("block_size", self.block_size, 1)
+        check_at_least("stream_chunk", self.stream_chunk, 0)
+        check_at_least("consensus_floor", self.consensus_floor, 0)
+        require(math.isfinite(self.alpha), "alpha", "finite", self.alpha)
+        check_choice("vote_mode", self.vote_mode, ("topk", "threshold"))
+        check_choice("compact_mode", self.compact_mode, ("topk", "block"))
+        check_choice("vote_wire", self.vote_wire, ("count", "packed"))
+        check_choice("granularity", self.granularity, ("model", "tensor"))
+        from . import engines
+        engines.get(self.engine)   # registered name or EngineSpec
 
     def k(self, d: int) -> int:
         return max(1, int(round(self.k_frac * d)))
@@ -367,35 +396,26 @@ def aggregate_round(u_stack: jax.Array, cfg: FediACConfig, key: jax.Array,
                     *, a=None, probe=None):
     """Run one stacked round on the engine ``cfg.engine`` selects.
 
+    ``cfg.engine`` is a registered name or an ``engines.EngineSpec``:
     ``"monolithic"`` is :func:`aggregate_stack`; ``"stream"`` is the
-    chunk-scanned :func:`repro.core.stream_engine.aggregate_stream` —
-    same signature and return contract, bit-identical outputs, O(N·chunk)
-    peak memory (DESIGN.md §12).  The FL loop and the fleet runner pick
-    the engine through this single dispatch.
+    chunk-scanned :func:`repro.core.stream_engine.aggregate_stream`
+    (DESIGN.md §12); ``"sharded"`` is the coordinate-mesh
+    :func:`repro.core.shard_engine.aggregate_shard` (DESIGN.md §16) —
+    same signature and return contract, bit-identical outputs.  The FL
+    loop, the packet dataplane and the fleet runner all pick the engine
+    through this single :mod:`repro.core.engines` dispatch.
 
     ``probe`` (a ``repro.obs`` RoundProbe) puts a host span around the
     engine call for *eager* callers; it never enters the traced math, so
     outputs are probe-independent (DESIGN.md §15).  Leave it ``None``
     when calling under ``jit``/``vmap``.
     """
-    if cfg.engine == "stream":
-        from .stream_engine import aggregate_stream
-        engine = "stream"
-
-        def run():
-            return aggregate_stream(u_stack, cfg, key, a=a)
-    elif cfg.engine == "monolithic":
-        engine = "monolithic"
-
-        def run():
-            return aggregate_stack(u_stack, cfg, key, a=a)
-    else:
-        raise ValueError(f"unknown FediAC engine {cfg.engine!r} "
-                         "(expected 'monolithic' or 'stream')")
+    from . import engines
+    spec = engines.resolve(cfg)
     if probe is not None and getattr(probe, "enabled", False):
-        with probe.span(f"engine-{engine}"):
-            return run()
-    return run()
+        with probe.span(f"engine-{spec.name}"):
+            return engines.run(spec, u_stack, cfg, key, a=a)
+    return engines.run(spec, u_stack, cfg, key, a=a)
 
 
 # ---------------------------------------------------------------------------

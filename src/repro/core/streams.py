@@ -24,6 +24,16 @@ and applies jax's uint32→U[0,1) float mapping, giving
 ``jax.random.uniform(key, (d,), float32)[start:start + size]`` (pinned in
 ``tests/test_stream_engine.py``).  ``start`` may be a traced scalar; ``size``
 and ``d`` must be static.
+
+The sharded engine (DESIGN.md §16) needs two generalizations, both pure
+reindexings of the same counters:
+
+* :func:`uniform_at` — the draw at an *arbitrary* index vector (a shard's
+  consensus coordinates gather their compact-buffer slots' uniforms
+  without materializing the C-sized stream);
+* :func:`gumbel_block` — the Gumbel slice, replicating ``jax.random
+  .gumbel``'s exact ``-log(-log(uniform(minval=tiny)))`` composition so
+  per-shard vote scores match the monolithic d-sized draw bit for bit.
 """
 
 from __future__ import annotations
@@ -37,7 +47,7 @@ try:  # public home since jax 0.4.x
 except ImportError:  # pragma: no cover - very old/new layouts
     from jax._src.prng import threefry_2x32
 
-__all__ = ["uniform_block"]
+__all__ = ["uniform_block", "uniform_at", "gumbel_block"]
 
 
 def _key_data(key: jax.Array) -> jax.Array:
@@ -51,10 +61,10 @@ def _partitionable() -> bool:
     return bool(jax.config.jax_threefry_partitionable)
 
 
-def _bits_block(key: jax.Array, start, size: int, total: int) -> jax.Array:
-    """uint32 bits ``random_bits(key, 32, (total,))[start:start + size]``."""
-    start = jnp.asarray(start, jnp.uint32)
-    j = jnp.arange(size, dtype=jnp.uint32) + start
+def _bits_at(key: jax.Array, j: jax.Array, total: int) -> jax.Array:
+    """uint32 bits ``random_bits(key, 32, (total,))[j]`` for an arbitrary
+    uint32 index vector ``j`` (entries must be in [0, total))."""
+    size = j.shape[0]
     if _partitionable():
         # count pair is the 64-bit index split (hi, lo); hi == 0 for any
         # in-bounds total (total < 2**32), bits = lane0 ^ lane1.
@@ -69,6 +79,20 @@ def _bits_block(key: jax.Array, start, size: int, total: int) -> jax.Array:
     return jnp.where(first, out[:size], out[size:])
 
 
+def _bits_block(key: jax.Array, start, size: int, total: int) -> jax.Array:
+    """uint32 bits ``random_bits(key, 32, (total,))[start:start + size]``."""
+    start = jnp.asarray(start, jnp.uint32)
+    return _bits_at(key, jnp.arange(size, dtype=jnp.uint32) + start, total)
+
+
+def _bits_to_uniform(bits: jax.Array) -> jax.Array:
+    # jax's _uniform for float32 [0, 1): mantissa bits into [1, 2), shift
+    # down, clamp (the clamp is load-bearing in jax; replicated verbatim).
+    fb = (bits >> np.uint32(9)) | np.uint32(0x3F800000)
+    floats = jax.lax.bitcast_convert_type(fb, jnp.float32) - np.float32(1.0)
+    return jax.lax.max(np.float32(0.0), floats)
+
+
 def uniform_block(key: jax.Array, start, size: int, total: int) -> jax.Array:
     """float32[size] == ``jax.random.uniform(key, (total,))[start:start+size]``.
 
@@ -77,9 +101,37 @@ def uniform_block(key: jax.Array, start, size: int, total: int) -> jax.Array:
     costs ~2x the monolithic draw's threefry work — the price of O(chunk)
     live memory.
     """
-    bits = _bits_block(_key_data(key), start, size, total)
-    # jax's _uniform for float32 [0, 1): mantissa bits into [1, 2), shift
-    # down, clamp (the clamp is load-bearing in jax; replicated verbatim).
-    fb = (bits >> np.uint32(9)) | np.uint32(0x3F800000)
-    floats = jax.lax.bitcast_convert_type(fb, jnp.float32) - np.float32(1.0)
-    return jax.lax.max(np.float32(0.0), floats)
+    return _bits_to_uniform(_bits_block(_key_data(key), start, size, total))
+
+
+def uniform_at(key: jax.Array, idx: jax.Array, total: int) -> jax.Array:
+    """float32 == ``jax.random.uniform(key, (total,))[idx]`` for an
+    arbitrary int index vector (entries in [0, total), any order, repeats
+    allowed) — the gather form of :func:`uniform_block`.
+
+    The sharded engine uses it to read each consensus coordinate's
+    compact-slot uniform in place: the monolithic path draws C uniforms
+    and gathers them at the slot map, which a d-sharded device can
+    reproduce for its own coordinates without materializing the C-sized
+    stream (DESIGN.md §16).
+    """
+    return _bits_to_uniform(_bits_at(_key_data(key),
+                                     jnp.asarray(idx).astype(jnp.uint32),
+                                     total))
+
+
+def gumbel_block(key: jax.Array, start, size: int, total: int) -> jax.Array:
+    """float32[size] == ``jax.random.gumbel(key, (total,))[start:start+size]``.
+
+    Replicates jax's gumbel composition exactly: ``-log(-log(u))`` over
+    ``uniform(key, (total,), minval=tiny, maxval=1.)``, whose affine map
+    and clamp are applied here in the same operand order (``maxval -
+    minval`` rounds to 1.0f in float32 — kept literal so the arithmetic
+    matches bit for bit).  This is what lets the sharded engine score its
+    coordinate slice of a client's d-sized Gumbel vote draw without
+    materializing the other shards' noise.
+    """
+    tiny = np.float32(np.finfo(np.float32).tiny)
+    u = _bits_to_uniform(_bits_block(_key_data(key), start, size, total))
+    u = jax.lax.max(tiny, u * (np.float32(1.0) - tiny) + tiny)
+    return -jnp.log(-jnp.log(u))

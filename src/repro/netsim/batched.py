@@ -46,7 +46,8 @@ from repro.core.fediac import (FediACConfig, build_round_plan,
                                client_vote_stack, phase2_compress,
                                plan_wants_dense_mask, round_traffic,
                                scatter_sum)
-from repro.core import compaction
+from repro.core import compaction, engines
+from repro.core.shard_engine import shard_compress_stack
 from repro.core.stream_engine import stream_compress_stack
 from repro.switch import n_packets, packet_sizes
 
@@ -148,10 +149,10 @@ def make_fediac_packet_core(cfg: FediACConfig, net: NetConfig,
     ``aux`` carries the masks, vote counts and traced accounting scalars
     the Python wrapper prices the round from.
     """
-    if cfg.engine not in ("monolithic", "stream"):
-        raise ValueError(f"unknown FediAC engine {cfg.engine!r}")
+    spec = engines.resolve(cfg)
     n = int(n_clients)
-    stream = cfg.engine == "stream"
+    stream = spec.name == "stream"
+    sharded = spec.name == "sharded"
     topk = cfg.compact_mode != "block"
     leaf_of = leaf_assignment(n, net.n_leaves)
     slowdown = float(net.straggler_slowdown)
@@ -213,10 +214,15 @@ def make_fediac_packet_core(cfg: FediACConfig, net: NetConfig,
         a = dyn["a_table"][n_up]
         plan = build_round_plan(counts, cfg, n, a=a,
                                 with_dense_mask=(plan_wants_dense_mask(cfg)
-                                                 or (stream and topk)),
-                                with_slot_map=stream and topk)
+                                                 or ((stream or sharded)
+                                                     and topk)),
+                                with_slot_map=(stream or sharded) and topk)
         if stream:
             q_bufs, res = stream_compress_stack(u_stack, cfg, f, q_keys, plan)
+        elif sharded:
+            q_bufs, res = shard_compress_stack(
+                u_stack, cfg, f, q_keys, plan,
+                devices=spec.devices or None, axis=spec.axis)
         else:
             compress = phase2_compress(cfg)
             q_bufs, res = jax.vmap(

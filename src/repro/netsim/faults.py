@@ -41,20 +41,22 @@ Each fault model is built to make that structural rather than incidental:
 
 from __future__ import annotations
 
-import math
 from dataclasses import dataclass
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import compaction
+from repro.core import compaction, engines
 from repro.core.fediac import (FediACConfig, build_round_plan,
                                client_vote_stack, phase2_compress,
                                plan_wants_dense_mask, round_traffic,
                                scatter_sum)
+from repro.core.shard_engine import shard_compress_stack
 from repro.core.stream_engine import stream_compress_stack
 from repro.switch import n_packets
+from repro.validate import (check_at_least, check_choice,
+                            check_finite_at_least, check_interval, require)
 
 from .batched import (PACKET_DYN_FIELDS, packet_dyn, scale_num_table)
 from .dataplane import n_windows, slot_window
@@ -158,29 +160,16 @@ class FaultConfig(NetConfig):
         super().__post_init__()
         for name in ("ge_p_gb", "ge_p_bg", "ge_loss_bad", "crash_rate",
                      "crash_p2_frac", "dup_rate", "reg_reset_rate"):
-            v = getattr(self, name)
-            if not 0.0 <= v <= 1.0:
-                raise ValueError(f"{name} must be in [0, 1], got {v}")
-        if self.ge_p_gb > 0.0 and self.ge_p_bg <= 0.0:
-            raise ValueError(
-                "ge_p_bg must be > 0 when ge_p_gb > 0 (the bad state must "
-                "be escapable or the chain absorbs)")
-        if not (math.isfinite(self.reorder_jitter_s)
-                and self.reorder_jitter_s >= 0.0):
-            raise ValueError(
-                f"reorder_jitter_s must be finite and >= 0, got "
-                f"{self.reorder_jitter_s}")
-        if self.register_policy not in REGISTER_POLICIES:
-            raise ValueError(
-                f"register_policy must be one of {REGISTER_POLICIES}, got "
-                f"{self.register_policy!r}")
-        if self.quorum_floor < 0:
-            raise ValueError("quorum_floor must be >= 0 (0 disables)")
-        if self.round_retries < 0:
-            raise ValueError("round_retries must be >= 0")
-        if not (math.isfinite(self.backoff_s) and self.backoff_s >= 0.0):
-            raise ValueError(
-                f"backoff_s must be finite and >= 0, got {self.backoff_s}")
+            check_interval(name, getattr(self, name), 0.0, 1.0)
+        require(not (self.ge_p_gb > 0.0 and self.ge_p_bg <= 0.0),
+                "ge_p_bg", "> 0 when ge_p_gb > 0 (the bad state must be "
+                "escapable or the chain absorbs)", self.ge_p_bg)
+        check_finite_at_least("reorder_jitter_s", self.reorder_jitter_s, 0.0)
+        check_choice("register_policy", self.register_policy,
+                     REGISTER_POLICIES)
+        check_at_least("quorum_floor", self.quorum_floor, 0)
+        check_at_least("round_retries", self.round_retries, 0)
+        check_finite_at_least("backoff_s", self.backoff_s, 0.0)
 
 
 def gilbert_elliott_stationary(p_gb: float, p_bg: float) -> float:
@@ -281,10 +270,10 @@ def make_chaos_packet_core(cfg: FediACConfig, net: FaultConfig,
     chaos extras ``crashed`` / ``duplicates`` / ``resets`` /
     ``overflow_slots`` / ``aborted`` / ``attempts``.
     """
-    if cfg.engine not in ("monolithic", "stream"):
-        raise ValueError(f"unknown FediAC engine {cfg.engine!r}")
+    spec = engines.resolve(cfg)
     n = int(n_clients)
-    stream = cfg.engine == "stream"
+    stream = spec.name == "stream"
+    sharded = spec.name == "sharded"
     topk = cfg.compact_mode != "block"
     leaf_of = leaf_assignment(n, net.n_leaves)
     slowdown = float(net.straggler_slowdown)
@@ -412,10 +401,15 @@ def make_chaos_packet_core(cfg: FediACConfig, net: FaultConfig,
         a = dyn["a_table"][n_up]
         plan = build_round_plan(counts, cfg, n, a=a,
                                 with_dense_mask=(plan_wants_dense_mask(cfg)
-                                                 or (stream and topk)),
-                                with_slot_map=stream and topk)
+                                                 or ((stream or sharded)
+                                                     and topk)),
+                                with_slot_map=(stream or sharded) and topk)
         if stream:
             q_bufs, res = stream_compress_stack(u_stack, cfg, f, q_keys, plan)
+        elif sharded:
+            q_bufs, res = shard_compress_stack(
+                u_stack, cfg, f, q_keys, plan,
+                devices=spec.devices or None, axis=spec.axis)
         else:
             compress = phase2_compress(cfg)
             q_bufs, res = jax.vmap(

@@ -32,6 +32,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.switch.packets import MTU
+from repro.validate import (check_at_least, check_finite_at_least,
+                            check_interval, check_positive_finite, require)
 
 __all__ = ["NetConfig", "net_round_key", "sample_participants",
            "sample_stragglers", "INT32_MAX", "INT32_MIN",
@@ -75,36 +77,20 @@ class NetConfig:
     seed: int = 0
 
     def __post_init__(self):
-        if not 0.0 <= self.loss < 1.0:
-            raise ValueError(f"loss must be in [0, 1), got {self.loss}")
-        if not 0.0 < self.participation <= 1.0:
-            raise ValueError("participation must be in (0, 1]")
-        if not 0.0 <= self.straggler_frac <= 1.0:
-            raise ValueError("straggler_frac must be in [0, 1]")
-        if not (math.isfinite(self.straggler_slowdown)
-                and self.straggler_slowdown >= 1.0):
-            raise ValueError(
-                f"straggler_slowdown must be a finite factor >= 1, got "
-                f"{self.straggler_slowdown}")
-        if self.vote_deadline_s is not None and not (
-                math.isfinite(self.vote_deadline_s)
-                and self.vote_deadline_s > 0.0):
-            raise ValueError(
-                f"vote_deadline_s must be a positive finite number of "
-                f"seconds (or None to wait for everyone), got "
-                f"{self.vote_deadline_s}")
-        if not (math.isfinite(self.rto_s) and self.rto_s > 0.0):
-            raise ValueError(
-                f"rto_s must be a positive finite retransmission timeout, "
-                f"got {self.rto_s}")
-        if self.max_retries < 1:
-            raise ValueError(
-                f"max_retries must be >= 1 (the first attempt counts), got "
-                f"{self.max_retries}")
-        if self.n_leaves < 1:
-            raise ValueError("n_leaves must be >= 1")
-        if self.memory_slots < 1 or self.mtu < 1:
-            raise ValueError("memory_slots and mtu must be positive")
+        check_interval("loss", self.loss, 0.0, 1.0, hi_open=True)
+        check_interval("participation", self.participation, 0.0, 1.0,
+                       lo_open=True)
+        check_interval("straggler_frac", self.straggler_frac, 0.0, 1.0)
+        check_finite_at_least("straggler_slowdown", self.straggler_slowdown,
+                              1.0)
+        if self.vote_deadline_s is not None:
+            check_positive_finite("vote_deadline_s", self.vote_deadline_s)
+        check_positive_finite("rto_s", self.rto_s)
+        require(self.max_retries >= 1, "max_retries",
+                ">= 1 (the first attempt counts)", self.max_retries)
+        check_at_least("n_leaves", self.n_leaves, 1)
+        check_at_least("memory_slots", self.memory_slots, 1)
+        check_at_least("mtu", self.mtu, 1)
 
 
 def net_round_key(seed, round_idx) -> jax.Array:

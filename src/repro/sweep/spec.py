@@ -22,6 +22,9 @@ from dataclasses import dataclass, replace
 
 from repro.core.fediac import FediACConfig
 from repro.data import classification, partition_dirichlet, partition_iid
+from repro.validate import (check_at_least, check_choice,
+                            check_finite_at_least, check_interval,
+                            check_positive_finite)
 
 __all__ = ["ScenarioSpec", "make_task", "cell_key"]
 
@@ -61,8 +64,9 @@ class ScenarioSpec:
     capacity_frac: float = 0.05
     vote_mode: str = "topk"        # topk | threshold
     compact_mode: str = "topk"     # topk | block
-    engine: str = "monolithic"     # monolithic | stream (chunk-scanned
-                                   # round, bit-identical; DESIGN.md §12)
+    engine: object = "monolithic"  # registered engine name (monolithic |
+                                   # stream | sharded) or an EngineSpec —
+                                   # all bit-identical (DESIGN.md §12, §16)
     # --- baseline aggregator kwargs, as a hashable (key, value) tuple
     agg_overrides: tuple = ()
     # --- task geometry
@@ -108,6 +112,43 @@ class ScenarioSpec:
     round_retries: int = 2
     backoff_s: float = 0.1
     consensus_floor: int = 0       # FediACConfig dense-mask fallback floor
+
+    def __post_init__(self):
+        check_interval("k_frac", self.k_frac, 0.0, 1.0, lo_open=True)
+        check_interval("capacity_frac", self.capacity_frac, 0.0, 1.0,
+                       lo_open=True)
+        check_interval("a_frac", self.a_frac, 0.0, 1.0, lo_open=True)
+        if self.a is not None:
+            check_at_least("a", self.a, 1)
+        check_at_least("bits", self.bits, 1)
+        check_choice("vote_mode", self.vote_mode, ("topk", "threshold"))
+        check_choice("compact_mode", self.compact_mode, ("topk", "block"))
+        for name in ("n_clients", "rounds", "local_steps", "batch",
+                     "data_n", "data_dim", "data_classes", "n_leaves"):
+            check_at_least(name, getattr(self, name), 1)
+        check_positive_finite("lr0", self.lr0)
+        check_positive_finite("lr_tau", self.lr_tau)
+        check_positive_finite("beta", self.beta)
+        check_interval("test_frac", self.test_frac, 0.0, 1.0, lo_open=True,
+                       hi_open=True)
+        check_choice("dist", self.dist, ("iid", "noniid"))
+        check_choice("switch", self.switch, ("high", "low"))
+        check_finite_at_least("local_train_s", self.local_train_s, 0.0)
+        check_choice("transport", self.transport, ("memory", "packet"))
+        check_interval("loss", self.loss, 0.0, 1.0, hi_open=True)
+        check_interval("participation", self.participation, 0.0, 1.0,
+                       lo_open=True)
+        check_interval("straggler_frac", self.straggler_frac, 0.0, 1.0)
+        for name in ("ge_p_gb", "ge_p_bg", "ge_loss_bad", "crash_rate",
+                     "crash_p2_frac", "dup_rate", "reg_reset_rate"):
+            check_interval(name, getattr(self, name), 0.0, 1.0)
+        check_finite_at_least("reorder_jitter_s", self.reorder_jitter_s, 0.0)
+        check_finite_at_least("backoff_s", self.backoff_s, 0.0)
+        check_at_least("quorum_floor", self.quorum_floor, 0)
+        check_at_least("round_retries", self.round_retries, 0)
+        check_at_least("consensus_floor", self.consensus_floor, 0)
+        from repro.core import engines
+        engines.get(self.engine)   # registered name or EngineSpec
 
     # ------------------------------------------------------------------
     def fediac_config(self) -> FediACConfig:
@@ -195,11 +236,19 @@ class ScenarioSpec:
         fixed-shape packet round core (``netsim.batched``, DESIGN.md §13) —
         loss/participation/straggler rates ride as per-cell traced scalars.
         The streaming engine keeps the sequential path (its chunk scan is
-        not exercised under the fleet vmap)."""
+        not exercised under the fleet vmap); the sharded engine batches —
+        its ``shard_map`` lifts through the fleet ``vmap`` (DESIGN.md
+        §16)."""
         from repro.core.baselines import _CORES
         if self.transport == "packet":
-            return self.algorithm == "fediac" and self.engine == "monolithic"
+            return (self.algorithm == "fediac"
+                    and self.engine_name() in ("monolithic", "sharded"))
         return self.transport == "memory" and self.algorithm in _CORES
+
+    def engine_name(self) -> str:
+        """The resolved engine-registry name of ``self.engine``."""
+        from repro.core import engines
+        return engines.get(self.engine).name
 
     def batch_signature(self) -> tuple:
         """Hashable key of everything that fixes the compiled fleet program.

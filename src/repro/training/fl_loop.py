@@ -18,8 +18,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.checkpoint import load_run_state, save_run_state
+from repro.core import engines
 from repro.core.baselines import make_transport
 from repro.core.fediac import FediACConfig
+from repro.validate import (check_at_least, check_choice,
+                            check_finite_at_least, check_positive_finite)
 from repro.obs.probe import as_probe
 from repro.switch import SwitchProfile, client_rates, n_packets, round_wall_clock
 
@@ -97,13 +100,14 @@ class FLConfig:
     lr_tau: float = 20.0           # lr_t = lr0 / (1 + sqrt(t)/tau)   (paper V-A1)
     aggregator: str = "fediac"
     agg_kwargs: dict = field(default_factory=dict)
-    use_pallas: bool | None = None  # override FediACConfig.use_pallas: route
-                                    # the aggregation round through the fused
-                                    # Pallas kernels (None = leave cfg as-is)
-    engine: str | None = None       # override FediACConfig.engine: "stream"
-                                    # runs the aggregation as the chunked
-                                    # O(N*chunk)-memory scan (DESIGN.md §12),
-                                    # bit-identical to "monolithic"
+    use_pallas: bool | None = None  # DEPRECATED: use engine=EngineSpec(
+                                    # use_pallas=True).  Still forwards into
+                                    # FediACConfig.use_pallas, warning once.
+    engine: object | None = None    # override FediACConfig.engine: a
+                                    # registered name ("monolithic" |
+                                    # "stream" | "sharded") or a
+                                    # core.engines.EngineSpec; every engine
+                                    # is bit-identical (DESIGN.md §12, §16)
     switch: SwitchProfile = field(default_factory=SwitchProfile.high)
     local_train_s: float = 0.1     # paper: 0.1 (FEMNIST) .. 3 (CIFAR-100)
     transport: str = "memory"      # "memory" | "packet"  (DESIGN.md §9)
@@ -115,6 +119,19 @@ class FLConfig:
     ckpt_every: int = 1            # save every k completed rounds
     resume: bool = False           # restore ckpt_path (if present) and
                                    # continue — bit-exact vs uninterrupted
+
+    def __post_init__(self):
+        check_at_least("n_clients", self.n_clients, 1)
+        check_at_least("rounds", self.rounds, 0)
+        check_at_least("local_steps", self.local_steps, 1)
+        check_at_least("batch", self.batch, 1)
+        check_positive_finite("lr0", self.lr0)
+        check_positive_finite("lr_tau", self.lr_tau)
+        check_finite_at_least("local_train_s", self.local_train_s, 0.0)
+        check_choice("transport", self.transport, ("memory", "packet"))
+        check_at_least("ckpt_every", self.ckpt_every, 1)
+        if self.engine is not None:
+            engines.get(self.engine)   # registered name or EngineSpec
 
 
 @dataclass
@@ -285,9 +302,12 @@ def run_federated(clients, test, flcfg: FLConfig, *, hidden=(128, 64),
     if flcfg.aggregator == "fediac":
         overrides = {}
         if flcfg.use_pallas is not None:
+            engines._warn_once(
+                "FLConfig.use_pallas",
+                "pass FLConfig(engine=EngineSpec(name=..., use_pallas=True))")
             overrides["use_pallas"] = flcfg.use_pallas
         if flcfg.engine is not None:
-            overrides["engine"] = flcfg.engine
+            overrides["engine"] = engines.get(flcfg.engine)
         if overrides:
             base_cfg = agg_kwargs.get("cfg", FediACConfig())
             agg_kwargs["cfg"] = replace(base_cfg, **overrides)
@@ -334,7 +354,9 @@ def run_federated(clients, test, flcfg: FLConfig, *, hidden=(128, 64),
 
     if probe.enabled:
         probe.run_start(kind="fl_run", aggregator=flcfg.aggregator,
-                        transport=flcfg.transport, engine=flcfg.engine,
+                        transport=flcfg.transport,
+                        engine=(engines.get(flcfg.engine).name
+                                if flcfg.engine is not None else None),
                         n_clients=n, rounds=flcfg.rounds, seed=flcfg.seed,
                         resumed_from=start_round if start_round else None)
 

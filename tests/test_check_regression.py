@@ -24,6 +24,14 @@ def _tracked_stub():
                    "peak_rss_mb": 1600.0}
     for k in ("seed_s", "speedup", "bit_identical"):
         stream_cell.pop(k)  # engine-only scale cell: the seed cannot run it
+    shard_cell = {"d": 100_007_936, "n_clients": 8,
+                  "vote_mode": "threshold", "compact_mode": "block",
+                  "engine": "sharded", "devices": 8, "reps": 3,
+                  "engine_s": 20.0, "stream_s": 6.0, "vs_stream": 0.3,
+                  "timing_d": 9_994_240, "bitident_d": 983_040,
+                  "bit_identical": True, "per_device_peak_mb": 900.0,
+                  "stream_peak_mb": 7700.0, "mem_ratio": 0.117,
+                  "peak_rss_mb": 2000.0}
     fleet_cell = {"name": "dataplane-l0-p1", "loss": 0.0,
                   "participation": 1.0, "final_acc": 0.81, "host_s": 5.4,
                   "bit_identical": True}
@@ -43,7 +51,7 @@ def _tracked_stub():
            "overhead": {"overhead_ratio": 1.05, "overhead_max": 1.10,
                         "within_budget": True}}
     return {
-        "aggregation": {"cells": [agg_cell, stream_cell]},
+        "aggregation": {"cells": [agg_cell, stream_cell, shard_cell]},
         "dataplane": {"rounds": 12, "memory_transport_acc": 0.81,
                       "throughput": {"packets_per_s": 1_000_000},
                       "cells": [dp_cell,
@@ -60,10 +68,18 @@ def _tracked_stub():
 
 def _fresh_stub(tracked):
     mono = dict(tracked["aggregation"]["cells"][0])
+    shard_smoke = {"d": 983_040, "n_clients": 8, "vote_mode": "threshold",
+                   "compact_mode": "block", "engine": "sharded",
+                   "devices": 8, "reps": 2, "engine_s": 0.4,
+                   "stream_s": 0.2, "vs_stream": 0.5, "timing_d": 131_072,
+                   "bitident_d": 131_072, "bit_identical": True,
+                   "per_device_peak_mb": 19.8, "stream_peak_mb": 107.4,
+                   "mem_ratio": 0.184, "peak_rss_mb": 600.0}
     return {
         "aggregation": {"monolithic": mono,
                         "stream": {**mono, "engine": "stream",
-                                   "engine_s": 0.06}},
+                                   "engine_s": 0.06},
+                        "sharded": shard_smoke},
         "dataplane": {"lossless": dict(tracked["dataplane"]["cells"][0]),
                       "memory_acc": tracked["dataplane"]
                       ["memory_transport_acc"],
@@ -125,6 +141,26 @@ def test_gate_red_on_specific_regressions():
     # fresh peak RSS blowing the 2x band (streaming memory regression)
     fresh = _fresh_stub(tracked)
     fresh["aggregation"]["monolithic"]["peak_rss_mb"] *= 3
+    assert compare_aggregation(tracked["aggregation"], fresh["aggregation"])
+    # the tracked sharded scale cell disappearing from the baseline
+    noshard = _tracked_stub()
+    noshard["aggregation"]["cells"] = [
+        c for c in noshard["aggregation"]["cells"]
+        if c.get("engine") != "sharded"]
+    fresh = _fresh_stub(tracked)
+    assert compare_aggregation(noshard["aggregation"], fresh["aggregation"])
+    # sharded per-device memory regressing toward replicated footprints
+    fat = _tracked_stub()
+    next(c for c in fat["aggregation"]["cells"]
+         if c.get("engine") == "sharded")["mem_ratio"] = 0.5
+    assert compare_aggregation(fat["aggregation"], fresh["aggregation"])
+    # the fresh sharded smoke cell losing oracle bit-identity
+    fresh = _fresh_stub(tracked)
+    fresh["aggregation"]["sharded"]["bit_identical"] = False
+    assert compare_aggregation(tracked["aggregation"], fresh["aggregation"])
+    # ... or blowing its (looser) smoke memory ceiling
+    fresh = _fresh_stub(tracked)
+    fresh["aggregation"]["sharded"]["mem_ratio"] = 0.4
     assert compare_aggregation(tracked["aggregation"], fresh["aggregation"])
     # accuracy drift in the lossless dataplane cell
     fresh = _fresh_stub(tracked)

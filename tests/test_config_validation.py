@@ -1,0 +1,128 @@
+"""Shared config validation (``repro.validate``): every field bound raises.
+
+One parametrized sweep per config class.  The helpers guarantee a
+uniform failure shape — ``ValueError: <field> must be <requirement>,
+got <value>`` — so each case also checks the field name appears in the
+message.
+"""
+
+import math
+
+import pytest
+
+from repro.core.fediac import FediACConfig
+from repro.netsim import FaultConfig, NetConfig
+from repro.sweep import ScenarioSpec
+from repro.training import FLConfig
+from repro.validate import (check_at_least, check_choice,
+                            check_finite_at_least, check_interval,
+                            check_positive_finite, require)
+
+NAN = float("nan")
+
+
+def _rejects(cls, kw):
+    field = next(iter(kw))
+    with pytest.raises(ValueError, match=field):
+        cls(**kw)
+
+
+@pytest.mark.parametrize("kw", [
+    {"k_frac": 0.0}, {"k_frac": 1.5}, {"k_frac": -0.1}, {"k_frac": NAN},
+    {"capacity_frac": 0.0}, {"capacity_frac": 1.01},
+    {"a_frac": 0.0}, {"a_frac": 2.0},
+    {"a": 0}, {"a": -3},
+    {"bits": 0}, {"vote_chunk": 0}, {"block_size": 0},
+    {"stream_chunk": -1}, {"consensus_floor": -1},
+    {"alpha": float("inf")}, {"alpha": NAN},
+    {"vote_mode": "best"}, {"compact_mode": "dense"},
+    {"vote_wire": "tcp"}, {"granularity": "layer"},
+])
+def test_fediac_config_rejects(kw):
+    _rejects(FediACConfig, kw)
+
+
+@pytest.mark.parametrize("kw", [
+    {"n_clients": 0}, {"rounds": -1}, {"local_steps": 0}, {"batch": 0},
+    {"lr0": 0.0}, {"lr0": -1.0}, {"lr0": NAN},
+    {"lr_tau": 0.0}, {"local_train_s": -0.1}, {"local_train_s": NAN},
+    {"transport": "carrier-pigeon"}, {"ckpt_every": 0},
+])
+def test_fl_config_rejects(kw):
+    _rejects(FLConfig, kw)
+
+
+@pytest.mark.parametrize("kw", [
+    {"k_frac": 0.0}, {"capacity_frac": 1.5}, {"a_frac": -0.2}, {"a": 0},
+    {"bits": 0}, {"vote_mode": "x"}, {"compact_mode": "x"},
+    {"n_clients": 0}, {"rounds": 0}, {"local_steps": 0}, {"batch": 0},
+    {"data_n": 0}, {"data_dim": 0}, {"data_classes": 0}, {"n_leaves": 0},
+    {"lr0": 0.0}, {"lr_tau": -1.0}, {"beta": 0.0},
+    {"test_frac": 0.0}, {"test_frac": 1.0},
+    {"dist": "zipf"}, {"switch": "mid"}, {"transport": "x"},
+    {"local_train_s": -1.0},
+    {"loss": 1.0}, {"loss": -0.1}, {"participation": 0.0},
+    {"straggler_frac": 1.1},
+    {"ge_p_gb": -0.1}, {"ge_p_bg": 2.0}, {"ge_loss_bad": 1.5},
+    {"crash_rate": -1.0}, {"crash_p2_frac": 2.0}, {"dup_rate": 1.2},
+    {"reg_reset_rate": -0.5},
+    {"reorder_jitter_s": -1.0}, {"backoff_s": NAN},
+    {"quorum_floor": -1}, {"round_retries": -1}, {"consensus_floor": -2},
+])
+def test_scenario_spec_rejects(kw):
+    _rejects(ScenarioSpec, kw)
+
+
+@pytest.mark.parametrize("kw", [
+    {"loss": 1.0}, {"loss": -0.01}, {"participation": 0.0},
+    {"participation": 1.5}, {"straggler_frac": -0.1},
+    {"straggler_slowdown": 0.5}, {"straggler_slowdown": float("inf")},
+    {"vote_deadline_s": 0.0}, {"vote_deadline_s": -1.0},
+    {"vote_deadline_s": float("inf")},
+    {"rto_s": 0.0}, {"rto_s": NAN},
+    {"max_retries": 0}, {"n_leaves": 0}, {"memory_slots": 0}, {"mtu": 0},
+])
+def test_net_config_rejects(kw):
+    _rejects(NetConfig, kw)
+
+
+@pytest.mark.parametrize("kw", [
+    {"ge_p_gb": 1.5}, {"ge_p_bg": -0.1}, {"ge_loss_bad": 2.0},
+    {"crash_rate": -0.5}, {"crash_p2_frac": 1.1}, {"dup_rate": 2.0},
+    {"reg_reset_rate": -1.0},
+    {"ge_p_gb": 0.1, "ge_p_bg": 0.0},       # absorbing bad state
+    {"reorder_jitter_s": -1.0}, {"register_policy": "clamp"},
+    {"quorum_floor": -1}, {"round_retries": -1}, {"backoff_s": NAN},
+    {"rto_s": 0.0},                          # inherited NetConfig bound
+])
+def test_fault_config_rejects(kw):
+    with pytest.raises(ValueError):
+        FaultConfig(**kw)
+
+
+def test_boundary_values_accepted():
+    FediACConfig(k_frac=1.0, capacity_frac=1.0, a_frac=1.0, a=1, bits=1,
+                 consensus_floor=0)
+    FLConfig(rounds=0, ckpt_every=1, local_train_s=0.0)
+    ScenarioSpec(loss=0.0, participation=1.0, straggler_frac=1.0,
+                 test_frac=0.5)
+    NetConfig(straggler_slowdown=1.0, vote_deadline_s=1e-6, max_retries=1)
+    NetConfig(vote_deadline_s=None)
+    FaultConfig(ge_p_gb=0.0, ge_p_bg=0.0)    # no bad state entered: legal
+
+
+def test_helpers_message_shape():
+    with pytest.raises(ValueError, match=r"x must be in \(0, 1\], got 0"):
+        check_interval("x", 0, 0, 1, lo_open=True)
+    with pytest.raises(ValueError, match="y must be >= 3"):
+        check_at_least("y", 2, 3)
+    with pytest.raises(ValueError, match="z must be finite and >= 0"):
+        check_finite_at_least("z", math.inf, 0)
+    with pytest.raises(ValueError, match="w must be positive and finite"):
+        check_positive_finite("w", 0)
+    with pytest.raises(ValueError, match="m must be one of 'a', 'b'"):
+        check_choice("m", "c", ("a", "b"))
+    with pytest.raises(ValueError, match="q must be prime, got 4"):
+        require(False, "q", "prime", 4)
+    check_interval("ok", 0.5, 0, 1)
+    require(True, "ok", "anything", None)

@@ -16,7 +16,10 @@ def _run(code: str, devices: int = 8, timeout: int = 520):
     env = dict(os.environ)
     env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
     env["PYTHONPATH"] = os.path.join(REPO, "src")
-    env.pop("JAX_PLATFORMS", None)
+    # pin the backend: with JAX_PLATFORMS unset, a box that carries a TPU
+    # runtime stalls for minutes probing instance metadata before falling
+    # back, blowing the subprocess timeout
+    env["JAX_PLATFORMS"] = "cpu"
     r = subprocess.run([sys.executable, "-c", code], env=env, timeout=timeout,
                        capture_output=True, text=True)
     assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr[-4000:]}"
@@ -155,7 +158,7 @@ def test_dryrun_smoke_single_combo():
     """The dry-run module itself (512 fake devices) on a reduced config."""
     env = dict(os.environ)
     env["PYTHONPATH"] = os.path.join(REPO, "src")
-    env.pop("JAX_PLATFORMS", None)
+    env["JAX_PLATFORMS"] = "cpu"  # see _run: avoid the TPU-probe stall
     env.pop("XLA_FLAGS", None)
     r = subprocess.run(
         [sys.executable, "-m", "repro.launch.dryrun", "--arch", "mamba2-130m",

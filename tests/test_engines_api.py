@@ -1,0 +1,175 @@
+"""The engine registry / EngineSpec surface and the ``repro.api`` facade.
+
+Pins the API-redesign contract: names stay first-class, ``EngineSpec``
+is the one place engine knobs live, the legacy knobs
+(``FediACConfig.stream_chunk`` / ``use_pallas``, ``FLConfig.use_pallas``)
+keep working through warn-once deprecation shims, and the public facade
+``repro.api`` cannot change silently (the snapshot below must be edited
+deliberately).
+"""
+
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.api
+from repro.core import EngineSpec, engines
+from repro.core.fediac import FediACConfig, aggregate_round, aggregate_stack
+from repro.data import classification, partition_dirichlet
+from repro.sweep import ScenarioSpec
+from repro.training import FLConfig, run_federated
+
+
+# ---------------------------------------------------------------------------
+# registry + EngineSpec
+# ---------------------------------------------------------------------------
+
+def test_registry_names_and_get():
+    assert set(engines.names()) >= {"monolithic", "stream", "sharded"}
+    spec = engines.get("stream")
+    assert spec == EngineSpec(name="stream")
+    assert engines.get(spec) is spec
+    with pytest.raises(ValueError, match="unknown FediAC engine 'bogus'"):
+        engines.get("bogus")
+    with pytest.raises(ValueError, match="unknown FediAC engine"):
+        engines.get(EngineSpec(name="bogus"))
+    with pytest.raises(TypeError):
+        engines.get(42)
+
+
+def test_engine_spec_is_frozen_and_hashable():
+    spec = EngineSpec(name="sharded", devices=4)
+    assert hash(spec) == hash(EngineSpec(name="sharded", devices=4))
+    with pytest.raises(Exception):
+        spec.name = "stream"
+    # EngineSpec-bearing configs stay hashable (jit-static / cache keys)
+    hash(FediACConfig(engine=spec))
+    hash(ScenarioSpec(engine=spec))
+
+
+def test_configs_accept_spec_or_name():
+    for engine in ("sharded", EngineSpec(name="sharded", devices=1)):
+        assert engines.resolve(FediACConfig(engine=engine)).name == "sharded"
+        assert ScenarioSpec(engine=engine).engine_name() == "sharded"
+    with pytest.raises(ValueError):
+        FediACConfig(engine="bogus")
+    with pytest.raises(ValueError):
+        ScenarioSpec(engine="bogus")
+    with pytest.raises(ValueError):
+        FLConfig(engine="bogus")
+
+
+def test_register_adds_engine_to_dispatch():
+    calls = []
+
+    def runner(spec, u_stack, cfg, key, a):
+        calls.append(spec)
+        from repro.core.fediac import aggregate_stack
+        return aggregate_stack(u_stack, cfg, key, a=a)
+
+    engines.register("test-engine", runner)
+    try:
+        u = jnp.ones((2, 8), jnp.float32)
+        cfg = FediACConfig(engine=EngineSpec(name="test-engine"))
+        ref = aggregate_stack(u, FediACConfig(), jax.random.PRNGKey(0))
+        got = aggregate_round(u, cfg, jax.random.PRNGKey(0))
+        assert calls and np.array_equal(np.asarray(ref[0]),
+                                        np.asarray(got[0]))
+    finally:
+        engines._RUNNERS.pop("test-engine", None)
+
+
+# ---------------------------------------------------------------------------
+# deprecation shims: old knobs forward, warn exactly once
+# ---------------------------------------------------------------------------
+
+def test_stream_chunk_shim_warns_once_and_forwards():
+    engines._reset_deprecation_warnings()
+    cfg = FediACConfig(engine="stream", stream_chunk=64)
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        first = engines.resolve(cfg)
+        second = engines.resolve(cfg)
+    deps = [x for x in w if issubclass(x.category, DeprecationWarning)]
+    assert len(deps) == 1 and "stream_chunk" in str(deps[0].message)
+    assert first.chunk == second.chunk == 64 and first.name == "stream"
+
+
+def test_use_pallas_shim_warns_once_and_forwards():
+    engines._reset_deprecation_warnings()
+    cfg = FediACConfig(use_pallas=True)
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        spec = engines.resolve(cfg)
+        engines.resolve(cfg)
+    deps = [x for x in w if issubclass(x.category, DeprecationWarning)]
+    assert len(deps) == 1 and "use_pallas" in str(deps[0].message)
+    assert spec.use_pallas
+    # the modern spelling does not warn
+    engines._reset_deprecation_warnings()
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        spec = engines.resolve(
+            FediACConfig(engine=EngineSpec(use_pallas=True)))
+    assert spec.use_pallas
+    assert not [x for x in w if issubclass(x.category, DeprecationWarning)]
+
+
+def test_legacy_call_sites_bit_identical():
+    """Old-style configs run through the registry with unchanged output."""
+    rng = np.random.default_rng(3)
+    u = jnp.asarray(rng.normal(size=(4, 100)).astype(np.float32))
+    key = jax.random.PRNGKey(1)
+    ref = aggregate_stack(u, FediACConfig(), key)
+    legacy = aggregate_round(u, FediACConfig(engine="stream",
+                                             stream_chunk=32), key)
+    modern = aggregate_round(
+        u, FediACConfig(engine=EngineSpec(name="stream", chunk=32)), key)
+    for r, a, b in zip(ref[:3], legacy[:3], modern[:3]):
+        assert np.array_equal(np.asarray(r), np.asarray(a))
+        assert np.array_equal(np.asarray(r), np.asarray(b))
+
+
+def test_fl_loop_shims_and_engine_spec():
+    data = classification(n=400, dim=16, n_classes=4, seed=0)
+    train, test = data.test_split(0.25)
+    clients = partition_dirichlet(train, 4, beta=0.5, seed=0)
+
+    def hist(**kw):
+        return run_federated(clients, test, FLConfig(
+            n_clients=4, rounds=2, local_steps=1, batch=16, seed=0, **kw))
+
+    base = hist()
+    engines._reset_deprecation_warnings()
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        legacy = hist(use_pallas=False)   # not-None -> deprecated override
+    assert any(issubclass(x.category, DeprecationWarning)
+               and "FLConfig.use_pallas" in str(x.message) for x in w)
+    spec = hist(engine=EngineSpec(name="stream", chunk=64))
+    for a, b in zip((base.loss, base.acc), (legacy.loss, legacy.acc)):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+    for a, b in zip((base.loss, base.acc), (spec.loss, spec.acc)):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# the public facade: an explicit snapshot
+# ---------------------------------------------------------------------------
+
+API_SNAPSHOT = [
+    "EngineSpec", "FLConfig", "FLHistory", "FaultConfig", "FediACConfig",
+    "NULL_PROBE", "NetConfig", "NullProbe", "RecordingProbe", "RoundPlan",
+    "RoundProbe", "ScenarioSpec", "TrafficStats", "aggregate_round",
+    "aggregate_stack", "build_round_plan", "run_federated", "run_sweep",
+]
+
+
+def test_api_snapshot():
+    """repro.api is the stable surface: changing it must edit this list."""
+    assert sorted(repro.api.__all__) == API_SNAPSHOT
+    for name in repro.api.__all__:
+        assert getattr(repro.api, name) is not None

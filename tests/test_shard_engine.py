@@ -1,0 +1,223 @@
+"""The coordinate-sharded round engine (DESIGN.md §16).
+
+The oracle is ``aggregate_stack``: the sharded round must be *bitwise*
+equal for every vote x compact mode, on any mesh size, for ragged
+``d % devices`` splits, under ``jit``, under the fleet ``vmap``, with a
+traced vote threshold and with the consensus-floor fallback armed.
+
+Device count locks at first jax init, so multi-device checks run in
+subprocesses with ``XLA_FLAGS=--xla_force_host_platform_device_count``
+(the ``tests/test_distributed.py`` pattern); single-device checks (the
+mesh degenerates to one shard, every collective a no-op) run in-process.
+"""
+
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.fediac import FediACConfig, aggregate_stack
+from repro.core.shard_engine import aggregate_shard, shard_geometry
+from repro.core.streams import gumbel_block, uniform_at
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+MODES = [("topk", "topk"), ("topk", "block"),
+         ("threshold", "topk"), ("threshold", "block")]
+
+
+def _run(code: str, devices: int = 8, timeout: int = 520):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    # pin the backend: with JAX_PLATFORMS unset, a box that carries a TPU
+    # runtime stalls for minutes probing instance metadata before falling
+    # back, blowing the subprocess timeout
+    env["JAX_PLATFORMS"] = "cpu"
+    r = subprocess.run([sys.executable, "-c", code], env=env, timeout=timeout,
+                       capture_output=True, text=True)
+    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr[-4000:]}"
+    return r.stdout
+
+
+def _bitwise_equal(a, b) -> bool:
+    a, b = np.asarray(a), np.asarray(b)
+    return a.shape == b.shape and np.array_equal(a.view(np.uint8),
+                                                 b.view(np.uint8))
+
+
+# ---------------------------------------------------------------------------
+# stream reconstruction helpers the sharded engine is built on
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("partitionable", [False, True])
+def test_uniform_at_matches_gather(partitionable):
+    key = jax.random.PRNGKey(3)
+    total = 501
+    idx = jnp.asarray([0, 7, 500, 250, 7, 251, 1], jnp.int32)
+    with jax.threefry_partitionable(partitionable):
+        full = jax.random.uniform(key, (total,), jnp.float32)
+        got = uniform_at(key, idx, total)
+    assert _bitwise_equal(full[idx], got)
+
+
+@pytest.mark.parametrize("partitionable", [False, True])
+@pytest.mark.parametrize("start,size,total", [(0, 64, 64), (37, 41, 129),
+                                              (100, 28, 128)])
+def test_gumbel_block_matches_slice(partitionable, start, size, total):
+    key = jax.random.PRNGKey(9)
+    with jax.threefry_partitionable(partitionable):
+        full = jax.random.gumbel(key, (total,), jnp.float32)
+        got = gumbel_block(key, start, size, total)
+    assert _bitwise_equal(full[start:start + size], got)
+
+
+def test_shard_geometry_blocks_never_straddle():
+    cfg = FediACConfig(compact_mode="block", block_size=16)
+    s, width = shard_geometry(100, 8, cfg)
+    assert s % 16 == 0 and width == 8 * s and width >= 100
+    s1, w1 = shard_geometry(100, 8, FediACConfig())
+    assert s1 == 13 and w1 == 104
+
+
+# ---------------------------------------------------------------------------
+# single-device: the mesh degenerates, bit-identity still holds in-process
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("vote_mode,compact_mode", MODES)
+def test_single_device_bit_identical(vote_mode, compact_mode):
+    rng = np.random.default_rng(0)
+    u = jnp.asarray(rng.normal(size=(5, 120)).astype(np.float32))
+    cfg = FediACConfig(k_frac=0.2, capacity_frac=0.25, bits=6,
+                       vote_mode=vote_mode, compact_mode=compact_mode,
+                       block_size=16)
+    key = jax.random.PRNGKey(4)
+    ref = aggregate_stack(u, cfg, key)
+    got = aggregate_shard(u, cfg, key, devices=1)
+    for r, g in zip(ref[:3], got[:3]):
+        assert _bitwise_equal(r, g)
+    assert ref[3] == got[3]
+
+
+def test_single_device_traced_threshold_and_floor():
+    rng = np.random.default_rng(1)
+    u = jnp.asarray(rng.normal(size=(5, 90)).astype(np.float32))
+    key = jax.random.PRNGKey(2)
+    for floor in (0, 10 ** 9):
+        cfg = FediACConfig(k_frac=0.1, capacity_frac=0.2, bits=4,
+                           consensus_floor=floor)
+        a = jnp.asarray(4, jnp.int32)
+        ref = aggregate_stack(u, cfg, key, a=a)
+        got = jax.jit(
+            lambda uu, aa: aggregate_shard(uu, cfg, key, a=aa,
+                                           devices=1)[:3])(u, a)
+        for r, g in zip(ref[:3], got):
+            assert _bitwise_equal(r, g)
+
+
+@pytest.mark.parametrize("vote_mode,compact_mode", MODES)
+def test_chunked_inner_phase2_bit_identical(vote_mode, compact_mode):
+    """Shards wider than ``_PHASE2_CHUNK`` stream phase 1/2 through an
+    inner fori_loop (including the clamped, idempotent tail chunk) —
+    values must stay bitwise those of the monolithic oracle."""
+    from repro.core.shard_engine import _PHASE2_CHUNK
+    d, n = 2 * _PHASE2_CHUNK + 70_000, 4   # 3 chunks, overlapped tail
+    rng = np.random.default_rng(6)
+    u = jnp.asarray(rng.normal(size=(n, d)).astype(np.float32))
+    cfg = FediACConfig(k_frac=0.01, capacity_frac=0.02, bits=4,
+                       vote_mode=vote_mode, compact_mode=compact_mode)
+    key = jax.random.PRNGKey(5)
+    ref = aggregate_stack(u, cfg, key)
+    got = aggregate_shard(u, cfg, key, devices=1)
+    for r, g in zip(ref[:3], got[:3]):
+        assert _bitwise_equal(r, g)
+    assert ref[3] == got[3]
+
+
+def test_sharded_rejects_unshardable_configs():
+    u = jnp.zeros((2, 16), jnp.float32)
+    key = jax.random.PRNGKey(0)
+    with pytest.raises(NotImplementedError):
+        aggregate_shard(u, FediACConfig(vote_chunk=4), key, devices=1)
+    with pytest.raises(NotImplementedError):
+        aggregate_shard(u, FediACConfig(use_pallas=True), key, devices=1)
+
+
+# ---------------------------------------------------------------------------
+# 8-device mesh: the real thing (one subprocess runs the whole battery)
+# ---------------------------------------------------------------------------
+
+def test_sharded_engine_on_8_device_mesh():
+    out = _run("""
+import numpy as np, jax, jax.numpy as jnp
+from repro.core.fediac import FediACConfig, aggregate_stack, phase2_compress, _vote_counts_stack
+from repro.core.quantize import scale_factor
+from repro.core.round_plan import build_round_plan
+from repro.core.shard_engine import aggregate_shard, shard_compress_stack
+
+assert len(jax.devices()) == 8
+MODES = [("topk", "topk"), ("topk", "block"),
+         ("threshold", "topk"), ("threshold", "block")]
+rng = np.random.default_rng(0)
+n = 5
+
+def eq(a, b):
+    a, b = np.asarray(a), np.asarray(b)
+    return a.shape == b.shape and np.array_equal(a.view(np.uint8), b.view(np.uint8))
+
+# bit-identity across ragged/narrow/aligned d for every mode
+for d in (64, 97, 5, 256):
+    u = jnp.asarray(rng.normal(size=(n, d)).astype(np.float32))
+    for vm, cm in MODES:
+        cfg = FediACConfig(k_frac=0.25, capacity_frac=0.3, bits=4,
+                           vote_mode=vm, compact_mode=cm, block_size=16)
+        key = jax.random.PRNGKey(7)
+        ref = aggregate_stack(u, cfg, key)
+        got = aggregate_shard(u, cfg, key)
+        assert all(eq(r, g) for r, g in zip(ref[:3], got[:3])), (d, vm, cm)
+        assert ref[3] == got[3]
+
+# traced threshold + consensus-floor fallback under jit
+d = 120
+u = jnp.asarray(rng.normal(size=(n, d)).astype(np.float32))
+for floor in (0, 10**9):
+    cfg = FediACConfig(k_frac=0.1, capacity_frac=0.2, bits=4,
+                       consensus_floor=floor)
+    key = jax.random.PRNGKey(3)
+    a = jnp.asarray(4, jnp.int32)
+    ref = aggregate_stack(u, cfg, key, a=a)
+    got = jax.jit(lambda uu, aa: aggregate_shard(uu, cfg, key, a=aa)[:3])(u, a)
+    assert all(eq(r, g) for r, g in zip(ref[:3], got)), floor
+
+# dataplane entry: sharded phase 2 == vmap(phase2_compress) on one plan
+d = 192
+for vm, cm in MODES:
+    cfg = FediACConfig(k_frac=0.2, capacity_frac=0.25, bits=4,
+                       vote_mode=vm, compact_mode=cm, block_size=16)
+    u = jnp.asarray(rng.normal(size=(n, d)).astype(np.float32))
+    keys = jax.random.split(jax.random.PRNGKey(11), 2 * n)
+    counts = _vote_counts_stack(u, cfg, keys[:n])
+    f = scale_factor(cfg.bits, n, 1.0) / jnp.clip(jnp.max(jnp.abs(u)), 1e-12, None)
+    topk = cm != "block"
+    plan = build_round_plan(counts, cfg, n, with_dense_mask=True,
+                            with_slot_map=topk)
+    ref = jax.vmap(phase2_compress(cfg), in_axes=(0, None, None, 0, None))(
+        u, cfg, f, keys[n:], plan)
+    got = shard_compress_stack(u, cfg, f, keys[n:], plan)
+    assert eq(ref[0], got[0]) and eq(ref[1], got[1]), (vm, cm)
+
+# fleet composition: jit(vmap(shard_map)) over a scenario axis
+cfg = FediACConfig(k_frac=0.2, capacity_frac=0.25, bits=4)
+us = jnp.asarray(rng.normal(size=(3, n, 96)).astype(np.float32))
+ks = jax.random.split(jax.random.PRNGKey(5), 3)
+got = jax.jit(jax.vmap(lambda uu, kk: aggregate_shard(uu, cfg, kk)[:3]))(us, ks)
+for b in range(3):
+    ref = aggregate_stack(us[b], cfg, ks[b])
+    assert all(eq(r, g[b]) for r, g in zip(ref[:3], got)), b
+print("OK")
+""")
+    assert "OK" in out
