@@ -1,0 +1,266 @@
+"""Async quorum-or-deadline aggregation benchmark (DESIGN.md §17).
+
+Three parts, all written to the tracked ``BENCH_async.json``:
+
+* **identity** — the standing invariants the async engine must never
+  erode: at full quorum, zero staleness discount and no deadline the
+  async dataplane trains **bit-identically** to the synchronous packet
+  dataplane (same accuracy, loss, simulated wall-clock and traffic per
+  round), and every async cell run ``jit(vmap)``-batched on the fleet
+  axis reproduces its sequential ``run_federated`` history exactly
+  (the quorum/staleness knobs ride as traced per-cell scalars, the
+  late-update carry as a batched state lane — DESIGN.md §13).
+* **throughput** — the headline: simulated round-throughput of the
+  async close (quorum 0.5, poly staleness) vs the synchronous engine
+  on the same task, at low and high straggler variance.  Simulated
+  wall-clock is deterministic f32 arithmetic, so the recorded speedups
+  are machine-independent; the high-variance cell must clear the
+  ``SPEEDUP_FLOOR`` (>= 1.5x).  Accuracy at the same round budget is
+  recorded alongside — absorbing stragglers must not cost learning.
+* **resume** — the kill-at-round-k audit with a *partially-filled*
+  carry buffer: resuming a killed async run (stragglers folding late
+  updates across round boundaries) must land on the uninterrupted
+  ``FLHistory`` bit-exactly.
+
+  PYTHONPATH=src python -m benchmarks.async_throughput [--smoke] [--out P]
+
+Exit status is non-zero if bit-identity, the speedup floor (full runs)
+or resume identity is lost — CI runs the ``--smoke`` variant on every
+PR as the async smoke check.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import tempfile
+
+from repro.core.fediac import FediACConfig
+from repro.data import classification, partition_dirichlet
+from repro.netsim import AsyncConfig, NetConfig
+from repro.sweep import ScenarioSpec, run_cell_sequential, run_sweep
+from repro.training import FLConfig, run_federated
+
+from .common import emit, smoke_out_path
+
+OUT_PATH = os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    "BENCH_async.json")
+
+SPEEDUP_FLOOR = 1.5  # headline: async >= 1.5x sync round-throughput at
+                     # the high-straggler-variance cell (tracked runs)
+ACC_GAP_MAX = 0.05   # quorum-0.5 close may not cost more final accuracy
+                     # than this at the same round budget
+
+ROUNDS = 12
+SMOKE_ROUNDS = 3
+HIDDEN = (128, 64)       # ~11k params -> multi-packet phase-2 payloads:
+                         # the regime the async close is built for
+SMOKE_HIDDEN = (32,)
+
+# the straggler-variance axis: the async engine's win grows with the
+# spread between the fast cohort and the slow tail
+VARIANCE_CELLS = (
+    ("low-variance", dict(straggler_frac=0.3, straggler_slowdown=2.0)),
+    ("high-straggler", dict(straggler_frac=0.5, straggler_slowdown=16.0)),
+)
+ASYNC_KW = dict(quorum_frac=0.5, staleness_mode="poly", staleness_gamma=1.0)
+
+TINY = dict(n_clients=4, rounds=SMOKE_ROUNDS, local_steps=2, batch=8,
+            hidden=(16,), data_n=500, data_dim=12, data_classes=5)
+
+
+def _hist_equal(a, b) -> bool:
+    return (a.acc == b.acc and a.loss == b.loss
+            and a.wall_clock == b.wall_clock
+            and a.traffic_mb == b.traffic_mb)
+
+
+def _task(seed: int = 0):
+    data = classification(n=1200, dim=16, n_classes=10, seed=seed)
+    train, test = data.test_split(0.25)
+    return partition_dirichlet(train, 6, beta=0.5, seed=seed), test
+
+
+# The throughput cells use a phase-2-heavy compression point
+# (capacity_frac=0.5, 32-bit values: ~2x more phase-2 than phase-1
+# wire bytes).  The async close only reorders *phase-2* commits — the
+# vote phase stays synchronous — so its win scales with the phase-2
+# share of the round; at the paper's default 5% capacity the dense
+# vote bitmap dominates the wire and a deadline can reclaim little.
+HEAVY_CFG = dict(a=2, bits=32, capacity_frac=0.5)
+
+
+def _run_fl(net, rounds, hidden, *, ckpt=None, resume=False,
+            local_train_s=0.01, cfg_kw=None):
+    clients, test = _task()
+    cfg = FediACConfig(**(cfg_kw or dict(a=2, bits=12)))
+    return run_federated(clients, test, FLConfig(
+        n_clients=6, rounds=rounds, local_steps=2, batch=16,
+        aggregator="fediac", agg_kwargs={"cfg": cfg},
+        local_train_s=local_train_s, transport="packet", net=net, seed=0,
+        ckpt_path=ckpt, resume=resume), hidden=hidden)
+
+
+def identity_section(*, smoke: bool = False) -> dict:
+    """The correctness anchor (DESIGN.md §17): full quorum + constant
+    weight 1 + no deadline makes the async engine a synchronous round,
+    bit for bit — and async cells ride the fleet axis without drifting."""
+    rounds = SMOKE_ROUNDS if smoke else ROUNDS
+    hidden = SMOKE_HIDDEN if smoke else HIDDEN
+    impaired = dict(loss=0.03, straggler_frac=0.5, participation=0.75,
+                    seed=2)
+    sync = _run_fl(NetConfig(**impaired), rounds, hidden)
+    full_quorum = _run_fl(AsyncConfig(**impaired), rounds, hidden)
+
+    # the fleet audit: a quorum x staleness grid through one vmapped
+    # program vs the sequential oracle, histories compared in full
+    specs = [ScenarioSpec(name="aq-fleet-half", algorithm="fediac", a=2,
+                          transport="packet", async_agg=True,
+                          quorum_frac=0.5, staleness_mode="poly",
+                          straggler_frac=0.5, net_seed=3, **TINY),
+             ScenarioSpec(name="aq-fleet-most", algorithm="fediac", a=3,
+                          transport="packet", async_agg=True,
+                          quorum_frac=0.75, staleness_mode="poly",
+                          staleness_gamma=2.0, loss=0.05, net_seed=1,
+                          **TINY)]
+    fleet = {c.spec.name: c.history for c in run_sweep(specs, (0,))}
+    per_cell = []
+    for s in specs:
+        seq = run_cell_sequential(s, 0)
+        per_cell.append({"name": s.name,
+                         "bit_identical": bool(_hist_equal(fleet[s.name],
+                                                           seq))})
+    return {
+        "rounds": rounds,
+        "full_quorum_is_sync": bool(_hist_equal(sync, full_quorum)),
+        "fleet_bit_identical_all": all(c["bit_identical"]
+                                       for c in per_cell),
+        "fleet_cells": per_cell,
+    }
+
+
+def throughput_section(*, smoke: bool = False) -> dict:
+    """Simulated round-throughput, sync vs async, per variance cell.
+    Deterministic: both engines price the same f32 timeline model, so
+    the speedup is a property of the close policy, not the host."""
+    rounds = SMOKE_ROUNDS if smoke else ROUNDS
+    hidden = SMOKE_HIDDEN if smoke else HIDDEN
+    cells = []
+    for name, strag in VARIANCE_CELLS:
+        sync = _run_fl(NetConfig(seed=2, **strag), rounds, hidden,
+                       cfg_kw=HEAVY_CFG)
+        asy = _run_fl(AsyncConfig(seed=2, **strag, **ASYNC_KW), rounds,
+                      hidden, cfg_kw=HEAVY_CFG)
+        speedup = sync.wall_clock[-1] / asy.wall_clock[-1]
+        cells.append({
+            "name": name,
+            **strag,
+            "sync_wall_s": round(sync.wall_clock[-1], 3),
+            "async_wall_s": round(asy.wall_clock[-1], 3),
+            "sync_rounds_per_s": round(rounds / sync.wall_clock[-1], 4),
+            "async_rounds_per_s": round(rounds / asy.wall_clock[-1], 4),
+            "speedup": round(speedup, 3),
+            "sync_final_acc": round(sync.acc[-1], 4),
+            "async_final_acc": round(asy.acc[-1], 4),
+            "acc_gap": round(sync.acc[-1] - asy.acc[-1], 4),
+        })
+    high = next(c for c in cells if c["name"] == "high-straggler")
+    return {
+        "rounds": rounds,
+        "quorum_frac": ASYNC_KW["quorum_frac"],
+        "cells": cells,
+        "speedup_high_straggler": high["speedup"],
+        "speedup_floor": SPEEDUP_FLOOR,
+        "acc_within_band": all(c["acc_gap"] <= ACC_GAP_MAX for c in cells),
+    }
+
+
+def resume_section(*, smoke: bool = False) -> dict:
+    """Kill-and-resume with a partially-filled carry buffer: stragglers
+    at quorum 0.5 fold late updates across round boundaries, so the
+    checkpoint at round k carries pending weight the resumed run must
+    restore bit-exactly (DESIGN.md §14, §17)."""
+    rounds = SMOKE_ROUNDS + 1 if smoke else ROUNDS
+    hidden = SMOKE_HIDDEN if smoke else HIDDEN
+    kill_at = rounds // 2
+    net = AsyncConfig(straggler_frac=0.5, straggler_slowdown=8.0,
+                      loss=0.05, seed=2, **ASYNC_KW)
+    base = _run_fl(net, rounds, hidden)
+    with tempfile.TemporaryDirectory() as td:
+        ck = os.path.join(td, "async.npz")
+        _run_fl(net, kill_at, hidden, ckpt=ck)      # the "killed" run
+        resumed = _run_fl(net, rounds, hidden, ckpt=ck, resume=True)
+    return {
+        "rounds": rounds,
+        "kill_at": kill_at,
+        "resume_identical": bool(_hist_equal(base, resumed)),
+    }
+
+
+def run(*, smoke: bool = False, out_path: str = OUT_PATH):
+    if smoke:
+        out_path = smoke_out_path(out_path, OUT_PATH,
+                                  "BENCH_async.smoke.json")
+    ident = identity_section(smoke=smoke)
+    thr = throughput_section(smoke=smoke)
+    rec = resume_section(smoke=smoke)
+    rows = [
+        ("async/full_quorum_is_sync", int(ident["full_quorum_is_sync"]),
+         "bit-identical to the sync packet dataplane"),
+        ("async/fleet_bit_identical_all",
+         int(ident["fleet_bit_identical_all"]),
+         f"cells={len(ident['fleet_cells'])}"),
+    ]
+    for c in thr["cells"]:
+        rows.append((f"async/speedup/{c['name']}", c["speedup"],
+                     f"sync={c['sync_wall_s']}s_async={c['async_wall_s']}s"))
+        rows.append((f"async/acc_gap/{c['name']}", c["acc_gap"],
+                     f"sync={c['sync_final_acc']}_async="
+                     f"{c['async_final_acc']}"))
+    rows.append(("async/resume_identical", int(rec["resume_identical"]),
+                 f"kill_at={rec['kill_at']}of{rec['rounds']}"))
+
+    payload = {
+        "benchmark": "async",
+        "smoke": smoke,
+        "identity": ident,
+        "throughput": thr,
+        "resume": rec,
+    }
+    with open(out_path, "w") as fh:
+        json.dump(payload, fh, indent=2)
+        fh.write("\n")
+    rows.append(("async/json", out_path, "written"))
+    return rows
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny model + few rounds (CI)")
+    ap.add_argument("--out", default=OUT_PATH)
+    args = ap.parse_args(argv)
+    rows = run(smoke=args.smoke, out_path=args.out)
+    emit(rows)
+    flags = {tag: v for tag, v, _ in rows
+             if tag in ("async/full_quorum_is_sync",
+                        "async/fleet_bit_identical_all",
+                        "async/resume_identical")}
+    bad = [tag for tag, v in flags.items() if v != 1]
+    speedup = dict((tag, v) for tag, v, _ in rows)[
+        "async/speedup/high-straggler"]
+    # the smoke model is too small for the full phase-2-heavy win; it
+    # still must never be slower than lockstep
+    floor = 1.0 if args.smoke else SPEEDUP_FLOOR
+    if speedup < floor:
+        bad.append(f"async/speedup/high-straggler {speedup} < {floor}")
+    if bad:
+        print(f"async: invariants lost: {', '.join(bad)}", flush=True)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -2,8 +2,8 @@
 
 Compares a fresh smoke run against the tracked benchmark baselines at the
 repo root — ``BENCH_aggregation.json``, ``BENCH_dataplane.json``,
-``BENCH_sweep.json``, ``BENCH_faults.json`` and ``BENCH_obs.json`` — and
-exits non-zero on drift.
+``BENCH_sweep.json``, ``BENCH_faults.json``, ``BENCH_obs.json`` and
+``BENCH_async.json`` — and exits non-zero on drift.
 
 Gating policy, by how machine-dependent each quantity is:
 
@@ -31,8 +31,8 @@ Gating policy, by how machine-dependent each quantity is:
 
 Refreshing baselines after an intentional change: re-run the producing
 benchmarks (``python -m
-benchmarks.{aggregation_round,dataplane,sweep,faults,obs}``) on an idle
-machine and commit the regenerated ``BENCH_*.json``.
+benchmarks.{aggregation_round,dataplane,sweep,faults,obs,async_throughput}``)
+on an idle machine and commit the regenerated ``BENCH_*.json``.
 """
 
 from __future__ import annotations
@@ -50,6 +50,7 @@ TRACKED = {
     "sweep": os.path.join(ROOT, "BENCH_sweep.json"),
     "faults": os.path.join(ROOT, "BENCH_faults.json"),
     "obs": os.path.join(ROOT, "BENCH_obs.json"),
+    "async": os.path.join(ROOT, "BENCH_async.json"),
 }
 WALL_TOL = 4.0   # wall-clock band: fresh within [tracked/4, tracked*4]
 ACC_TOL = 0.005  # |final_acc drift| tolerated (cross-host XLA ulps only;
@@ -57,6 +58,11 @@ ACC_TOL = 0.005  # |final_acc drift| tolerated (cross-host XLA ulps only;
 SIM_TOL = 0.02   # relative band on the f32-simulated packet wall-clock
 FLEET_SPEEDUP_MIN = 2.0     # tracked packet-fleet paired-ratio floor
 FLEET_SMOKE_SPEEDUP_MIN = 1.1  # fresh smoke fleet: never slower than seq
+ASYNC_SPEEDUP_MIN = 1.5     # tracked async-vs-sync round-throughput floor
+                            # at the high-straggler-variance cell (§17);
+                            # simulated wall-clock, so machine-independent
+ASYNC_SMOKE_SPEEDUP_MIN = 1.1  # fresh smoke async cell: same quantity at
+                               # the tiny smoke model, also deterministic
 OBS_OVERHEAD_MAX = 1.10     # probe cost: traced/untraced paired-ratio
                             # ceiling on the tracked smoke cell (§15)
 RSS_TOL = 2.0    # peak-RSS band: generous — the jax/XLA runtime floor and
@@ -148,12 +154,25 @@ def fresh_obs() -> dict:
             "overhead": overhead_section(smoke=True)}
 
 
+def fresh_async() -> dict:
+    """The async quorum-or-deadline smoke audits (DESIGN.md §17): the
+    full-quorum sync bit-identity anchor, the fleet audit, the sync/async
+    round-throughput ratio (simulated, deterministic) and the bit-exact
+    resume with a partially-filled carry buffer."""
+    from .async_throughput import (identity_section, resume_section,
+                                   throughput_section)
+    return {"identity": identity_section(smoke=True),
+            "throughput": throughput_section(smoke=True),
+            "resume": resume_section(smoke=True)}
+
+
 def compute_fresh(tracked: dict) -> dict:
     return {"aggregation": fresh_aggregation(),
             "dataplane": fresh_dataplane(int(tracked["dataplane"]["rounds"])),
             "sweep": fresh_sweep(),
             "faults": fresh_faults(),
-            "obs": fresh_obs()}
+            "obs": fresh_obs(),
+            "async": fresh_async()}
 
 
 # ---------------------------------------------------------------------------
@@ -407,12 +426,56 @@ def compare_obs(tracked: dict, fresh: dict) -> list:
     return fails
 
 
+def compare_async(tracked: dict, fresh: dict) -> list:
+    """Async gate (DESIGN.md §17): the tracked baseline and the fresh
+    smoke run must both hold the async invariants — full-quorum
+    bit-identity with the sync packet dataplane, fleet/sequential
+    bit-identity for every async cell, accuracy inside the quorum band,
+    and bit-exact resume with a partially-filled carry buffer — and the
+    round-throughput speedup at the high-straggler cell must clear its
+    floor (the simulated wall-clock ratio is deterministic, so both the
+    tracked and the fresh value gate as exact quantities)."""
+    fails = []
+    floors = (("tracked", tracked, ASYNC_SPEEDUP_MIN),
+              ("fresh", fresh, ASYNC_SMOKE_SPEEDUP_MIN))
+    for label, payload, floor in floors:
+        ident = payload.get("identity")
+        thr = payload.get("throughput")
+        rec = payload.get("resume")
+        if not ident or not thr or not rec:
+            fails.append(f"{label} async payload lacks "
+                         "identity/throughput/resume")
+            continue
+        if not ident.get("full_quorum_is_sync", False):
+            fails.append(f"{label} full-quorum async run diverged from "
+                         "the sync packet dataplane")
+        if not ident.get("fleet_bit_identical_all", False):
+            fails.append(f"{label} async fleet lost fleet/sequential "
+                         "bit-identity")
+        for c in ident.get("fleet_cells", []):
+            if not c.get("bit_identical", False):
+                fails.append(f"{label} async cell {c['name']} lost "
+                             "fleet/sequential bit-identity")
+        speed = thr.get("speedup_high_straggler", 0.0)
+        if speed < floor:
+            fails.append(f"{label} async high-straggler speedup {speed} "
+                         f"below the {floor}x floor")
+        if not thr.get("acc_within_band", False):
+            fails.append(f"{label} async close cost more accuracy than "
+                         "the quorum band allows")
+        if not rec.get("resume_identical", False):
+            fails.append(f"{label} async kill-and-resume diverged (carry "
+                         "buffer not restored bit-exactly)")
+    return fails
+
+
 COMPARATORS = {
     "aggregation": compare_aggregation,
     "dataplane": compare_dataplane,
     "sweep": compare_sweep,
     "faults": compare_faults,
     "obs": compare_obs,
+    "async": compare_async,
 }
 
 
@@ -441,6 +504,9 @@ def inject_drift(tracked: dict) -> dict:
     drifted["faults"]["recovery"]["resume_identical"] = False
     drifted["obs"]["trace"]["schema_errors"] = 3
     drifted["obs"]["overhead"]["overhead_ratio"] = 2.0
+    drifted["async"]["identity"]["full_quorum_is_sync"] = False
+    drifted["async"]["throughput"]["speedup_high_straggler"] = 1.0
+    drifted["async"]["resume"]["resume_identical"] = False
     return drifted
 
 

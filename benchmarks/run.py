@@ -16,8 +16,9 @@ import sys
 import time
 
 from . import (accuracy_vs_time, aggregation_ops, aggregation_round,
-               compression_error, dataplane, faults, kernel_micro, noniid,
-               obs, roofline, sweep, traffic, vote_threshold)
+               async_throughput, compression_error, dataplane, faults,
+               kernel_micro, noniid, obs, roofline, sweep, traffic,
+               vote_threshold)
 from .common import emit
 
 SECTIONS = {
@@ -31,6 +32,7 @@ SECTIONS = {
     "aggregation": aggregation_round.run,  # round-plan engine vs seed
     "dataplane": dataplane.run,         # packet dataplane: loss x participation
     "faults": faults.run,               # chaos dataplane: faults + recovery
+    "async": async_throughput.run,      # async close: identity + throughput
     "sweep": sweep.run,                 # fleet runner vs sequential loop
     "roofline": roofline.run,           # dry-run roofline table
     "obs": obs.run,                     # telemetry: trace audit + overhead

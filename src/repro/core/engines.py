@@ -68,10 +68,16 @@ def _run_sharded(spec, u_stack, cfg, key, a):
                            devices=spec.devices or None, axis=spec.axis)
 
 
+def _run_async(spec, u_stack, cfg, key, a):
+    from repro.netsim.async_engine import aggregate_async_stack
+    return aggregate_async_stack(u_stack, _with_pallas(cfg, spec), key, a=a)
+
+
 _RUNNERS = {
     "monolithic": _run_monolithic,
     "stream": _run_stream,
     "sharded": _run_sharded,
+    "async": _run_async,
 }
 
 

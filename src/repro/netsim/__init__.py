@@ -10,6 +10,10 @@ lossless full-participation configuration is bit-identical to the
 in-memory ``core.fediac.aggregate_stack`` engine.
 """
 
+from .async_engine import (ASYNC_DYN_FIELDS, ASYNC_STAT_FIELDS, AsyncConfig,
+                           AsyncServer, aggregate_async_stack,
+                           async_packet_dyn, init_async_carry,
+                           make_async_packet_core)
 from .batched import (make_fediac_packet_core, packet_dyn, reliable_upload,
                       scale_num_table, threshold_table)
 from .dataplane import DataplaneStats, SwitchDataplane, n_windows, slot_window
@@ -36,4 +40,7 @@ __all__ = ["DataplaneStats", "SwitchDataplane", "n_windows", "slot_window",
            "packet_dyn", "reliable_upload", "scale_num_table",
            "threshold_table", "FaultConfig", "chaos_packet_dyn",
            "gilbert_elliott_stationary", "make_chaos_packet_core",
-           "REGISTER_POLICIES", "register_accumulate"]
+           "REGISTER_POLICIES", "register_accumulate",
+           "AsyncConfig", "AsyncServer", "ASYNC_DYN_FIELDS",
+           "ASYNC_STAT_FIELDS", "aggregate_async_stack", "async_packet_dyn",
+           "init_async_carry", "make_async_packet_core"]

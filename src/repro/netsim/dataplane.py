@@ -53,6 +53,10 @@ class DataplaneStats:
     aggregation_ops: int = 0     # integer slot-additions executed
     overflow_slots: int = 0      # registers whose true sum left int32 range
                                  # (the value wrapped silently — DESIGN.md §14)
+    late_folds: int = 0          # updates past the async close carried into
+                                 # the next round, staleness-weighted (§17)
+    late_bounces: int = 0        # updates past the close returned whole to
+                                 # the client's residual (§17)
 
     # fields that combine by max across switches (levels run concurrently,
     # so the hierarchy's pass count / residency is the widest switch's, not

@@ -61,8 +61,9 @@ from repro.validate import (check_at_least, check_choice,
 from .batched import (PACKET_DYN_FIELDS, packet_dyn, scale_num_table)
 from .dataplane import n_windows, slot_window
 from .hierarchy import drain_hierarchy, leaf_assignment
-from .policies import (NetConfig, REGISTER_POLICIES, register_accumulate,
-                       sample_participants, sample_stragglers)
+from .policies import (BackoffPolicy, NetConfig, REGISTER_POLICIES,
+                       register_accumulate, sample_participants,
+                       sample_stragglers)
 from .timeline import (_masked_drain, deadline_mask, download_time,
                        poisson_arrivals, retransmit_delays)
 
@@ -170,6 +171,12 @@ class FaultConfig(NetConfig):
         check_at_least("quorum_floor", self.quorum_floor, 0)
         check_at_least("round_retries", self.round_retries, 0)
         check_finite_at_least("backoff_s", self.backoff_s, 0.0)
+
+    def retry_policy(self) -> BackoffPolicy:
+        """The quorum-retry clock as a :class:`BackoffPolicy`: exponential
+        doubling from ``backoff_s``, ``round_retries`` bounded."""
+        return BackoffPolicy(base_s=self.backoff_s, factor=2.0,
+                             max_retries=self.round_retries)
 
 
 def gilbert_elliott_stationary(p_gb: float, p_bg: float) -> float:
@@ -380,8 +387,8 @@ def make_chaos_packet_core(cfg: FediACConfig, net: FaultConfig,
             aborted = ~ok_any
             attempts = sel + 1
             idx = jnp.arange(n_attempts, dtype=jnp.int32)
-            backoff = (jnp.float32(dyn["backoff_s"])
-                       * (2.0 ** idx.astype(jnp.float32)))
+            backoff = net.retry_policy().delays(n_attempts,
+                                                base=dyn["backoff_s"])
             penalty = jnp.sum(jnp.where(idx < sel,
                                         stacked["t1"] + backoff, 0.0))
             n_part_total = jnp.sum(jnp.where(idx <= sel,

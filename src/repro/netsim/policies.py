@@ -35,9 +35,9 @@ from repro.switch.packets import MTU
 from repro.validate import (check_at_least, check_finite_at_least,
                             check_interval, check_positive_finite, require)
 
-__all__ = ["NetConfig", "net_round_key", "sample_participants",
-           "sample_stragglers", "INT32_MAX", "INT32_MIN",
-           "register_accumulate", "REGISTER_POLICIES"]
+__all__ = ["NetConfig", "BackoffPolicy", "net_round_key",
+           "sample_participants", "sample_stragglers", "INT32_MAX",
+           "INT32_MIN", "register_accumulate", "REGISTER_POLICIES"]
 
 INT32_MAX = np.int32(2**31 - 1)
 INT32_MIN = np.int32(-2**31)
@@ -91,6 +91,88 @@ class NetConfig:
         check_at_least("n_leaves", self.n_leaves, 1)
         check_at_least("memory_slots", self.memory_slots, 1)
         check_at_least("mtu", self.mtu, 1)
+
+    def arq_policy(self) -> "BackoffPolicy":
+        """The phase-2 ARQ retry clock as a :class:`BackoffPolicy`:
+        constant ``rto_s`` spacing (factor 1), ``max_retries`` bounded."""
+        return BackoffPolicy(base_s=self.rto_s, factor=1.0,
+                             max_retries=self.max_retries)
+
+
+@dataclass(frozen=True)
+class BackoffPolicy:
+    """One validated timeout/retry/backoff policy (DESIGN.md §17).
+
+    Unifies the two retry clocks the dataplane used to carry as separate
+    ad-hoc constants: the phase-2 ARQ retransmission timeout (constant
+    spacing — ``factor == 1``) and the chaos core's quorum-retry
+    exponential backoff (``factor == 2``).  Delays follow a bounded
+    exponential ``base_s * factor**i`` clipped at ``cap_s``, with optional
+    deterministic threefry jitter (:meth:`jittered`).
+
+    The arithmetic is pinned bitwise to what the call sites historically
+    computed: ``factor == 1`` produces ``k * float32(base)`` (the ARQ
+    expression) and ``factor == 2`` with an infinite cap produces
+    ``float32(base) * 2**i`` (the quorum-retry expression), so routing
+    both through this class changes no simulated timestamp.
+
+    ``base_s`` may be overridden per call with a *traced* scalar (the
+    fleet axis carries per-cell backoff bases through ``dyn``); the
+    structural knobs (``factor``, ``cap_s``, ``max_retries``,
+    ``jitter_frac``) are static.
+    """
+
+    base_s: float                 # first-retry delay (seconds)
+    factor: float = 2.0           # geometric growth per attempt (1 = ARQ)
+    cap_s: float = math.inf       # per-delay ceiling (inf = unbounded)
+    max_retries: int = 16         # bound on retries the clock accounts for
+    jitter_frac: float = 0.0      # +- relative jitter applied by jittered()
+
+    def __post_init__(self):
+        check_finite_at_least("base_s", self.base_s, 0.0)
+        check_finite_at_least("factor", self.factor, 1.0)
+        require(self.cap_s > 0.0, "cap_s", "> 0 (inf allowed)", self.cap_s)
+        check_at_least("max_retries", self.max_retries, 0)
+        check_interval("jitter_frac", self.jitter_frac, 0.0, 1.0,
+                       hi_open=True)
+
+    def _cap(self, d: jax.Array) -> jax.Array:
+        if math.isfinite(self.cap_s):
+            return jnp.minimum(d, jnp.float32(self.cap_s))
+        return d
+
+    def delays(self, n_attempts: int, base=None) -> jax.Array:
+        """f32[n_attempts] — the delay preceding re-attempt ``i``:
+        ``min(base * factor**i, cap_s)``.  ``base`` (default ``base_s``)
+        may be a traced scalar."""
+        b = self.base_s if base is None else base
+        idx = jnp.arange(int(n_attempts), dtype=jnp.int32)
+        return self._cap(jnp.float32(b)
+                         * (jnp.float32(self.factor)
+                            ** idx.astype(jnp.float32)))
+
+    def total_delay(self, k, base=None) -> jax.Array:
+        """Summed delay after ``k`` retries (``k`` int, may be traced,
+        clipped to ``max_retries``).  For ``factor == 1`` this is exactly
+        ``k * float32(base)`` — bitwise the ARQ expression."""
+        b = self.base_s if base is None else base
+        k = jnp.asarray(k)
+        if self.factor == 1.0:
+            return k.astype(jnp.float32) * self._cap(jnp.float32(b))
+        cum = jnp.concatenate([
+            jnp.zeros((1,), jnp.float32),
+            jnp.cumsum(self.delays(self.max_retries + 1, base))])
+        return cum[jnp.clip(k, 0, self.max_retries + 1)]
+
+    def jittered(self, delays, key: jax.Array) -> jax.Array:
+        """Deterministic threefry jitter: each delay scaled by a uniform
+        factor in ``[1 - jitter_frac, 1 + jitter_frac)``.  A zero
+        ``jitter_frac`` returns the delays untouched (same program)."""
+        d = jnp.asarray(delays, jnp.float32)
+        if self.jitter_frac == 0.0:
+            return d
+        u = jax.random.uniform(key, jnp.shape(d))
+        return d * (1.0 + jnp.float32(self.jitter_frac) * (2.0 * u - 1.0))
 
 
 def net_round_key(seed, round_idx) -> jax.Array:

@@ -38,6 +38,8 @@ import numpy as np
 
 from repro.switch.queueing import UNALIGNED_FACTOR, SwitchProfile
 
+from .policies import BackoffPolicy
+
 __all__ = ["poisson_arrivals", "lose_packets", "retransmit_delays",
            "deadline_mask", "mg1_departures", "drain_fifo", "windowed_drain",
            "simulate_round_time", "DrainStats", "service_time",
@@ -78,6 +80,10 @@ def retransmit_delays(key: jax.Array, shape, loss, rto_s,
     ``loss`` may be a traced scalar: the geometric draw is inverted from
     one uniform per packet (``floor(log U / log loss) + 1``), which at
     loss == 0 collapses to a single attempt for every packet.
+
+    The retry clock is the shared :class:`~repro.netsim.policies
+    .BackoffPolicy` at factor 1 (constant RTO spacing), whose
+    ``total_delay`` is bitwise the historical ``retx * float32(rto_s)``.
     """
     loss = jnp.float32(loss)
     u = jnp.maximum(jax.random.uniform(key, shape), jnp.float32(1e-38))
@@ -85,7 +91,9 @@ def retransmit_delays(key: jax.Array, shape, loss, rto_s,
     attempts = jnp.floor(jnp.log(u) / log_loss).astype(jnp.int32) + 1
     attempts = jnp.clip(attempts, 1, int(max_retries) + 1)
     retx = jnp.where(loss > 0.0, attempts - 1, 0)
-    return retx.astype(jnp.float32) * jnp.float32(rto_s), retx
+    arq = BackoffPolicy(base_s=float(rto_s), factor=1.0,
+                        max_retries=int(max_retries))
+    return arq.total_delay(retx), retx
 
 
 def deadline_mask(arrivals: jax.Array, deadline) -> jax.Array:

@@ -209,10 +209,18 @@ class PacketTransport:
     # ------------------------------------------------------------------
     def _core_for(self, n: int):
         if n not in self._jit_core:
+            from .async_engine import (AsyncConfig, async_packet_dyn,
+                                       make_async_packet_core)
             from .faults import (FaultConfig, chaos_packet_dyn,
                                  make_chaos_packet_core)
             svc = service_time(self.profile, aligned=True)
-            if isinstance(self.net, FaultConfig):
+            if isinstance(self.net, AsyncConfig):
+                # async quorum-or-deadline dataplane (DESIGN.md §17):
+                # bit-identical to the plain core at full quorum
+                core = make_async_packet_core(self.cfg, self.net, n)
+                dyn = async_packet_dyn(self.cfg, self.net, n,
+                                       self.local_train_s, svc)
+            elif isinstance(self.net, FaultConfig):
                 # chaos dataplane (DESIGN.md §14): fault-injected core,
                 # bit-identical to the plain one at zero fault rates
                 core = make_chaos_packet_core(self.cfg, self.net, n)
@@ -234,8 +242,21 @@ class PacketTransport:
         n, d = u.shape
         core, dyn = self._core_for(n)
         rates = jnp.asarray(self._round_rates(n), jnp.float32)
-        delta, residuals, aux = core(u, key, self._net_base,
-                                     jnp.int32(round_idx), rates, dyn)
+        from .async_engine import ASYNC_STAT_FIELDS, AsyncConfig, \
+            init_async_carry
+        if isinstance(self.net, AsyncConfig):
+            # the carry buffer (pending late folds) rides through the
+            # aggregator-state slot — which the FL loop already threads
+            # round-to-round and checkpoints as agg_state, so async
+            # kill-and-resume needs no new machinery (DESIGN.md §17)
+            carry = state if state is not None else init_async_carry(d)
+            delta, residuals, aux, state = core(u, carry, key,
+                                                self._net_base,
+                                                jnp.int32(round_idx),
+                                                rates, dyn)
+        else:
+            delta, residuals, aux = core(u, key, self._net_base,
+                                         jnp.int32(round_idx), rates, dyn)
         n_up = int(aux["n_up"])
         n_part = int(aux["n_part"])
         up_mask = np.asarray(aux["uploaders"])
@@ -264,13 +285,23 @@ class PacketTransport:
         for k in CHAOS_STAT_FIELDS:
             if k in aux:
                 stats[k] = int(aux[k])
+        # async-core extras (present only under an AsyncConfig)
+        for k in ASYNC_STAT_FIELDS:
+            if k in aux:
+                stats[k] = float(aux[k]) if k in ("staleness_s_sum",
+                                                  "carry_weight") \
+                    else int(aux[k])
         # voters that missed the quorum still spent their phase-1 bytes,
-        # and every ARQ retransmission re-emits its packet's bytes.
+        # and every ARQ retransmission re-emits its packet's bytes.  Under
+        # the async close a late uploader's value packets hit the wire even
+        # when its update folds next round or bounces, so the byte price
+        # uses the announced uploader count, not the committed one.
         retx_bytes = retx_byte_count(aux["retransmissions"],
                                      aux["retx_last"], tr.phase2_bytes,
                                      self.net.mtu)
-        upload_bytes = (tr.phase1_bytes * n_part + tr.phase2_bytes * n_up
-                        + retx_bytes)
+        n_up_wire = int(aux.get("n_up_wire", n_up))
+        upload_bytes = (tr.phase1_bytes * n_part
+                        + tr.phase2_bytes * n_up_wire + retx_bytes)
         return RoundResult(delta, residuals, state, tr,
                            self._fediac_load(cfg, n_up if n_up else n, d, tr),
                            wall_clock_s=float(aux["wall_clock_s"]),

@@ -206,6 +206,12 @@ METRIC_KINDS = {
     "passes": "counter", "aggregation_ops": "counter",
     "crashed": "counter", "duplicates": "counter", "resets": "counter",
     "aborted": "counter", "attempts": "counter",
+    # async quorum-or-deadline close (DESIGN.md §17)
+    "late_folded": "counter", "late_bounced": "counter",
+    "late_folds": "counter", "late_bounces": "counter",
+    "folded_in": "counter", "quorum_met": "counter",
+    "staleness_s_sum": "histogram",
+    "buffer_occupancy": "gauge", "carry_weight": "gauge",
 }
 
 

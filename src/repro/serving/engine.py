@@ -15,7 +15,6 @@ interleaved prefill/decode, and eviction are real.
 
 from __future__ import annotations
 
-from collections import deque
 from dataclasses import dataclass, field
 
 import jax
@@ -23,6 +22,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models.model import decode_step, init_caches
+from repro.serving.admission import AdmissionQueue
 
 
 @dataclass
@@ -49,29 +49,36 @@ class ServingEngine:
         self.cache_len = cache_len
         self.ring = ring
         self.caches = init_caches(cfg, max_batch, cache_len)
-        self.queue: deque[Request] = deque()
-        self.slots: list[Request | None] = [None] * max_batch
+        self._adm = AdmissionQueue(max_batch, on_admit=self._reset_slot)
         self.pos = np.zeros(max_batch, np.int32)        # next position per slot
         self.cursor = np.zeros(max_batch, np.int32)     # prompt cursor per slot
         self._step = jax.jit(
             lambda p, tok, caches, pos: decode_step(p, cfg, tok, caches, pos,
                                                     ring=ring))
 
+    @property
+    def queue(self):
+        return self._adm.pending
+
+    @property
+    def slots(self) -> list[Request | None]:
+        return self._adm.slots
+
     def submit(self, req: Request) -> None:
-        self.queue.append(req)
+        self._adm.submit(req)
+
+    def _reset_slot(self, i: int, req: Request) -> None:
+        self.pos[i] = 0
+        self.cursor[i] = 0
+        # reset the slot's cache row: attention rows are position-
+        # masked anyway, but SSM recurrent state and conv history
+        # carry no positions and MUST be zeroed on recycle.
+        self.caches = jax.tree_util.tree_map(
+            lambda c: c.at[:, i].set(jnp.zeros_like(c[:, i])),
+            self.caches)
 
     def _admit(self) -> None:
-        for i in range(self.max_batch):
-            if self.slots[i] is None and self.queue:
-                self.slots[i] = self.queue.popleft()
-                self.pos[i] = 0
-                self.cursor[i] = 0
-                # reset the slot's cache row: attention rows are position-
-                # masked anyway, but SSM recurrent state and conv history
-                # carry no positions and MUST be zeroed on recycle.
-                self.caches = jax.tree_util.tree_map(
-                    lambda c: c.at[:, i].set(jnp.zeros_like(c[:, i])),
-                    self.caches)
+        self._adm.admit()
 
     def _next_tokens(self, last_logits) -> jnp.ndarray:
         """Choose each slot's next input token: prompt feed or greedy."""
@@ -107,7 +114,7 @@ class ServingEngine:
                 req.out.append(int(np.argmax(np_logits[i, -1])))
             self.pos[i] += 1
             if req.done or self.pos[i] >= self.cache_len:
-                self.slots[i] = None   # recycle the slot; cache row reused
+                self._adm.release(i)   # recycle the slot; cache row reused
         return np_logits
 
     def run(self, requests: list[Request], max_ticks: int = 10_000):

@@ -245,6 +245,9 @@ def _run_memory_cells(cells, probe):
 def _run_packet_cells(cells, probe):
     from repro.core.fediac import round_traffic
     from repro.netsim import packet_dyn, make_fediac_packet_core
+    from repro.netsim.async_engine import (AsyncConfig, async_packet_dyn,
+                                           init_async_carry,
+                                           make_async_packet_core)
     from repro.netsim.batched import retx_byte_count
     from repro.netsim.faults import (FaultConfig, chaos_packet_dyn,
                                      make_chaos_packet_core)
@@ -262,9 +265,16 @@ def _run_packet_cells(cells, probe):
     # Chaos cells (spec.chaos -> FaultConfig, DESIGN.md §14) swap in the
     # fault-injected core with the per-cell fault rates appended to dyn —
     # clean and faulty cells batch through the same compiled program.
+    # Async cells (spec.async_agg -> AsyncConfig, DESIGN.md §17) swap in
+    # the quorum-or-deadline core with the close knobs appended to dyn and
+    # the late-update carry buffer threaded as a batched state lane.
     cfg_core = spec0.core_kwargs()["cfg"]
     net_static = cells[0][0].net_config()
-    if isinstance(net_static, FaultConfig):
+    is_async = isinstance(net_static, AsyncConfig)
+    if is_async:
+        pcore = make_async_packet_core(cfg_core, net_static, n)
+        make_dyn = async_packet_dyn
+    elif isinstance(net_static, FaultConfig):
         pcore = make_chaos_packet_core(cfg_core, net_static, n)
         make_dyn = chaos_packet_dyn
     else:
@@ -283,37 +293,69 @@ def _run_packet_cells(cells, probe):
 
     # only the pricing scalars leave the program: keeping the full aux
     # (masks, vote counts) as jit outputs would force their per-round
-    # materialization and device->host copy just to be discarded
+    # materialization and device->host copy just to be discarded.  Async
+    # cells also keep n_up_wire — phase-2 bytes are priced per announced
+    # uploader, while n_up counts only the committed on-time set.
     keep = ("wall_clock_s", "n_part", "n_up", "retransmissions",
-            "retx_last")
+            "retx_last") + (("n_up_wire",) if is_async else ())
 
-    def cell_step(flat, e_stack, key, net_key, rates, lr, dyn, cx, cy, size,
-                  xt, yt, t):
-        key, k1, k2 = jax.random.split(key, 3)
-        u_stack, losses = client_round(flat, k1, lr, cx, cy, size)
-        u_stack = u_stack + e_stack
-        delta, residuals, aux = pcore(u_stack, k2, net_key, t, rates, dyn)
-        flat = flat - delta
-        pred = jnp.argmax(mlp_apply(unravel(flat), xt), axis=-1)
-        acc = (pred == yt).mean()
-        return (flat, residuals, key, acc, losses,
-                {k: aux[k] for k in keep})
+    if is_async:
+        # the carry buffer (pending late updates, DESIGN.md §17) is a
+        # batched lane of the fleet state, donated like flat/e_stack
+        carry_b = jax.tree_util.tree_map(
+            lambda *xs: jnp.stack(xs), *[init_async_carry(d) for _ in cells])
 
-    # round_idx is shared by every lane (in_axes None); state/keys donate
-    # exactly as the memory fleet does.
-    step = jax.jit(
-        jax.vmap(cell_step,
-                 in_axes=(0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, None)),
-        donate_argnums=(0, 1, 2))
+        def cell_step(flat, e_stack, carry, key, net_key, rates, lr, dyn,
+                      cx, cy, size, xt, yt, t):
+            key, k1, k2 = jax.random.split(key, 3)
+            u_stack, losses = client_round(flat, k1, lr, cx, cy, size)
+            u_stack = u_stack + e_stack
+            delta, residuals, aux, carry = pcore(u_stack, carry, k2,
+                                                 net_key, t, rates, dyn)
+            flat = flat - delta
+            pred = jnp.argmax(mlp_apply(unravel(flat), xt), axis=-1)
+            acc = (pred == yt).mean()
+            return (flat, residuals, carry, key, acc, losses,
+                    {k: aux[k] for k in keep})
+
+        step = jax.jit(
+            jax.vmap(cell_step, in_axes=(0,) * 13 + (None,)),
+            donate_argnums=(0, 1, 2, 3))
+    else:
+        def cell_step(flat, e_stack, key, net_key, rates, lr, dyn, cx, cy,
+                      size, xt, yt, t):
+            key, k1, k2 = jax.random.split(key, 3)
+            u_stack, losses = client_round(flat, k1, lr, cx, cy, size)
+            u_stack = u_stack + e_stack
+            delta, residuals, aux = pcore(u_stack, k2, net_key, t, rates,
+                                          dyn)
+            flat = flat - delta
+            pred = jnp.argmax(mlp_apply(unravel(flat), xt), axis=-1)
+            acc = (pred == yt).mean()
+            return (flat, residuals, key, acc, losses,
+                    {k: aux[k] for k in keep})
+
+        # round_idx is shared by every lane (in_axes None); state/keys
+        # donate exactly as the memory fleet does.
+        step = jax.jit(
+            jax.vmap(cell_step,
+                     in_axes=(0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, None)),
+            donate_argnums=(0, 1, 2))
     step = probe.wrap_jit(step, f"fleet_step_packet[{len(cells)}x{n}]")
 
     accs, loss_means, auxes = [], [], []
     for t in range(1, rounds + 1):
         with probe.span("fleet-round", round=t, cells=len(cells)):
-            (flat_b, e_b, key_b, acc, losses, aux) = step(
-                flat_b, e_b, key_b, net_key_b, rates_b,
-                _lr_t(lr0, lr_tau, t), dyn_b, batch["cx"], batch["cy"],
-                batch["size"], batch["xt"], batch["yt"], jnp.int32(t))
+            if is_async:
+                (flat_b, e_b, carry_b, key_b, acc, losses, aux) = step(
+                    flat_b, e_b, carry_b, key_b, net_key_b, rates_b,
+                    _lr_t(lr0, lr_tau, t), dyn_b, batch["cx"], batch["cy"],
+                    batch["size"], batch["xt"], batch["yt"], jnp.int32(t))
+            else:
+                (flat_b, e_b, key_b, acc, losses, aux) = step(
+                    flat_b, e_b, key_b, net_key_b, rates_b,
+                    _lr_t(lr0, lr_tau, t), dyn_b, batch["cx"], batch["cy"],
+                    batch["size"], batch["xt"], batch["yt"], jnp.int32(t))
             accs.append(np.asarray(acc))
             loss_means.append(_eager_loss_means(losses))
             auxes.append({k: np.asarray(v) for k, v in aux.items()})
@@ -334,8 +376,9 @@ def _run_packet_cells(cells, probe):
             retx_bytes = retx_byte_count(auxes[t]["retransmissions"][b],
                                          auxes[t]["retx_last"][b],
                                          tr.phase2_bytes, mtu)
+            n_wire = int(auxes[t]["n_up_wire" if is_async else "n_up"][b])
             up_bytes = (tr.phase1_bytes * int(auxes[t]["n_part"][b])
-                        + tr.phase2_bytes * int(auxes[t]["n_up"][b])
+                        + tr.phase2_bytes * n_wire
                         + retx_bytes)
             mb_cum += up_bytes / 1e6 + tr.total_bytes * n / 1e6
             retx_total += int(auxes[t]["retransmissions"][b])

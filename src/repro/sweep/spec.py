@@ -48,6 +48,17 @@ _FAULT_DYNAMIC = ("ge_p_gb", "ge_p_bg", "ge_loss_bad", "crash_rate",
                                         # quorum_floor, round_retries,
                                         # consensus_floor) stay in the
                                         # signature.
+_ASYNC_DYNAMIC = ("quorum_frac", "staleness_weight", "staleness_gamma",
+                  "staleness_cap")
+                                        # async-cell traced close knobs
+                                        # (DESIGN.md §17): a quorum x
+                                        # staleness grid rides one compiled
+                                        # async program.  The structural
+                                        # knobs (async_agg, staleness_mode,
+                                        # late_policy, round_deadline_s —
+                                        # the deadline's *presence* changes
+                                        # the close program) stay in the
+                                        # signature.
 
 
 @dataclass(frozen=True)
@@ -112,6 +123,17 @@ class ScenarioSpec:
     round_retries: int = 2
     backoff_s: float = 0.1
     consensus_floor: int = 0       # FediACConfig dense-mask fallback floor
+    # --- async quorum-or-deadline close (DESIGN.md §17; packet transport
+    # only).  async_agg=True builds an AsyncConfig round core; the scalar
+    # close knobs are fleet-dynamic, the mode/policy fields structural.
+    async_agg: bool = False
+    quorum_frac: float = 1.0
+    round_deadline_s: float | None = None
+    staleness_mode: str = "constant"
+    staleness_weight: float = 1.0
+    staleness_gamma: float = 1.0
+    staleness_cap: float = 4.0
+    late_policy: str = "fold"
 
     def __post_init__(self):
         check_interval("k_frac", self.k_frac, 0.0, 1.0, lo_open=True)
@@ -147,6 +169,20 @@ class ScenarioSpec:
         check_at_least("quorum_floor", self.quorum_floor, 0)
         check_at_least("round_retries", self.round_retries, 0)
         check_at_least("consensus_floor", self.consensus_floor, 0)
+        if self.async_agg and self.chaos:
+            raise ValueError("async_agg and chaos are mutually exclusive "
+                             "(one round core per cell)")
+        check_choice("staleness_mode", self.staleness_mode,
+                     ("constant", "poly", "cap"))
+        check_choice("late_policy", self.late_policy, ("fold", "bounce"))
+        check_interval("quorum_frac", self.quorum_frac, 0.0, 1.0,
+                       lo_open=True)
+        if self.round_deadline_s is not None:
+            check_positive_finite("round_deadline_s", self.round_deadline_s)
+        check_interval("staleness_weight", self.staleness_weight, 0.0, 1.0,
+                       lo_open=True)
+        check_finite_at_least("staleness_gamma", self.staleness_gamma, 0.0)
+        check_finite_at_least("staleness_cap", self.staleness_cap, 0.0)
         from repro.core import engines
         engines.get(self.engine)   # registered name or EngineSpec
 
@@ -185,11 +221,22 @@ class ScenarioSpec:
 
     def net_config(self):
         """The :class:`repro.netsim.NetConfig` of a packet cell — a
-        :class:`repro.netsim.FaultConfig` when ``chaos`` is set."""
-        from repro.netsim import FaultConfig, NetConfig
+        :class:`repro.netsim.FaultConfig` when ``chaos`` is set, a
+        :class:`repro.netsim.AsyncConfig` when ``async_agg`` is set."""
+        from repro.netsim import AsyncConfig, FaultConfig, NetConfig
         base = dict(loss=self.loss, participation=self.participation,
                     straggler_frac=self.straggler_frac,
                     n_leaves=self.n_leaves, seed=self.net_seed)
+        if self.async_agg:
+            return AsyncConfig(quorum_frac=self.quorum_frac,
+                               round_deadline_s=self.round_deadline_s,
+                               staleness_mode=self.staleness_mode,
+                               staleness_weight=self.staleness_weight,
+                               staleness_gamma=self.staleness_gamma,
+                               staleness_cap=self.staleness_cap,
+                               late_policy=self.late_policy,
+                               register_policy=self.register_policy,
+                               **base)
         if not self.chaos:
             return NetConfig(**base)
         return FaultConfig(ge_p_gb=self.ge_p_gb, ge_p_bg=self.ge_p_bg,
@@ -261,7 +308,8 @@ class ScenarioSpec:
         (switch profile, local train time for memory cells).
         """
         excluded = (_FEDIAC_DYNAMIC + _PRICING_ONLY + _DATA_ONLY
-                    + _NET_DYNAMIC + _FAULT_DYNAMIC + ("lr0", "lr_tau"))
+                    + _NET_DYNAMIC + _FAULT_DYNAMIC + _ASYNC_DYNAMIC
+                    + ("lr0", "lr_tau"))
         items = tuple(sorted((k, v) for k, v in self.__dict__.items()
                              if k not in excluded))
         return (self.algorithm,) + items

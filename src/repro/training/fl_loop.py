@@ -81,7 +81,17 @@ class FLConfig:
     transport is bit-identical to the in-memory FediAC engine.  ``net``
     may also be a ``netsim.FaultConfig`` (DESIGN.md §14): the chaos
     dataplane — bursty loss, crashes, duplicates, register faults —
-    bit-identical to the plain core at zero fault rates.
+    bit-identical to the plain core at zero fault rates.  Or a
+    ``netsim.AsyncConfig`` (DESIGN.md §17): the async quorum-or-deadline
+    close — the switch folds phase-2 payloads as they land and closes
+    the round once ``quorum_frac`` of the uploaders arrive or the
+    ``round_deadline_s`` budget expires, folding late updates into the
+    next round at a staleness-decayed weight (or bouncing them to the
+    client's residual) instead of waiting for stragglers.  The pending
+    carry buffer rides the aggregator-state slot, so ``ckpt_path``
+    checkpoints it round-granularly and kill-and-resume reproduces the
+    async history bit-exactly; at full quorum with no deadline the async
+    transport is bit-identical to the synchronous packet core.
 
     Crash-safe recovery (DESIGN.md §14): set ``ckpt_path`` to persist the
     loop's inter-round state (model, error-feedback stack, PRNG key,

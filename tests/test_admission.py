@@ -1,0 +1,81 @@
+"""Unit tests for the extracted admission-queue primitives (DESIGN.md §7,
+§17): FIFO order, index-order slot filling, continuous recycling, the
+``on_admit`` hook, and the serving engine's delegation to the shared
+queue."""
+
+import pytest
+
+from repro.serving.admission import AdmissionQueue
+
+
+def test_rejects_empty_pool():
+    with pytest.raises(ValueError, match="n_slots"):
+        AdmissionQueue(0)
+
+
+def test_fifo_order_and_index_order_slots():
+    q = AdmissionQueue(2)
+    for item in "abcd":
+        q.submit(item)
+    assert q.n_pending == 4 and q.n_active == 0 and not q.idle()
+    admitted = q.admit()
+    # head of the FIFO lands in the lowest free slot
+    assert admitted == [(0, "a"), (1, "b")]
+    assert q.slots == ["a", "b"] and q.n_pending == 2
+    # no free slot -> nothing admitted, queue untouched
+    assert q.admit() == []
+    assert list(q.pending) == ["c", "d"]
+
+
+def test_release_recycles_and_preserves_neighbours():
+    q = AdmissionQueue(3)
+    for item in "abcde":
+        q.submit(item)
+    q.admit()
+    assert q.release(1) == "b"
+    # the freed middle slot admits the next pending item; neighbours keep
+    # their slots (continuous batching, not a re-pack)
+    assert q.admit() == [(1, "d")]
+    assert q.slots == ["a", "d", "c"]
+    assert list(q.active()) == [(0, "a"), (1, "d"), (2, "c")]
+    assert q.n_active == 3 and q.n_pending == 1
+
+
+def test_on_admit_hook_fires_once_per_admission():
+    calls = []
+    q = AdmissionQueue(2, on_admit=lambda i, item: calls.append((i, item)))
+    q.submit("x")
+    q.submit("y")
+    q.admit()
+    q.admit()                      # no new admissions -> no new calls
+    assert calls == [(0, "x"), (1, "y")]
+    q.release(0)
+    q.submit("z")
+    q.admit()
+    assert calls == [(0, "x"), (1, "y"), (0, "z")]
+
+
+def test_drain_to_idle():
+    q = AdmissionQueue(2)
+    for i in range(5):
+        q.submit(i)
+    done = []
+    while not q.idle():
+        q.admit()
+        for slot, item in list(q.active()):
+            done.append(item)
+            q.release(slot)
+    # FIFO end to end: every item served exactly once, in order
+    assert done == [0, 1, 2, 3, 4]
+    assert q.idle()
+
+
+def test_serving_engine_delegates_to_shared_queue():
+    # the engine's queue/slots views are the shared AdmissionQueue's state
+    from repro.serving.engine import ServingEngine
+    eng = ServingEngine.__new__(ServingEngine)   # no model needed here
+    eng._adm = AdmissionQueue(2)
+    eng.submit("req")
+    assert list(eng.queue) == ["req"]
+    eng._admit()
+    assert eng.slots == ["req", None]

@@ -1,0 +1,100 @@
+"""The unified timeout/retry/backoff policy (DESIGN.md §17 satellite):
+one validated ``BackoffPolicy`` serves both the phase-2 ARQ clock
+(constant RTO spacing, ``NetConfig.arq_policy``) and the §14 chaos
+quorum-retry backoff (bounded exponential, ``FaultConfig.retry_policy``)
+— with parametrized validation-raise tests on the ``repro.validate``
+error contract."""
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.netsim import FaultConfig, NetConfig
+from repro.netsim.policies import BackoffPolicy
+from repro.netsim.timeline import retransmit_delays
+
+
+@pytest.mark.parametrize("kw,field", [
+    (dict(base_s=-0.1), "base_s"),
+    (dict(base_s=math.nan), "base_s"),
+    (dict(base_s=math.inf), "base_s"),
+    (dict(base_s=0.1, factor=0.5), "factor"),
+    (dict(base_s=0.1, factor=math.nan), "factor"),
+    (dict(base_s=0.1, cap_s=0.0), "cap_s"),
+    (dict(base_s=0.1, cap_s=-1.0), "cap_s"),
+    (dict(base_s=0.1, cap_s=math.nan), "cap_s"),
+    (dict(base_s=0.1, max_retries=-1), "max_retries"),
+    (dict(base_s=0.1, jitter_frac=-0.01), "jitter_frac"),
+    (dict(base_s=0.1, jitter_frac=1.0), "jitter_frac"),
+])
+def test_invalid_policies_raise_with_field_name(kw, field):
+    with pytest.raises(ValueError, match=field):
+        BackoffPolicy(**kw)
+
+
+def test_delays_exponential_and_capped():
+    p = BackoffPolicy(base_s=0.1, factor=2.0, cap_s=0.5, max_retries=8)
+    d = np.asarray(p.delays(5))
+    np.testing.assert_allclose(d, [0.1, 0.2, 0.4, 0.5, 0.5], rtol=1e-6)
+    # inf cap = unbounded growth
+    d = np.asarray(BackoffPolicy(base_s=0.1, factor=2.0).delays(4))
+    np.testing.assert_allclose(d, [0.1, 0.2, 0.4, 0.8], rtol=1e-6)
+
+
+def test_total_delay_constant_factor_is_bitwise_arq():
+    # the ARQ path: k retries at constant RTO == k * float32(rto)
+    p = NetConfig(rto_s=0.05, max_retries=16).arq_policy()
+    assert p.factor == 1.0
+    k = jnp.asarray([0, 1, 3, 16], jnp.int32)
+    got = np.asarray(p.total_delay(k))
+    want = np.asarray(k, np.float32) * np.float32(0.05)
+    assert got.tobytes() == want.tobytes()
+
+
+def test_retransmit_delays_unchanged_through_shared_policy():
+    # the timeline's ARQ clock still produces retx * float32(rto) bitwise
+    key = jax.random.PRNGKey(0)
+    delay, retx = retransmit_delays(key, (6, 9), 0.3, 0.05, 16)
+    want = np.asarray(retx, np.float32) * np.float32(0.05)
+    assert np.asarray(delay).tobytes() == want.tobytes()
+    # loss == 0 -> single attempt, zero added delay
+    delay0, retx0 = retransmit_delays(key, (6, 9), 0.0, 0.05, 16)
+    assert np.all(np.asarray(retx0) == 0)
+    assert np.all(np.asarray(delay0) == 0.0)
+
+
+def test_total_delay_growing_factor_is_cumsum_of_delays():
+    p = BackoffPolicy(base_s=0.1, factor=2.0, cap_s=1.0, max_retries=6)
+    d = np.asarray(p.delays(6))
+    for k in range(7):
+        got = float(p.total_delay(jnp.int32(k)))
+        np.testing.assert_allclose(got, float(d[:k].sum()), rtol=1e-6)
+    # k beyond max_retries clips to the full table
+    assert float(p.total_delay(jnp.int32(99))) == \
+        float(p.total_delay(jnp.int32(7)))
+
+
+def test_base_override_matches_faults_usage():
+    # the chaos core passes the traced per-cell backoff_s as the base
+    p = FaultConfig(backoff_s=0.25, round_retries=3).retry_policy()
+    assert p.factor == 2.0 and p.max_retries == 3
+    d = np.asarray(p.delays(3, base=jnp.float32(0.5)))
+    np.testing.assert_allclose(d, [0.5, 1.0, 2.0], rtol=1e-6)
+
+
+def test_jitter_bounded_and_deterministic():
+    p = BackoffPolicy(base_s=0.1, factor=2.0, max_retries=4, jitter_frac=0.5)
+    d = p.delays(5)
+    j1 = np.asarray(p.jittered(d, jax.random.PRNGKey(7)))
+    j2 = np.asarray(p.jittered(d, jax.random.PRNGKey(7)))
+    assert j1.tobytes() == j2.tobytes()         # threefry-deterministic
+    base = np.asarray(d)
+    assert np.all(j1 >= base * 0.5) and np.all(j1 <= base * 1.5)
+    assert np.any(j1 != base)
+    # zero jitter is the identity
+    p0 = BackoffPolicy(base_s=0.1, factor=2.0)
+    assert np.asarray(p0.jittered(d, jax.random.PRNGKey(7))).tobytes() == \
+        base.astype(np.float32).tobytes()

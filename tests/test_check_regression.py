@@ -4,7 +4,7 @@ recompute is CI's job)."""
 
 from __future__ import annotations
 
-from benchmarks.check_regression import (compare_aggregation,
+from benchmarks.check_regression import (compare_aggregation, compare_async,
                                          compare_dataplane, compare_faults,
                                          compare_obs, compare_sweep,
                                          inject_drift)
@@ -50,6 +50,13 @@ def _tracked_stub():
                      "per_round_complete": True},
            "overhead": {"overhead_ratio": 1.05, "overhead_max": 1.10,
                         "within_budget": True}}
+    asyn = {"identity": {"full_quorum_is_sync": True,
+                         "fleet_bit_identical_all": True,
+                         "fleet_cells": [{"name": "aq-fleet-half",
+                                          "bit_identical": True}]},
+            "throughput": {"speedup_high_straggler": 2.16,
+                           "acc_within_band": True},
+            "resume": {"resume_identical": True}}
     return {
         "aggregation": {"cells": [agg_cell, stream_cell, shard_cell]},
         "dataplane": {"rounds": 12, "memory_transport_acc": 0.81,
@@ -63,6 +70,7 @@ def _tracked_stub():
         "sweep": {"cells": [sweep_cell], "speedup": 4.0},
         "faults": faults,
         "obs": obs,
+        "async": asyn,
     }
 
 
@@ -96,6 +104,12 @@ def _fresh_stub(tracked):
         "obs": {"trace": dict(tracked["obs"]["trace"]),
                 "overhead": {**tracked["obs"]["overhead"],
                              "overhead_ratio": 1.08}},
+        "async": {"identity": {"full_quorum_is_sync": True,
+                               "fleet_bit_identical_all": True,
+                               "fleet_cells": []},
+                  "throughput": {"speedup_high_straggler": 1.9,
+                                 "acc_within_band": True},
+                  "resume": {"resume_identical": True}},
     }
 
 
@@ -108,6 +122,7 @@ def test_gate_green_on_matching_payloads():
     assert compare_sweep(tracked["sweep"], fresh["sweep"]) == []
     assert compare_faults(tracked["faults"], fresh["faults"]) == []
     assert compare_obs(tracked["obs"], fresh["obs"]) == []
+    assert compare_async(tracked["async"], fresh["async"]) == []
 
 
 def test_gate_red_on_injected_drift():
@@ -119,6 +134,7 @@ def test_gate_red_on_injected_drift():
     assert compare_sweep(drifted["sweep"], fresh["sweep"])
     assert compare_faults(drifted["faults"], fresh["faults"])
     assert compare_obs(drifted["obs"], fresh["obs"])
+    assert compare_async(drifted["async"], fresh["async"])
 
 
 def test_gate_red_on_specific_regressions():
@@ -231,6 +247,34 @@ def test_gate_red_on_specific_regressions():
     assert compare_obs(tracked["obs"], fresh["obs"])
     # an obs payload missing its sections entirely
     assert compare_obs({}, _fresh_stub(tracked)["obs"])
+    # the tracked async baseline slipping below the 1.5x throughput floor
+    slow_async = _tracked_stub()
+    slow_async["async"]["throughput"]["speedup_high_straggler"] = 1.4
+    fresh = _fresh_stub(tracked)
+    assert compare_async(slow_async["async"], fresh["async"])
+    # ... while the fresh smoke cell has its own (lower) floor
+    fresh = _fresh_stub(tracked)
+    fresh["async"]["throughput"]["speedup_high_straggler"] = 1.05
+    assert compare_async(tracked["async"], fresh["async"])
+    # the full-quorum anchor losing bit-identity with the sync dataplane
+    fresh = _fresh_stub(tracked)
+    fresh["async"]["identity"]["full_quorum_is_sync"] = False
+    assert compare_async(tracked["async"], fresh["async"])
+    # a tracked async fleet cell drifting from its sequential run
+    drift_cell = _tracked_stub()
+    drift_cell["async"]["identity"]["fleet_cells"][0]["bit_identical"] = False
+    fresh = _fresh_stub(tracked)
+    assert compare_async(drift_cell["async"], fresh["async"])
+    # the quorum close costing more accuracy than the band allows
+    fresh = _fresh_stub(tracked)
+    fresh["async"]["throughput"]["acc_within_band"] = False
+    assert compare_async(tracked["async"], fresh["async"])
+    # a resume with a partially-filled carry buffer diverging
+    fresh = _fresh_stub(tracked)
+    fresh["async"]["resume"]["resume_identical"] = False
+    assert compare_async(tracked["async"], fresh["async"])
+    # an async payload missing its sections entirely
+    assert compare_async({}, _fresh_stub(tracked)["async"])
 
 
 def test_accuracy_tolerates_cross_host_ulps():

@@ -303,12 +303,31 @@ def test_dataplane_merge_field_complete():
 
 
 def test_dataplane_to_metrics_covers_every_field():
-    st = DataplaneStats(votes_lost=3, passes=2, peak_live_slots=9,
-                        aggregation_ops=40, overflow_slots=1)
+    # introspective pin: a field added to DataplaneStats (e.g. the async
+    # close's late_folds/late_bounces) is covered by construction — a
+    # forgotten emission path fails here instead of silently dropping.
+    names = [f.name for f in dataclasses.fields(DataplaneStats)]
+    assert "late_folds" in names and "late_bounces" in names
+    st = DataplaneStats(**{name: i + 1 for i, name in enumerate(names)})
     m = st.to_metrics()
-    assert m == {"votes_lost": 3.0, "passes": 2.0, "peak_live_slots": 9.0,
-                 "aggregation_ops": 40.0, "overflow_slots": 1.0}
+    assert m == {name: float(i + 1) for i, name in enumerate(names)}
     assert all(isinstance(v, float) for v in m.values())
+    # every event-count field has a declared counter taxonomy kind (the
+    # residency field is the one genuine level gauge)
+    for name in names:
+        if name != "peak_live_slots":
+            assert metric_kind(name) == "counter", name
+
+
+def test_dataplane_merge_covers_every_field():
+    names = [f.name for f in dataclasses.fields(DataplaneStats)]
+    a = DataplaneStats(**{name: i + 1 for i, name in enumerate(names)})
+    b = DataplaneStats(**{name: 2 * (i + 1) for i, name in enumerate(names)})
+    m = a.merge(b)
+    for i, name in enumerate(names):
+        want = max(i + 1, 2 * (i + 1)) if name in DataplaneStats._MAX_FIELDS \
+            else (i + 1) + 2 * (i + 1)
+        assert getattr(m, name) == want, name
 
 
 def test_chaos_stat_fields_reach_transport_stats(u_stack):
@@ -320,6 +339,20 @@ def test_chaos_stat_fields_reach_transport_stats(u_stack):
     m = r.to_metrics()
     for f in CHAOS_STAT_FIELDS:
         assert f in m, f
+
+
+def test_async_stat_fields_reach_transport_stats(u_stack):
+    from repro.netsim import ASYNC_STAT_FIELDS, AsyncConfig
+    tp = PacketTransport("fediac", {"cfg": FediACConfig(a=2)},
+                         net=AsyncConfig(loss=0.0))
+    r = tp.round(u_stack, None, jax.random.PRNGKey(0), round_idx=0)
+    for f in ASYNC_STAT_FIELDS:
+        assert f in r.stats, f
+    m = r.to_metrics()
+    for f in ASYNC_STAT_FIELDS:
+        assert f in m, f
+        assert metric_kind(f) != "gauge" or f in ("buffer_occupancy",
+                                                  "carry_weight"), f
 
 
 def test_flhistory_structured_records_with_legacy_views():

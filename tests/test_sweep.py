@@ -151,6 +151,30 @@ def test_packet_fleet_matches_memory_when_lossless():
     assert h["pk"].traffic_mb == h["mem"].traffic_mb
 
 
+def test_async_fleet_bit_identical_quorum_grid():
+    """Async quorum-or-deadline cells (DESIGN.md §17) — different vote
+    thresholds, quorum fractions, staleness knobs and net conditions —
+    ride ONE vmapped program with the late-update carry threaded as a
+    batched state lane; each cell equals its sequential PacketTransport
+    run exactly (history bit-identity, n_up_wire byte pricing included)."""
+    base = dict(algorithm="fediac", transport="packet", async_agg=True,
+                staleness_mode="poly", **TINY)
+    specs = [ScenarioSpec(name="aq-half", a=2, quorum_frac=0.5,
+                          straggler_frac=0.5, net_seed=3, **base),
+             ScenarioSpec(name="aq-most", a=3, quorum_frac=0.75,
+                          staleness_gamma=2.0, loss=0.05,
+                          participation=0.75, net_seed=1, **base)]
+    assert len({s.batch_signature() for s in specs}) == 1
+    assert all(s.batchable() for s in specs)
+    # async_agg is structural: the group never mixes with sync packet cells
+    sync = ScenarioSpec(algorithm="fediac", a=2, transport="packet", **TINY)
+    assert specs[0].batch_signature() != sync.batch_signature()
+    result = run_sweep(specs, (0,))
+    for cr in result:
+        _assert_same(run_cell_sequential(cr.spec, cr.seed), cr.history,
+                     cr.key)
+
+
 def test_cell_key_stable_and_flat():
     spec = ScenarioSpec(name="x/y", algorithm="fediac", a=2, **TINY)
     k = cell_key(spec, 7)
