@@ -2,8 +2,9 @@
 
 Compares a fresh smoke run against the tracked benchmark baselines at the
 repo root — ``BENCH_aggregation.json``, ``BENCH_dataplane.json``,
-``BENCH_sweep.json``, ``BENCH_faults.json``, ``BENCH_obs.json`` and
-``BENCH_async.json`` — and exits non-zero on drift.
+``BENCH_sweep.json``, ``BENCH_faults.json``, ``BENCH_obs.json``,
+``BENCH_async.json`` and ``BENCH_robust.json`` — and exits non-zero on
+drift.
 
 Gating policy, by how machine-dependent each quantity is:
 
@@ -31,7 +32,7 @@ Gating policy, by how machine-dependent each quantity is:
 
 Refreshing baselines after an intentional change: re-run the producing
 benchmarks (``python -m
-benchmarks.{aggregation_round,dataplane,sweep,faults,obs,async_throughput}``)
+benchmarks.{aggregation_round,dataplane,sweep,faults,obs,async_throughput,robust}``)
 on an idle machine and commit the regenerated ``BENCH_*.json``.
 """
 
@@ -51,6 +52,7 @@ TRACKED = {
     "faults": os.path.join(ROOT, "BENCH_faults.json"),
     "obs": os.path.join(ROOT, "BENCH_obs.json"),
     "async": os.path.join(ROOT, "BENCH_async.json"),
+    "robust": os.path.join(ROOT, "BENCH_robust.json"),
 }
 WALL_TOL = 4.0   # wall-clock band: fresh within [tracked/4, tracked*4]
 ACC_TOL = 0.005  # |final_acc drift| tolerated (cross-host XLA ulps only;
@@ -65,6 +67,15 @@ ASYNC_SMOKE_SPEEDUP_MIN = 1.1  # fresh smoke async cell: same quantity at
                                # the tiny smoke model, also deterministic
 OBS_OVERHEAD_MAX = 1.10     # probe cost: traced/untraced paired-ratio
                             # ceiling on the tracked smoke cell (§15)
+ROBUST_DEFENSE_FLOOR = 0.9  # tracked defended final acc >= 0.9x clean at
+                            # 25% Byzantine (§18); full-run rounds only,
+                            # so the fresh smoke payload is not floored
+ROBUST_ATTACK_CEILING = 0.5  # ... while the tracked undefended attack
+                             # must demonstrably collapse the run
+ROBUST_OVERHEAD_MAX = 1.15  # defended-vs-undefended robust round paired
+                            # ratio ceiling (§18) for the tracked 40-rep run
+ROBUST_OVERHEAD_SMOKE_MAX = 1.25  # fresh smoke uses few reps on a noisy
+                                  # CI box — looser ceiling, same invariant
 RSS_TOL = 2.0    # peak-RSS band: generous — the jax/XLA runtime floor and
                  # allocator behavior move between releases, but a streaming
                  # cell silently regressing to monolithic footprints will
@@ -166,13 +177,27 @@ def fresh_async() -> dict:
             "resume": resume_section(smoke=True)}
 
 
+def fresh_robust() -> dict:
+    """The Byzantine-robustness smoke audits (DESIGN.md §18): the
+    zero-adversary bit-identity anchor, the attack-grid fleet audit
+    (one batch signature), and the defended-vs-undefended overhead
+    paired ratio.  Smoke rounds are too few for training signal, so the
+    defense scorecard is carried but only gated on the tracked full
+    run."""
+    from .robust import grid_section, overhead_section
+    ident, defense = grid_section(smoke=True)
+    return {"identity": ident, "defense": defense,
+            "overhead": overhead_section(smoke=True)}
+
+
 def compute_fresh(tracked: dict) -> dict:
     return {"aggregation": fresh_aggregation(),
             "dataplane": fresh_dataplane(int(tracked["dataplane"]["rounds"])),
             "sweep": fresh_sweep(),
             "faults": fresh_faults(),
             "obs": fresh_obs(),
-            "async": fresh_async()}
+            "async": fresh_async(),
+            "robust": fresh_robust()}
 
 
 # ---------------------------------------------------------------------------
@@ -469,6 +494,63 @@ def compare_async(tracked: dict, fresh: dict) -> list:
     return fails
 
 
+def compare_robust(tracked: dict, fresh: dict) -> list:
+    """Robustness gate (DESIGN.md §18): the tracked baseline and the
+    fresh smoke run must both hold the structural invariants — the
+    attack-clean cell bit-identical to the plain packet dataplane,
+    fleet/sequential bit-identity for every attack cell, the whole
+    attack x defense grid on one batch signature, and the defense
+    overhead inside its paired-ratio budget (``ROBUST_OVERHEAD_MAX``
+    tracked, ``ROBUST_OVERHEAD_SMOKE_MAX`` for the few-rep fresh smoke).
+    The accuracy scorecard gates on the tracked full run only (smoke
+    rounds carry no training signal): the defended cell must recover
+    ``ROBUST_DEFENSE_FLOOR`` of the clean accuracy while the undefended
+    attack collapses below ``ROBUST_ATTACK_CEILING``."""
+    fails = []
+    for label, payload in (("tracked", tracked), ("fresh", fresh)):
+        ident = payload.get("identity")
+        ov = payload.get("overhead")
+        if not ident or not ov:
+            fails.append(f"{label} robust payload lacks identity/overhead")
+            continue
+        if not ident.get("bit_identical_zero_adversary", False):
+            fails.append(f"{label} attack-clean cell diverged from the "
+                         "plain packet dataplane")
+        if not ident.get("fleet_bit_identical_all", False):
+            fails.append(f"{label} attack fleet lost fleet/sequential "
+                         "bit-identity")
+        for c in ident.get("cells", []):
+            if not c.get("bit_identical", False):
+                fails.append(f"{label} attack cell {c['name']} lost "
+                             "fleet/sequential bit-identity")
+        if ident.get("n_batch_signatures", 0) != 1:
+            fails.append(f"{label} attack grid split into "
+                         f"{ident.get('n_batch_signatures')} batch "
+                         "signatures (defenses stopped batching)")
+        ov_max = (ROBUST_OVERHEAD_MAX if label == "tracked"
+                  else ROBUST_OVERHEAD_SMOKE_MAX)
+        if ov["overhead_ratio"] > ov_max:
+            fails.append(f"{label} defense overhead {ov['overhead_ratio']} "
+                         f"above the {ov_max}x budget")
+    defense = tracked.get("defense")
+    if not defense:
+        fails.append("tracked robust payload lacks the defense scorecard")
+        return fails
+    if defense.get("defended_ratio", 0.0) < ROBUST_DEFENSE_FLOOR:
+        fails.append(f"tracked defended accuracy recovered only "
+                     f"{defense.get('defended_ratio')} of clean (floor "
+                     f"{ROBUST_DEFENSE_FLOOR})")
+    if defense.get("undefended_ratio", 1.0) > ROBUST_ATTACK_CEILING:
+        fails.append(f"tracked undefended attack retained "
+                     f"{defense.get('undefended_ratio')} of clean accuracy "
+                     f"(ceiling {ROBUST_ATTACK_CEILING}: the attack no "
+                     "longer demonstrates damage)")
+    if defense.get("undefended_acc", 1.0) >= defense.get("defended_acc", 0.0):
+        fails.append("tracked undefended attack outperformed the defended "
+                     "run — the defenses buy nothing")
+    return fails
+
+
 COMPARATORS = {
     "aggregation": compare_aggregation,
     "dataplane": compare_dataplane,
@@ -476,6 +558,7 @@ COMPARATORS = {
     "faults": compare_faults,
     "obs": compare_obs,
     "async": compare_async,
+    "robust": compare_robust,
 }
 
 
@@ -507,6 +590,10 @@ def inject_drift(tracked: dict) -> dict:
     drifted["async"]["identity"]["full_quorum_is_sync"] = False
     drifted["async"]["throughput"]["speedup_high_straggler"] = 1.0
     drifted["async"]["resume"]["resume_identical"] = False
+    drifted["robust"]["identity"]["bit_identical_zero_adversary"] = False
+    drifted["robust"]["identity"]["n_batch_signatures"] = 5
+    drifted["robust"]["defense"]["defended_ratio"] = 0.5
+    drifted["robust"]["overhead"]["overhead_ratio"] = 2.0
     return drifted
 
 

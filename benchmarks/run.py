@@ -17,7 +17,7 @@ import time
 
 from . import (accuracy_vs_time, aggregation_ops, aggregation_round,
                async_throughput, compression_error, dataplane, faults,
-               kernel_micro, noniid, obs, roofline, sweep, traffic,
+               kernel_micro, noniid, obs, robust, roofline, sweep, traffic,
                vote_threshold)
 from .common import emit
 
@@ -33,6 +33,7 @@ SECTIONS = {
     "dataplane": dataplane.run,         # packet dataplane: loss x participation
     "faults": faults.run,               # chaos dataplane: faults + recovery
     "async": async_throughput.run,      # async close: identity + throughput
+    "robust": robust.run,               # Byzantine attacks x defenses
     "sweep": sweep.run,                 # fleet runner vs sequential loop
     "roofline": roofline.run,           # dry-run roofline table
     "obs": obs.run,                     # telemetry: trace audit + overhead

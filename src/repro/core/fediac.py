@@ -41,7 +41,7 @@ from repro.compat import axis_size
 from repro.validate import (check_at_least, check_choice, check_interval,
                             require)
 
-from . import compaction, voting
+from . import compaction, robust_agg, voting
 from .quantize import dequantize, quantize, scale_factor
 from .round_plan import RoundPlan, build_round_plan
 
@@ -106,6 +106,16 @@ class FediACConfig:
     # fallback; applied once per round inside build_round_plan, so every
     # engine (monolithic, stream, packet, allreduce) inherits it.
     consensus_floor: int = 0
+    # Byzantine-robust slot aggregation (DESIGN.md §18): how the client
+    # axis closes within each consensus slot.  "sum" is the paper's plain
+    # integer addition (every call site Python-gates on it — the sum
+    # program is unchanged, not merely equal); "trim" drops the
+    # floor(trim_frac * n) smallest and largest live values per slot;
+    # "median" is the maximal trim.  All engines aggregate through the
+    # core.robust_agg.client_sum seam; the allreduce wire path requires
+    # "sum" (a psum cannot compute order statistics in-network).
+    robust_agg: str = "sum"
+    trim_frac: float = 0.0
 
     def __post_init__(self):
         check_interval("k_frac", self.k_frac, 0.0, 1.0, lo_open=True)
@@ -124,6 +134,8 @@ class FediACConfig:
         check_choice("compact_mode", self.compact_mode, ("topk", "block"))
         check_choice("vote_wire", self.vote_wire, ("count", "packed"))
         check_choice("granularity", self.granularity, ("model", "tensor"))
+        check_choice("robust_agg", self.robust_agg, robust_agg.ROBUST_AGG_MODES)
+        check_interval("trim_frac", self.trim_frac, 0.0, 0.5, hi_open=True)
         from . import engines
         engines.get(self.engine)   # registered name or EngineSpec
 
@@ -380,15 +392,18 @@ def aggregate_stack(u_stack: jax.Array, cfg: FediACConfig, key: jax.Array,
         q_dense, residuals = jax.vmap(
             lambda u, k: _block_compress_dense(u, cfg, f, k, plan))(u_stack,
                                                                     q_keys)
-        summed = q_dense.sum(axis=0)   # the PS's pipelined integer addition
+        # the PS's pipelined integer addition (or its §18 order-statistic
+        # close — robust_agg.client_sum Python-gates on "sum")
+        summed, kept = robust_agg.client_sum(q_dense, cfg)
         delta = jnp.where(plan.keep_dense, summed,
-                          0).astype(jnp.float32) / (n * f)
+                          0).astype(jnp.float32) / (kept * f)
         return delta, residuals, counts, round_traffic(cfg, d)
     compress = phase2_compress(cfg)
     q_bufs, residuals = jax.vmap(
         lambda u, k: compress(u, cfg, f, k, plan))(u_stack, q_keys)
-    summed = q_bufs.sum(axis=0)        # the PS's pipelined integer addition
-    delta = scatter_sum(summed, plan.idx, plan.keep, cfg, d).astype(jnp.float32) / (n * f)
+    # the PS's pipelined integer addition (or the §18 trimmed close)
+    summed, kept = robust_agg.client_sum(q_bufs, cfg)
+    delta = scatter_sum(summed, plan.idx, plan.keep, cfg, d).astype(jnp.float32) / (kept * f)
     return delta, residuals, counts, round_traffic(cfg, d)
 
 
@@ -435,6 +450,10 @@ def fediac_allreduce(u: jax.Array, residual: jax.Array, key: jax.Array,
     Wire cost per ring hop: d/g uint8 (phase 1) + C*g int32 (phase 2)
     versus 4d bytes for a dense fp32 psum.
     """
+    require(cfg.robust_agg == "sum", "robust_agg",
+            '"sum" for the allreduce wire path (a psum cannot compute '
+            "order statistics in-network; robust modes keep the stacked "
+            "and packet engines)", cfg.robust_agg)
     axes = (client_axes,) if isinstance(client_axes, str) else tuple(client_axes)
     d0 = u.shape[-1]
     pad = (-d0) % cfg.vote_chunk

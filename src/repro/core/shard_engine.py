@@ -58,7 +58,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.compat import make_mesh, shard_map
 
-from . import compaction, voting
+from . import compaction, robust_agg, voting
 from .quantize import dequantize, quantize, scale_factor
 from .round_plan import RoundPlan
 from .streams import gumbel_block, uniform_at
@@ -360,8 +360,9 @@ def aggregate_shard(u_stack: jax.Array, cfg, key: jax.Array, *, a=None,
                 kc = jax.lax.dynamic_slice(keep_b, (st,), (cs,))
                 gc = start + st + jnp.arange(cs, dtype=jnp.int32)
                 q, rc = _block_coord_phase2(uc, cfg, f, qks, kc, gc, d)
-                dc = jnp.where(kc, q.sum(axis=0),
-                               0).astype(jnp.float32) / (n * f)
+                qagg, kept = robust_agg.client_sum(q, cfg)
+                dc = jnp.where(kc, qagg,
+                               0).astype(jnp.float32) / (kept * f)
                 return dc, rc
 
         else:
@@ -376,8 +377,9 @@ def aggregate_shard(u_stack: jax.Array, cfg, key: jax.Array, *, a=None,
                 sc = jax.lax.dynamic_slice(slot, (st,), (cs,))
                 q, rc = _topk_coord_phase2(uc, cfg, f, qks, kc, sc, capacity)
                 # scatter_compact's exact cast chain, coordinate-wise
-                dc = ((q.sum(axis=0).astype(jnp.float32) * kc)
-                      .astype(jnp.int32)).astype(jnp.float32) / (n * f)
+                qagg, kept = robust_agg.client_sum(q, cfg)
+                dc = ((qagg.astype(jnp.float32) * kc)
+                      .astype(jnp.int32)).astype(jnp.float32) / (kept * f)
                 return dc, rc
 
         if s <= cs:

@@ -48,7 +48,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from . import compaction, selection, voting
+from . import compaction, robust_agg, selection, voting
 from .quantize import dequantize, quantize, scale_factor
 from .round_plan import RoundPlan, build_round_plan
 from .streams import uniform_block
@@ -206,15 +206,19 @@ def _phase2_topk(u_stack, cfg, f, q_keys, plan: RoundPlan, chunk: int):
         qsum, resid = carry
         u_c = jax.lax.dynamic_slice(u_stack, (0, start), (n, size))
         q, res = _topk_chunk(u_c, cfg, f, q_keys, plan, uq_all, start, size, d)
-        qsum = jax.lax.dynamic_update_slice(qsum, q.sum(axis=0), (start,))
+        # client-axis close per chunk: the plain integer sum, or the §18
+        # trimmed close (chunk-local — the trim is coordinate-wise)
+        qagg, _ = robust_agg.client_sum(q, cfg)
+        qsum = jax.lax.dynamic_update_slice(qsum, qagg, (start,))
         resid = jax.lax.dynamic_update_slice(resid, res, (0, start))
         return (qsum, resid), None
 
     (qsum_dense, residuals), _, _ = _scan_chunks(
         body, (jnp.zeros((d,), jnp.int32), jnp.zeros_like(u_stack)), d, chunk)
     summed = jnp.take(qsum_dense, plan.idx)
+    kept = robust_agg.kept_count(cfg, n)
     delta = compaction.scatter_compact(summed, plan.idx, plan.keep,
-                                       d).astype(jnp.float32) / (n * f)
+                                       d).astype(jnp.float32) / (kept * f)
     return delta, residuals
 
 
@@ -234,8 +238,9 @@ def _phase2_block(u_stack, cfg, f, q_keys, plan: RoundPlan, chunk: int):
         uni = jax.vmap(lambda kk: uniform_block(kk, start, size, d))(q_keys)
         q = quantize(jnp.where(keep_c, u_c, 0.0), f, uni)
         res = (u_c - jnp.where(keep_c, dequantize(q, f), 0.0)).astype(dt)
-        delta_c = jnp.where(keep_c, q.sum(axis=0),
-                            0).astype(jnp.float32) / (n * f)
+        qagg, kept = robust_agg.client_sum(q, cfg)
+        delta_c = jnp.where(keep_c, qagg,
+                            0).astype(jnp.float32) / (kept * f)
         resid = jax.lax.dynamic_update_slice(resid, res, (0, start))
         return resid, delta_c
 

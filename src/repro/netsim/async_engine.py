@@ -61,6 +61,7 @@ from repro.core.fediac import (FediACConfig, _block_compress_dense,
                                phase2_compress, plan_wants_dense_mask,
                                round_traffic, scatter_sum)
 from repro.core.quantize import scale_factor
+from repro.core.robust_agg import client_sum
 from repro.core.shard_engine import shard_compress_stack
 from repro.core.stream_engine import stream_compress_stack
 from repro.serving.admission import AdmissionQueue
@@ -514,20 +515,31 @@ def aggregate_async_stack(u_stack: jax.Array, cfg: FediACConfig,
                             with_dense_mask=plan_wants_dense_mask(cfg))
     perm = jnp.argsort(jax.random.uniform(
         jax.random.fold_in(key, _KEY_ARRIVAL), (n,)))
+    # The §18 order-statistic close is a barrier: the bank buffers every
+    # client's slot values before closing, so in robust mode the
+    # incremental fold degenerates to fold-then-close through the shared
+    # client_sum seam (over the unpermuted stack — the stable tie-break
+    # is by client index, not arrival order).  Sum mode keeps the event
+    # fold verbatim (Python-gated).
+    def close(q):
+        if cfg.robust_agg == "sum":
+            return _event_fold(jnp.take(q, perm, axis=0)), n
+        return client_sum(q, cfg)
+
     if cfg.compact_mode == "block":
         q_dense, residuals = jax.vmap(
             lambda u, k: _block_compress_dense(u, cfg, f, k, plan))(u_stack,
                                                                     q_keys)
-        summed = _event_fold(jnp.take(q_dense, perm, axis=0))
+        summed, kept = close(q_dense)
         delta = jnp.where(plan.keep_dense, summed,
-                          0).astype(jnp.float32) / (n * f)
+                          0).astype(jnp.float32) / (kept * f)
         return delta, residuals, counts, round_traffic(cfg, d)
     compress = phase2_compress(cfg)
     q_bufs, residuals = jax.vmap(
         lambda u, k: compress(u, cfg, f, k, plan))(u_stack, q_keys)
-    summed = _event_fold(jnp.take(q_bufs, perm, axis=0))
+    summed, kept = close(q_bufs)
     delta = scatter_sum(summed, plan.idx, plan.keep, cfg,
-                        d).astype(jnp.float32) / (n * f)
+                        d).astype(jnp.float32) / (kept * f)
     return delta, residuals, counts, round_traffic(cfg, d)
 
 

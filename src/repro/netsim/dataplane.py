@@ -57,6 +57,11 @@ class DataplaneStats:
                                  # the next round, staleness-weighted (§17)
     late_bounces: int = 0        # updates past the close returned whole to
                                  # the client's residual (§17)
+    stuffed_votes: int = 0       # ballots injected beyond honest top-k (§18)
+    budget_rejected: int = 0     # ballots the per-client vote budget refused
+    clipped_values: int = 0      # slot values clamped by the tick clip (§18)
+    trimmed_values: int = 0      # slot values excluded by the order-statistic
+                                 # close (2 * t per live slot — §18)
 
     # fields that combine by max across switches (levels run concurrently,
     # so the hierarchy's pass count / residency is the widest switch's, not

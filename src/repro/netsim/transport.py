@@ -213,6 +213,8 @@ class PacketTransport:
                                        make_async_packet_core)
             from .faults import (FaultConfig, chaos_packet_dyn,
                                  make_chaos_packet_core)
+            from repro.robust import (AdversaryConfig, adversary_packet_dyn,
+                                      make_robust_packet_core)
             svc = service_time(self.profile, aligned=True)
             if isinstance(self.net, AsyncConfig):
                 # async quorum-or-deadline dataplane (DESIGN.md §17):
@@ -220,6 +222,14 @@ class PacketTransport:
                 core = make_async_packet_core(self.cfg, self.net, n)
                 dyn = async_packet_dyn(self.cfg, self.net, n,
                                        self.local_train_s, svc)
+            elif isinstance(self.net, AdversaryConfig):
+                # Byzantine-robust dataplane (DESIGN.md §18): attack
+                # injection + switch-side defenses over the chaos core,
+                # bit-identical to it with every knob at zero.  Must be
+                # checked before FaultConfig (its superclass).
+                core = make_robust_packet_core(self.cfg, self.net, n)
+                dyn = adversary_packet_dyn(self.cfg, self.net, n,
+                                           self.local_train_s, svc)
             elif isinstance(self.net, FaultConfig):
                 # chaos dataplane (DESIGN.md §14): fault-injected core,
                 # bit-identical to the plain one at zero fault rates
@@ -242,14 +252,22 @@ class PacketTransport:
         n, d = u.shape
         core, dyn = self._core_for(n)
         rates = jnp.asarray(self._round_rates(n), jnp.float32)
+        from repro.robust import (ROBUST_STAT_FIELDS, AdversaryConfig,
+                                  init_reputation_state)
         from .async_engine import ASYNC_STAT_FIELDS, AsyncConfig, \
             init_async_carry
-        if isinstance(self.net, AsyncConfig):
-            # the carry buffer (pending late folds) rides through the
+        if isinstance(self.net, (AsyncConfig, AdversaryConfig)):
+            # the async carry (pending late folds) and the robust
+            # reputation/quarantine state both ride through the
             # aggregator-state slot — which the FL loop already threads
-            # round-to-round and checkpoints as agg_state, so async
-            # kill-and-resume needs no new machinery (DESIGN.md §17)
-            carry = state if state is not None else init_async_carry(d)
+            # round-to-round and checkpoints as agg_state, so async and
+            # robust kill-and-resume need no new machinery (§17, §18)
+            if state is not None:
+                carry = state
+            elif isinstance(self.net, AsyncConfig):
+                carry = init_async_carry(d)
+            else:
+                carry = init_reputation_state(n)
             delta, residuals, aux, state = core(u, carry, key,
                                                 self._net_base,
                                                 jnp.int32(round_idx),
@@ -291,6 +309,10 @@ class PacketTransport:
                 stats[k] = float(aux[k]) if k in ("staleness_s_sum",
                                                   "carry_weight") \
                     else int(aux[k])
+        # robust-core extras (present only under an AdversaryConfig)
+        for k in ROBUST_STAT_FIELDS:
+            if k in aux:
+                stats[k] = int(aux[k])
         # voters that missed the quorum still spent their phase-1 bytes,
         # and every ARQ retransmission re-emits its packet's bytes.  Under
         # the async close a late uploader's value packets hit the wire even

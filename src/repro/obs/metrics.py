@@ -212,6 +212,13 @@ METRIC_KINDS = {
     "folded_in": "counter", "quorum_met": "counter",
     "staleness_s_sum": "histogram",
     "buffer_occupancy": "gauge", "carry_weight": "gauge",
+    # Byzantine attacks, defenses and reputation (DESIGN.md §18):
+    # injected/filtered ballot and value events are counters; the cohort
+    # sizes (who is Byzantine / quarantined this round) are levels.
+    "stuffed_votes": "counter", "budget_rejected": "counter",
+    "clipped_values": "counter", "trimmed_values": "counter",
+    "rep_flagged": "counter",
+    "byzantine": "gauge", "quarantined": "gauge",
 }
 
 

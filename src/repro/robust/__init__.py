@@ -1,0 +1,33 @@
+"""Byzantine-robust voting and aggregation (DESIGN.md §18).
+
+Three layers over the packet dataplane, all fixed-shape mask algebra on
+the existing jittable round core (§13/§14 pattern):
+
+* **attack injection** — :class:`AdversaryConfig` extends the chaos
+  dataplane's :class:`~repro.netsim.faults.FaultConfig` with
+  deterministic threefry-keyed Byzantine clients: vote stuffing (with
+  colluding cohorts coordinating on one target index set), sign-flip /
+  scaled-update poisoning of phase-2 values;
+* **switch-side defenses** — per-client vote-budget enforcement, int-
+  domain per-slot magnitude clipping, and the §18 trimmed-mean/median
+  slot close (``FediACConfig.robust_agg``, :mod:`repro.core.robust_agg`);
+* **reputation/quarantine** — per-client suspicion scores with
+  exponential decay and probationary quarantine, threaded through
+  ``RoundResult.state`` so the FL loop checkpoints it round-granularly.
+
+The central invariant, pinned by ``tests/test_robust.py`` and the
+``benchmarks.robust`` CI gate: with every adversary and defense knob at
+its zero default (and ``robust_agg="sum"``) the robust core is
+**bit-identical** to the plain packet core — and to ``aggregate_stack``
+in the lossless full-participation configuration — at the core, the
+transport and the fleet level.
+"""
+
+from .adversary import (ADVERSARY_DYN_FIELDS, ROBUST_STAT_FIELDS,
+                        AdversaryConfig, adversary_packet_dyn)
+from .core import make_robust_packet_core
+from .reputation import init_reputation_state, reputation_update
+
+__all__ = ["AdversaryConfig", "ADVERSARY_DYN_FIELDS", "ROBUST_STAT_FIELDS",
+           "adversary_packet_dyn", "make_robust_packet_core",
+           "init_reputation_state", "reputation_update"]

@@ -1,0 +1,163 @@
+"""Adversary model and defense knobs for the packet round (DESIGN.md §18).
+
+:class:`AdversaryConfig` extends the chaos dataplane's
+:class:`~repro.netsim.faults.FaultConfig` — Byzantine cells compose with
+crash/omission faults — with the attack rates and the switch-side
+defense knobs.  Every scalar knob is *dynamic* (a traced per-cell scalar
+on the fleet axis, :data:`ADVERSARY_DYN_FIELDS`), so an attack x defense
+grid of one structural configuration batches through one compiled robust
+program; only ``FediACConfig.robust_agg`` (the slot-close mode) is
+structural.
+
+All adversary draws use fold constants disjoint from both the plain
+core's 6-way split and the §14 fault keys (7001–7300), so switching an
+attack on never perturbs the benign or the fault draws — the
+zero-adversary bit-identity is structural.  Byzantine membership folds
+off the *run* key (persistent adversaries — a per-round cohort would
+launder poisoned error-feedback residuals through ex-Byzantine
+"honest" clients); the stuffing masks and the colluders' target set
+fold off the round key and re-roll every round.
+
+Byzantine membership and collusion share **one** uniform per client:
+``byz_i = u_i < byzantine_frac`` and ``coll_i = u_i < collusion_frac``
+with ``collusion_frac <= byzantine_frac`` enforced at validation, so the
+colluding cohort is a subset of the Byzantine set by construction.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+
+import jax.numpy as jnp
+
+from repro.netsim.faults import FAULT_DYN_FIELDS, FaultConfig
+from repro.validate import (check_at_least, check_finite_at_least,
+                            check_interval, require)
+
+__all__ = ["AdversaryConfig", "ADVERSARY_DYN_FIELDS", "ROBUST_STAT_FIELDS",
+           "adversary_packet_dyn", "KEY_BYZ", "KEY_STUFF", "KEY_TARGET"]
+
+#: the robust-only aux scalars the core returns on top of the chaos ones —
+#: the single source of truth for downstream stat extraction
+#: (``PacketTransport`` folds exactly these into its stats dict, mirroring
+#: ``CHAOS_STAT_FIELDS``/``ASYNC_STAT_FIELDS``).
+ROBUST_STAT_FIELDS = ("byzantine", "stuffed_votes", "budget_rejected",
+                      "clipped_values", "trimmed_values", "quarantined",
+                      "rep_flagged")
+
+#: traced per-cell adversary/defense knobs, appended to the chaos
+#: FAULT_DYN_FIELDS — cells differing only in these share one compiled
+#: robust program.  ``trim_frac`` is read off the FediACConfig (the §18
+#: slot-close knob) so attack x trim grids batch too.
+ADVERSARY_DYN_FIELDS = FAULT_DYN_FIELDS + (
+    "byzantine_frac", "collusion_frac", "vote_stuff_frac", "poison_scale",
+    "vote_budget", "clip_ticks", "trim_frac", "rep_decay", "rep_threshold",
+    "rep_z_thresh", "quarantine_rounds")
+
+# fold_in constants deriving the adversary keys.  Disjoint from the
+# plain core's 6-way split, the §14 fault keys (7001-7100+) and the §17
+# arrival key (7300).  KEY_BYZ folds off the run key (persistent
+# membership); KEY_STUFF / KEY_TARGET fold off the per-round key.
+KEY_BYZ = 8001        # who is Byzantine / colludes (one uniform per client)
+KEY_STUFF = 8002      # per-client independent vote-stuffing chunk masks
+KEY_TARGET = 8003     # the colluding cohort's shared target chunk set
+
+
+@dataclass(frozen=True)
+class AdversaryConfig(FaultConfig):
+    """A :class:`FaultConfig` plus Byzantine attack injection and the
+    switch-side defenses that answer it (DESIGN.md §18).
+
+    All attack rates default to zero and all defenses to off, at which
+    point the robust core is bit-identical to the plain packet core.
+    Every scalar field here is *dynamic* (traced per-cell on the fleet
+    axis); the slot-close mode lives on ``FediACConfig.robust_agg`` and
+    is structural.
+    """
+
+    # --- attack: who is Byzantine.  Each client draws one uniform per
+    # round; byzantine_frac selects the cohort, collusion_frac (<= it, so
+    # colluders are a subset by construction) the coordinated sub-cohort.
+    byzantine_frac: float = 0.0
+    collusion_frac: float = 0.0
+
+    # --- attack: phase-1 vote stuffing.  A Byzantine client votes for an
+    # extra vote_stuff_frac of the chunk space beyond its honest top-k —
+    # independent chunks per stuffer, except colluders, which all stuff
+    # the *same* per-round target set (steering the GIA toward it).
+    vote_stuff_frac: float = 0.0
+
+    # --- attack: phase-2 value poisoning.  A Byzantine client transmits
+    # ``poison_scale * u`` instead of ``u``: -1 is the sign-flip attack,
+    # large |scale| the scaled-update attack (which also inflates the
+    # shared quantization scale f through the global max |u|).  1.0 is
+    # the identity (the Byzantine mask alone gates every effect).
+    poison_scale: float = 1.0
+
+    # --- defense: per-client vote budget.  The switch counts each
+    # client's accepted vote packets online (int counters only) and
+    # rejects votes past the cap — stuffed ballots beyond an honest
+    # top-k's k-cap never reach the GIA counts.  0 disables.
+    vote_budget: int = 0
+
+    # --- defense: per-slot magnitude clipping in quantized int space.
+    # Values beyond +-clip_ticks quantization ticks clamp before they
+    # deposit (the register bank compares ints).  0 disables.
+    clip_ticks: int = 0
+
+    # --- reputation/quarantine: per-client suspicion accumulates from
+    # vote-overlap misses, update-magnitude z-stats and budget
+    # violations, decays exponentially (rep_decay per round), and past
+    # rep_threshold the client is quarantined — excluded from participant
+    # sampling — for quarantine_rounds rounds, re-admitted on probation
+    # at half the threshold.  The +inf default threshold disables
+    # quarantine (suspicion still accumulates, observable in stats).
+    rep_decay: float = 0.9
+    rep_threshold: float = math.inf
+    rep_z_thresh: float = 3.0
+    quarantine_rounds: int = 0
+
+    def __post_init__(self):
+        super().__post_init__()
+        check_interval("byzantine_frac", self.byzantine_frac, 0.0, 1.0,
+                       hi_open=True)
+        check_interval("collusion_frac", self.collusion_frac, 0.0, 1.0,
+                       hi_open=True)
+        require(self.collusion_frac <= self.byzantine_frac,
+                "collusion_frac", "<= byzantine_frac (the colluding cohort "
+                "is a subset of the Byzantine set)", self.collusion_frac)
+        check_interval("vote_stuff_frac", self.vote_stuff_frac, 0.0, 1.0)
+        require(math.isfinite(self.poison_scale), "poison_scale", "finite",
+                self.poison_scale)
+        check_at_least("vote_budget", self.vote_budget, 0)
+        check_at_least("clip_ticks", self.clip_ticks, 0)
+        check_interval("rep_decay", self.rep_decay, 0.0, 1.0)
+        require(self.rep_threshold > 0.0, "rep_threshold",
+                "> 0 (+inf disables quarantine)", self.rep_threshold)
+        check_finite_at_least("rep_z_thresh", self.rep_z_thresh, 0.0)
+        check_at_least("quarantine_rounds", self.quarantine_rounds, 0)
+
+
+def adversary_packet_dyn(cfg, net: AdversaryConfig, n_clients: int,
+                         local_train_s: float, svc: float) -> dict:
+    """The traced ``dyn`` dict of one robust scenario: the chaos
+    :func:`~repro.netsim.faults.chaos_packet_dyn` scalars plus the
+    adversary/defense knobs, in :data:`ADVERSARY_DYN_FIELDS` order.
+    ``trim_frac`` comes off ``cfg`` (the §18 slot-close knob)."""
+    from repro.netsim.faults import chaos_packet_dyn
+    dyn = chaos_packet_dyn(cfg, net, n_clients, local_train_s, svc)
+    dyn.update({
+        "byzantine_frac": jnp.float32(net.byzantine_frac),
+        "collusion_frac": jnp.float32(net.collusion_frac),
+        "vote_stuff_frac": jnp.float32(net.vote_stuff_frac),
+        "poison_scale": jnp.float32(net.poison_scale),
+        "vote_budget": jnp.int32(net.vote_budget),
+        "clip_ticks": jnp.int32(net.clip_ticks),
+        "trim_frac": jnp.float32(getattr(cfg, "trim_frac", 0.0)),
+        "rep_decay": jnp.float32(net.rep_decay),
+        "rep_threshold": jnp.float32(net.rep_threshold),
+        "rep_z_thresh": jnp.float32(net.rep_z_thresh),
+        "quarantine_rounds": jnp.int32(net.quarantine_rounds),
+    })
+    return dyn

@@ -1,0 +1,417 @@
+"""The Byzantine-robust packet round core (DESIGN.md §18).
+
+Structurally the §14 chaos core (``netsim/faults.py``) — every fault
+model composes, since :class:`AdversaryConfig` extends ``FaultConfig`` —
+with three insertions, each a ``where``-mask that is the identity when
+its knob sits at the zero default:
+
+1. **attack injection** right after the per-round key fold: the
+   Byzantine mask (one uniform per client off the *run* key — membership
+   is persistent — shared with the collusion draw), phase-2 value
+   poisoning ``u -> poison_scale * u`` on Byzantine rows, and phase-1
+   vote stuffing (per-round: per-stuffer random chunks, or the cohort's
+   shared target set for colluders);
+2. **switch-side defenses** at the two points a programmable switch can
+   check online: the per-client vote budget (an int counter per client,
+   votes past the cap never reach the GIA counts) and int-domain
+   magnitude clipping of the quantized slot values; the slot *close*
+   dispatches on ``FediACConfig.robust_agg`` — the plain register-window
+   sum (Python-gated: the §14 expressions verbatim, duplicates and
+   overflow policies included) or the §18 trimmed/median order-statistic
+   close (:mod:`repro.core.robust_agg`), under which a duplicate deposit
+   cannot double-count by construction;
+3. the **reputation update** after the commit, threading the
+   quarantine state through the core's carry slot — the same
+   ``RoundResult.state`` path the §17 async carry rides, so the FL loop
+   checkpoints it with no new machinery.
+
+Contract: ``core(u_stack, state, key, net_key, round_idx, rates, dyn)``
+returns ``(delta, residuals, aux, new_state)`` — the async-style
+stateful 4-tuple — with ``dyn`` extended by the
+:data:`~repro.robust.adversary.ADVERSARY_DYN_FIELDS` knobs.  ``aux``
+keeps every chaos key plus the
+:data:`~repro.robust.adversary.ROBUST_STAT_FIELDS` extras and the
+``byzantine_mask`` array the tests consume.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import compaction, engines
+from repro.core.fediac import (FediACConfig, build_round_plan,
+                               client_vote_stack, phase2_compress,
+                               plan_wants_dense_mask, round_traffic,
+                               scatter_sum)
+from repro.core.robust_agg import trim_count, trimmed_sum
+from repro.core.shard_engine import shard_compress_stack
+from repro.core.stream_engine import stream_compress_stack
+from repro.netsim.batched import scale_num_table
+from repro.netsim.dataplane import slot_window
+from repro.netsim.faults import (_KEY_CRASH, _KEY_DUP, _KEY_GE, _KEY_JITTER,
+                                 _KEY_RESET, _KEY_RETRY, _chaos_upload,
+                                 _ge_loss_probability)
+from repro.netsim.hierarchy import leaf_assignment
+from repro.netsim.policies import (register_accumulate, sample_participants,
+                                   sample_stragglers)
+from repro.netsim.timeline import (_masked_drain, deadline_mask,
+                                   download_time, poisson_arrivals)
+from repro.switch import n_packets
+
+from .adversary import KEY_BYZ, KEY_STUFF, KEY_TARGET, AdversaryConfig
+from .reputation import reputation_update
+
+__all__ = ["make_robust_packet_core"]
+
+_INT32_MAX = np.int32(np.iinfo(np.int32).max)
+
+
+def make_robust_packet_core(cfg: FediACConfig, net: AdversaryConfig,
+                            n_clients: int):
+    """Build the traced Byzantine-robust FediAC packet round.
+
+    Same dataplane semantics as
+    :func:`repro.netsim.faults.make_chaos_packet_core` (crash prefixes,
+    duplicates, reset replays, quorum retry — all of §14 composes) with
+    the §18 attack injection, defenses and reputation state threaded
+    through the async-style carry:
+    ``core(u_stack, state, key, net_key, round_idx, rates, dyn)`` returns
+    ``(delta, residuals, aux, new_state)``.
+    """
+    spec = engines.resolve(cfg)
+    n = int(n_clients)
+    stream = spec.name == "stream"
+    sharded = spec.name == "sharded"
+    topk = cfg.compact_mode != "block"
+    leaf_of = leaf_assignment(n, net.n_leaves)
+    slowdown = float(net.straggler_slowdown)
+    f_num = jnp.asarray(scale_num_table(cfg.bits, n))
+    quorum = net.quorum_floor > 0
+    n_attempts = (int(net.round_retries) + 1) if quorum else 1
+    robust_close = cfg.robust_agg != "sum"
+
+    def core(u_stack, state, key, net_key, round_idx, rates, dyn):
+        n_, d = u_stack.shape
+        assert n_ == n, (n_, n)
+        n_chunks = d // cfg.vote_chunk
+        tr = round_traffic(cfg, d)
+        p1_pkts = n_packets(tr.phase1_bytes, net.mtu)
+        gia_pkts = n_packets(-(-n_chunks // 8), net.mtu)
+        cov = -(-n_chunks // p1_pkts)
+        pkt_of_chunk = np.minimum(np.arange(n_chunks) // cov, p1_pkts - 1)
+
+        rk = jax.random.fold_in(net_key, round_idx)
+        k_part, k_strag, k_arr1, k_loss1, k_arr2, k_retx = \
+            jax.random.split(rk, 6)
+        keys = jax.random.split(key, 2 * n)
+        vote_keys, q_keys = keys[:n], keys[n:]
+
+        # ---- attack injection (disjoint 8000-range fold constants).
+        # One uniform per client decides Byzantine membership AND
+        # collusion: collusion_frac <= byzantine_frac makes the cohort a
+        # subset by the same comparison.  Membership derives from the
+        # *run* key, not the round key: Byzantine is a persistent
+        # property of a client, and a cohort that re-rolled each round
+        # would launder last round's poisoned error-feedback residual
+        # through a now-"honest" client, past every switch-side check.
+        u_byz = jax.random.uniform(jax.random.fold_in(net_key, KEY_BYZ),
+                                   (n,))
+        byz = u_byz < dyn["byzantine_frac"]
+        coll = u_byz < dyn["collusion_frac"]
+        # phase-2 value poisoning: the Byzantine client transmits
+        # poison_scale * u (sign-flip at -1, scaled at |s| > 1 — the
+        # latter also inflates the shared scale f through max |u|).  The
+        # identity at byzantine_frac == 0 is the where-select itself.
+        u_eff = jnp.where(byz[:, None],
+                          u_stack * jnp.float32(dyn["poison_scale"]),
+                          u_stack)
+        votes = client_vote_stack(u_eff, cfg, vote_keys)
+        votes_i32 = votes.astype(jnp.int32)
+        # phase-1 vote stuffing: independent chunks per stuffer, except
+        # colluders, who all stuff the same per-round target set.
+        stuff_own = jax.random.uniform(
+            jax.random.fold_in(rk, KEY_STUFF),
+            (n, n_chunks)) < dyn["vote_stuff_frac"]
+        target = jax.random.uniform(
+            jax.random.fold_in(rk, KEY_TARGET),
+            (n_chunks,)) < dyn["vote_stuff_frac"]
+        stuff = jnp.where(coll[:, None], target[None, :], stuff_own)
+        stuff = stuff & byz[:, None]
+        honest_votes = jnp.sum(votes_i32)
+        votes_i32 = jnp.where(stuff, jnp.int32(1), votes_i32)
+        stuffed_votes = jnp.sum(votes_i32) - honest_votes
+
+        # ---- defense: per-client vote budget.  The switch counts each
+        # client's votes online (one int counter per client) and rejects
+        # ballots past the cap; 0 lifts the cap to int32 max, under which
+        # the running count (<= n_chunks) never trips it — identity.
+        budget = jnp.where(dyn["vote_budget"] > 0,
+                           jnp.asarray(dyn["vote_budget"], jnp.int32),
+                           _INT32_MAX)
+        vote_cum = jnp.cumsum(votes_i32, axis=1)
+        votes_kept = jnp.where(vote_cum <= budget, votes_i32, 0)
+        budget_rejected = jnp.sum(votes_i32) - jnp.sum(votes_kept)
+
+        # ---- quarantine gate on participant sampling.
+        active = jnp.asarray(state["quarantine"], jnp.int32) <= 0
+
+        def phase1_attempt(ks):
+            """One network phase 1 — the §14 closure verbatim, over the
+            budget-enforced vote stack and the quarantine-gated sampler."""
+            kp, kst, ka1, kl1, kge, kcr = ks
+            part = sample_participants(kp, n, dyn["participation"]) & active
+            strag = sample_stragglers(kst, part, dyn["straggler_frac"])
+            slow = jnp.where(strag, jnp.float32(slowdown), 1.0)
+            train_s = jnp.float32(dyn["local_train_s"]) * slow
+            eff_rates = jnp.asarray(rates, jnp.float32) / slow
+            arr1 = poisson_arrivals(ka1, eff_rates, p1_pkts, train_s)
+            loss_p = _ge_loss_probability(
+                kge, arr1.shape, dyn["loss"], dyn["ge_p_gb"],
+                dyn["ge_p_bg"], dyn["ge_loss_bad"])
+            deliv = jax.random.uniform(kl1, arr1.shape) >= loss_p
+            kc, kph, kcut = jax.random.split(kcr, 3)
+            crashed = jax.random.uniform(kc, (n,)) < dyn["crash_rate"]
+            in_p2 = jax.random.uniform(kph, (n,)) < dyn["crash_p2_frac"]
+            crash_p1 = crashed & ~in_p2
+            crash_p2 = crashed & in_p2
+            u_cut = jax.random.uniform(kcut, (n, 2))
+            cut1 = jnp.floor(u_cut[:, 0] * p1_pkts).astype(jnp.int32)
+            pkt_idx = jnp.arange(p1_pkts, dtype=jnp.int32)
+            deliv = deliv & jnp.where(crash_p1[:, None],
+                                      pkt_idx[None, :] < cut1[:, None], True)
+            deliv = deliv & part[:, None]
+            if net.vote_deadline_s is not None:
+                deliv = deliv & deadline_mask(arr1, net.vote_deadline_s)
+            chunk_ok = deliv[:, pkt_of_chunk]
+            counts = jnp.sum(votes_kept * chunk_ok.astype(jnp.int32), axis=0)
+            st1 = _masked_drain(jnp.where(deliv, arr1, jnp.inf), svc)
+            t1 = jnp.where(st1.n_packets > 0, st1.completion_s,
+                           jnp.max(jnp.where(part, train_s, -jnp.inf)))
+            if net.vote_deadline_s is not None:
+                t1 = jnp.maximum(t1, jnp.float32(net.vote_deadline_s))
+            voter = chunk_ok.any(axis=1)
+            up = (part & voter) if net.drop_late_voters else part
+            up = up & ~crash_p1
+            n_part = jnp.sum(part.astype(jnp.int32))
+            return {
+                "part": part, "strag": strag, "eff_rates": eff_rates,
+                "counts": counts, "t1": t1, "up": up,
+                "crash_p2": crash_p2, "cut2": u_cut[:, 1],
+                "crashed": jnp.sum((crashed & part).astype(jnp.int32)),
+                "n_part": n_part,
+                "n_up": jnp.sum(up.astype(jnp.int32)),
+                "votes_lost": n_part * p1_pkts
+                              - jnp.sum(deliv.astype(jnp.int32)),
+                "delivered_chunks": jnp.sum(chunk_ok.astype(jnp.int32)),
+            }
+
+        svc = jnp.float32(dyn["svc"])
+        base_keys = (k_part, k_strag, k_arr1, k_loss1,
+                     jax.random.fold_in(rk, _KEY_GE),
+                     jax.random.fold_in(rk, _KEY_CRASH))
+        if not quorum:
+            r = phase1_attempt(base_keys)
+            aborted = jnp.zeros((), bool)
+            attempts = jnp.int32(1)
+            penalty = None
+            n_part_total = r["n_part"]
+        else:
+            results = [phase1_attempt(base_keys)]
+            for i in range(1, n_attempts):
+                ki = jax.random.fold_in(rk, _KEY_RETRY + i)
+                results.append(phase1_attempt(
+                    tuple(jax.random.split(ki, 6))))
+            stacked = {k: jnp.stack([r[k] for r in results])
+                       for k in results[0]}
+            ok = stacked["n_up"] >= jnp.int32(net.quorum_floor)
+            ok_any = jnp.any(ok)
+            sel = jnp.where(ok_any, jnp.argmax(ok).astype(jnp.int32),
+                            jnp.int32(n_attempts - 1))
+            aborted = ~ok_any
+            attempts = sel + 1
+            idx = jnp.arange(n_attempts, dtype=jnp.int32)
+            backoff = net.retry_policy().delays(n_attempts,
+                                                base=dyn["backoff_s"])
+            penalty = jnp.sum(jnp.where(idx < sel,
+                                        stacked["t1"] + backoff, 0.0))
+            n_part_total = jnp.sum(jnp.where(idx <= sel,
+                                             stacked["n_part"], 0))
+            r = {k: jnp.take(v, sel, axis=0) for k, v in stacked.items()}
+
+        part, strag, up = r["part"], r["strag"], r["up"]
+        counts, t1, eff_rates = r["counts"], r["t1"], r["eff_rates"]
+        crash_p2, n_up = r["crash_p2"], r["n_up"]
+        t_gia = download_time(gia_pkts, rates)
+
+        # ---- GIA + phase-2 compress: the §14 expressions over the
+        # *poisoned* stack (a scaled update inflates everyone's f).
+        m = jnp.max(jnp.where(up[:, None], jnp.abs(u_eff), 0.0))
+        f = f_num[n_up] / jnp.clip(m, 1e-12, None)
+        a = dyn["a_table"][n_up]
+        plan = build_round_plan(counts, cfg, n, a=a,
+                                with_dense_mask=(plan_wants_dense_mask(cfg)
+                                                 or ((stream or sharded)
+                                                     and topk)),
+                                with_slot_map=(stream or sharded) and topk)
+        if stream:
+            q_bufs, res = stream_compress_stack(u_eff, cfg, f, q_keys, plan)
+        elif sharded:
+            q_bufs, res = shard_compress_stack(
+                u_eff, cfg, f, q_keys, plan,
+                devices=spec.devices or None, axis=spec.axis)
+        else:
+            compress = phase2_compress(cfg)
+            q_bufs, res = jax.vmap(
+                lambda uu, kk: compress(uu, cfg, f, kk, plan))(u_eff, q_keys)
+
+        # ---- defense: int-domain magnitude clipping before the deposit.
+        # clip_ticks == 0 lifts the clamp (where-select identity).
+        ct = jnp.asarray(dyn["clip_ticks"], jnp.int32)
+        q_clipped = jnp.clip(q_bufs, -ct, ct)
+        q_eff = jnp.where(ct > 0, q_clipped, q_bufs)
+        clipped_values = jnp.sum((q_eff != q_bufs).astype(jnp.int32))
+
+        # ---- phase 2 through the register bank, with faults (§14).
+        start2 = t1 + t_gia if penalty is None else t1 + t_gia + penalty
+        st2, n_retx, retx_last, n_win, dup_slot, n_dup, n_reset = \
+            _chaos_upload(
+                k_arr2, k_retx, jax.random.fold_in(rk, _KEY_DUP),
+                jax.random.fold_in(rk, _KEY_JITTER),
+                jax.random.fold_in(rk, _KEY_RESET),
+                eff_rates, start2, q_eff.shape[1], tr.phase2_bytes,
+                leaf_of, svc, loss=dyn["loss"], rto_s=net.rto_s,
+                max_retries=net.max_retries, memory_slots=net.memory_slots,
+                n_leaves=net.n_leaves, mtu=net.mtu, not_before=start2,
+                up=up, crash_p2=crash_p2, cut_frac=r["cut2"],
+                dup_rate=dyn["dup_rate"], jitter_s=dyn["reorder_jitter_s"],
+                reset_rate=dyn["reg_reset_rate"])
+
+        # ---- commit: all-or-nothing per client (§14), then the slot
+        # close.  robust_agg == "sum" keeps the §14 register-window path
+        # verbatim (Python-gated); the trimmed/median close keeps per-slot
+        # order statistics instead, under which a duplicate deposit
+        # cannot double-count (each client holds one rank per slot).
+        committed = up & ~crash_p2
+        if quorum:
+            committed = committed & ~aborted
+        n_commit = jnp.sum(committed.astype(jnp.int32))
+        c_live = q_eff.shape[1]
+        if not robust_close:
+            rows = jnp.where(committed[:, None], q_eff, 0)
+            if not net.dedup:
+                rows = rows + jnp.where(committed[:, None] & dup_slot,
+                                        q_eff, 0)
+            summed, reg_ovf, reg_shift = register_accumulate(
+                rows, policy=net.register_policy,
+                slot_window=slot_window(c_live, net.memory_slots),
+                n_windows=n_win)
+            if net.register_policy == "rescale":
+                summed = summed.astype(jnp.float32) * jnp.exp2(
+                    reg_shift.astype(jnp.float32))
+            kept = n_commit
+            n_overflow = jnp.sum(reg_ovf.astype(jnp.int32))
+            trimmed_values = jnp.int32(0)
+        else:
+            t = trim_count(cfg.robust_agg, dyn["trim_frac"], n_commit)
+            summed, kept = trimmed_sum(q_eff, committed, t)
+            n_overflow = jnp.int32(0)
+            trimmed_values = 2 * t * jnp.int32(c_live)
+        kept_safe = jnp.maximum(kept, 1)
+        if cfg.compact_mode == "block":
+            delta = compaction.block_scatter(
+                summed, plan.keep_dense, plan.pos, d, cfg.block_size,
+                cfg.capacity_frac).astype(jnp.float32) / (kept_safe * f)
+        else:
+            delta = scatter_sum(summed, plan.idx, plan.keep, cfg,
+                                d).astype(jnp.float32) / (kept_safe * f)
+        delta = jnp.where(n_commit > 0, delta, 0.0)
+        # Error feedback: the attacker poisons the *wire* copy; its own
+        # simulated state keeps the honest update un-shipped (a residual
+        # computed from the poisoned stream would compound through EF —
+        # ``u -> poison_scale * (grad + res)`` — and explode the shared
+        # scale f geometrically, freezing honest training regardless of
+        # any slot-level defense).  byz all-False is the identity.
+        residuals = jnp.where(committed[:, None] & ~byz[:, None],
+                              res, u_stack)
+
+        t2 = jnp.maximum(st2.completion_s, start2)
+        wall2 = t2 + download_time(n_packets(tr.phase2_bytes, net.mtu),
+                                   rates)
+        wall = jnp.where(n_commit > 0, wall2, start2)
+
+        com_by_leaf = jax.ops.segment_sum(committed.astype(jnp.int32),
+                                          jnp.asarray(leaf_of),
+                                          num_segments=net.n_leaves)
+        live_leaves = jnp.sum((com_by_leaf > 0).astype(jnp.int32))
+        value_ops = jnp.sum(jnp.maximum(com_by_leaf - 1, 0)) * c_live
+        if net.n_leaves > 1:
+            value_ops = value_ops + jnp.maximum(live_leaves - 1, 0) * c_live
+
+        # ---- reputation update from switch-observable signals.  Both
+        # per-client statistics center against the round's population
+        # (z-scores over the live mask): honest clients in a non-IID
+        # federation legitimately miss consensus on most of their votes,
+        # so the *level* of either statistic is meaningless — only the
+        # excess over this round's cohort is suspicious.
+        def z_excess(x, mask):
+            n_m = jnp.maximum(jnp.sum(mask.astype(jnp.int32)),
+                              1).astype(jnp.float32)
+            x = jnp.where(mask, x, 0.0)
+            mu = jnp.sum(x) / n_m
+            sigma = jnp.sqrt(
+                jnp.sum(jnp.where(mask, (x - mu) ** 2, 0.0)) / n_m)
+            z = (x - mu) / jnp.maximum(sigma, 1e-6)
+            return jnp.where(
+                mask,
+                jnp.maximum(z - jnp.float32(dyn["rep_z_thresh"]), 0.0),
+                0.0)
+
+        votes_per_client = jnp.sum(votes_kept, axis=1)
+        outside = (counts < a).astype(jnp.int32)
+        miss = (jnp.sum(votes_kept * outside[None, :], axis=1)
+                .astype(jnp.float32)
+                / jnp.maximum(votes_per_client, 1).astype(jnp.float32))
+        magnitude = jnp.max(jnp.abs(q_eff), axis=1).astype(jnp.float32)
+        rejected = jnp.sum(votes_i32 - votes_kept, axis=1)
+        bv = (rejected.astype(jnp.float32)
+              / jnp.maximum(budget, 1).astype(jnp.float32))
+        signal = z_excess(miss, part) + z_excess(magnitude, committed) + bv
+        new_state, rep_stats = reputation_update(state, part=part,
+                                                 signal=signal, dyn=dyn)
+
+        aux = {
+            "participants": part, "stragglers": strag, "uploaders": committed,
+            "counts": counts,
+            "n_part": n_part_total, "n_up": n_commit,
+            "n_strag": jnp.sum(strag.astype(jnp.int32)),
+            "votes_lost": r["votes_lost"],
+            "retransmissions": n_retx, "retx_last": retx_last,
+            "wall_clock_s": wall, "phase1_s": t1,
+            "phase2_s": t2 - t1,
+            "mean_wait_s": st2.mean_wait_s,
+            "aggregation_ops": r["delivered_chunks"]
+                               + jnp.where(n_commit > 0, value_ops, 0),
+            "peak_live_slots": jnp.where(n_commit > 0,
+                                         min(net.memory_slots, c_live), 0),
+            "passes": jnp.int32(n_win),
+            # chaos extras (§14 stats)
+            "crashed": r["crashed"],
+            "duplicates": n_dup, "resets": n_reset,
+            "overflow_slots": n_overflow,
+            "aborted": aborted.astype(jnp.int32),
+            "attempts": attempts,
+            # robust extras (ROBUST_STAT_FIELDS + the mask tests consume)
+            "byzantine": jnp.sum((byz & part).astype(jnp.int32)),
+            "stuffed_votes": stuffed_votes,
+            "budget_rejected": budget_rejected,
+            "clipped_values": clipped_values,
+            "trimmed_values": trimmed_values,
+            "quarantined": rep_stats["quarantined"],
+            "rep_flagged": rep_stats["rep_flagged"],
+            "byzantine_mask": byz,
+        }
+        return delta, residuals, aux, new_state
+
+    return core

@@ -1,0 +1,78 @@
+"""Reputation and quarantine: cross-round suspicion state (DESIGN.md §18).
+
+The switch cannot prove a client Byzantine from one round — a stuffed
+ballot looks like an eccentric vote, a scaled update like a heavy-tailed
+gradient.  What it *can* do online, with the counters it already keeps,
+is accumulate per-client suspicion across rounds and exclude repeat
+offenders from participant sampling for a while.  Three signals, all
+derived from switch-observable integers:
+
+* **vote-overlap miss** — the fraction of a client's accepted votes that
+  fell outside the round's consensus threshold set (an honest voter's
+  top-k correlates with the GIA; a staffer's target set eventually
+  doesn't);
+* **magnitude z-stat** — the excess of the client's peak |quantized
+  value| over the committed cohort's mean, in standard deviations, past
+  ``rep_z_thresh``;
+* **budget violations** — vote packets rejected by the per-client
+  budget, normalized by the cap.
+
+``rep`` decays exponentially (``rep_decay`` per round) and grows by the
+round's signal; crossing ``rep_threshold`` quarantines the client for
+``quarantine_rounds`` rounds (excluded from sampling), after which it is
+re-admitted **on probation**: its score restarts at half the threshold,
+so a repeat offense re-trips quickly while a reformed client decays
+back to zero.
+
+The state is a flat pytree of two arrays threaded through
+``RoundResult.state`` — exactly the path the §17 async carry rides — so
+``FLConfig(ckpt_path=...)`` checkpoints and resumes it bit-exactly with
+no new machinery.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["init_reputation_state", "reputation_update"]
+
+
+def init_reputation_state(n_clients: int) -> dict:
+    """The clean-slate reputation state: zero suspicion, nobody
+    quarantined.  Flat f32/int32 leaves — round-trips the npz run state
+    bit-exactly, like the async carry."""
+    n = int(n_clients)
+    return {"rep": jnp.zeros((n,), jnp.float32),
+            "quarantine": jnp.zeros((n,), jnp.int32)}
+
+
+def reputation_update(state: dict, *, part, signal, dyn) -> tuple[dict, dict]:
+    """One round of the reputation state machine (traced).
+
+    ``part``: bool[N] — who participated (only they earn suspicion this
+    round); ``signal``: f32[N] — the round's per-client suspicion signal;
+    ``dyn`` supplies ``rep_decay`` / ``rep_threshold`` /
+    ``quarantine_rounds`` as traced scalars.  Returns ``(new_state,
+    stats)`` with ``stats = {"quarantined", "rep_flagged"}`` int32
+    scalars.
+
+    At the defaults (``rep_threshold = +inf``) the trigger never fires
+    and the quarantine array stays zero — the active mask the sampler
+    consumes is all-true, so the zero-adversary round is bit-identical.
+    """
+    rep = jnp.asarray(state["rep"], jnp.float32)
+    quar = jnp.asarray(state["quarantine"], jnp.int32)
+    active = quar <= 0
+    rep_new = rep * jnp.float32(dyn["rep_decay"]) + jnp.where(part, signal,
+                                                              0.0)
+    trigger = (rep_new > jnp.float32(dyn["rep_threshold"])) & active
+    quar_next = jnp.where(trigger, jnp.asarray(dyn["quarantine_rounds"],
+                                               jnp.int32),
+                          jnp.maximum(quar - 1, 0))
+    # probation: a released client restarts at half the threshold, so a
+    # repeat offense re-trips quickly while a reformed client decays.
+    rep_next = jnp.where(trigger,
+                         jnp.float32(dyn["rep_threshold"]) * 0.5, rep_new)
+    stats = {"quarantined": jnp.sum((quar_next > 0).astype(jnp.int32)),
+             "rep_flagged": jnp.sum(trigger.astype(jnp.int32))}
+    return {"rep": rep_next, "quarantine": quar_next}, stats

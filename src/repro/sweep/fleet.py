@@ -252,6 +252,8 @@ def _run_packet_cells(cells, probe):
     from repro.netsim.faults import (FaultConfig, chaos_packet_dyn,
                                      make_chaos_packet_core)
     from repro.netsim.timeline import service_time
+    from repro.robust import (AdversaryConfig, adversary_packet_dyn,
+                              init_reputation_state, make_robust_packet_core)
 
     spec0 = cells[0][0]
     n, rounds = spec0.n_clients, spec0.rounds
@@ -271,9 +273,19 @@ def _run_packet_cells(cells, probe):
     cfg_core = spec0.core_kwargs()["cfg"]
     net_static = cells[0][0].net_config()
     is_async = isinstance(net_static, AsyncConfig)
+    # AdversaryConfig extends FaultConfig, so its check must come first.
+    is_robust = isinstance(net_static, AdversaryConfig)
     if is_async:
         pcore = make_async_packet_core(cfg_core, net_static, n)
         make_dyn = async_packet_dyn
+    elif is_robust:
+        # robust cells (spec.adversary -> AdversaryConfig, DESIGN.md §18):
+        # the Byzantine-attack core with the attack/defense knobs appended
+        # to dyn and the reputation/quarantine state threaded as the
+        # batched carry lane — an attack x defense grid of one structural
+        # config batches through one compiled robust program.
+        pcore = make_robust_packet_core(cfg_core, net_static, n)
+        make_dyn = adversary_packet_dyn
     elif isinstance(net_static, FaultConfig):
         pcore = make_chaos_packet_core(cfg_core, net_static, n)
         make_dyn = chaos_packet_dyn
@@ -299,11 +311,15 @@ def _run_packet_cells(cells, probe):
     keep = ("wall_clock_s", "n_part", "n_up", "retransmissions",
             "retx_last") + (("n_up_wire",) if is_async else ())
 
-    if is_async:
-        # the carry buffer (pending late updates, DESIGN.md §17) is a
-        # batched lane of the fleet state, donated like flat/e_stack
+    is_stateful = is_async or is_robust
+    if is_stateful:
+        # the async carry (pending late updates, §17) / robust reputation
+        # state (§18) is a batched lane of the fleet state, donated like
+        # flat/e_stack
+        carry0 = (init_async_carry(d) if is_async
+                  else init_reputation_state(n))
         carry_b = jax.tree_util.tree_map(
-            lambda *xs: jnp.stack(xs), *[init_async_carry(d) for _ in cells])
+            lambda *xs: jnp.stack(xs), *[carry0 for _ in cells])
 
         def cell_step(flat, e_stack, carry, key, net_key, rates, lr, dyn,
                       cx, cy, size, xt, yt, t):
@@ -346,7 +362,7 @@ def _run_packet_cells(cells, probe):
     accs, loss_means, auxes = [], [], []
     for t in range(1, rounds + 1):
         with probe.span("fleet-round", round=t, cells=len(cells)):
-            if is_async:
+            if is_stateful:
                 (flat_b, e_b, carry_b, key_b, acc, losses, aux) = step(
                     flat_b, e_b, carry_b, key_b, net_key_b, rates_b,
                     _lr_t(lr0, lr_tau, t), dyn_b, batch["cx"], batch["cy"],

@@ -9,8 +9,8 @@ from __future__ import annotations
 
 from .spec import ScenarioSpec
 
-__all__ = ["GRIDS", "get_grid", "smoke_grid", "chaos_grid", "algo_scenario",
-           "BASELINE_OVERRIDES", "FEDIAC_DEFAULTS"]
+__all__ = ["GRIDS", "get_grid", "smoke_grid", "chaos_grid", "attack_grid",
+           "algo_scenario", "BASELINE_OVERRIDES", "FEDIAC_DEFAULTS"]
 
 # The paper Sec. V-A3 algorithm configurations — the single source both the
 # named grids and benchmarks/common.py draw from.
@@ -116,6 +116,38 @@ def chaos_grid() -> list:
     ]
 
 
+def attack_grid() -> list:
+    """DESIGN.md §18 Byzantine grid: a clean control, each attack family
+    undefended, and the defended counterparts — all varying only *dynamic*
+    attack/defense knobs on one AdversaryConfig structure (robust_agg is
+    pinned to "trim" structurally; the control and the undefended cells set
+    trim_frac=0, under which the order-statistic close keeps every row and
+    the aggregate is value-identical to the plain sum).  The whole grid is
+    one batch signature, so every attack x defense scenario rides the fleet
+    axis of one compiled robust round program."""
+    task = dict(algorithm="fediac", a=2, bits=12, transport="packet",
+                adversary=True, robust_agg="trim",
+                n_clients=10, rounds=10, local_steps=3, dist="noniid",
+                beta=0.5, data_n=3000, data_dim=32, test_frac=0.25)
+    attack = dict(byzantine_frac=0.25, collusion_frac=0.2,
+                  vote_stuff_frac=0.3, poison_scale=-8.0)
+    # vote_budget must clear the honest per-client ballot count (k =
+    # ceil(0.05 * 13130) = 657 for this task, plus chaos-duplicated vote
+    # packets) while still capping a stuffer's ~3900 extra ballots.
+    defense = dict(vote_budget=1000, clip_ticks=1024, trim_frac=0.2,
+                   rep_threshold=2.0, rep_z_thresh=2.0, quarantine_rounds=3)
+    return [
+        ScenarioSpec(name="attack-clean", **task),
+        ScenarioSpec(name="attack-stuff", byzantine_frac=0.25,
+                     collusion_frac=0.2, vote_stuff_frac=0.3, **task),
+        ScenarioSpec(name="attack-poison", byzantine_frac=0.25,
+                     poison_scale=-8.0, **task),
+        ScenarioSpec(name="attack-full", **attack, **task),
+        ScenarioSpec(name="attack-full-defended", **attack, **defense,
+                     **task),
+    ]
+
+
 GRIDS = {
     "smoke": smoke_grid,
     "fig2": fig2_grid,
@@ -123,6 +155,7 @@ GRIDS = {
     "fig4": fig4_grid,
     "dataplane": dataplane_grid,
     "chaos": chaos_grid,
+    "attack": attack_grid,
 }
 
 

@@ -59,6 +59,16 @@ _ASYNC_DYNAMIC = ("quorum_frac", "staleness_weight", "staleness_gamma",
                                         # the deadline's *presence* changes
                                         # the close program) stay in the
                                         # signature.
+_ADVERSARY_DYNAMIC = ("byzantine_frac", "collusion_frac", "vote_stuff_frac",
+                      "poison_scale", "vote_budget", "clip_ticks",
+                      "trim_frac", "rep_decay", "rep_threshold",
+                      "rep_z_thresh", "quarantine_rounds")
+                                        # robust-cell traced attack/defense
+                                        # knobs (DESIGN.md §18): an attack x
+                                        # defense grid rides one compiled
+                                        # robust program.  Only the adversary
+                                        # flag and the slot-close mode
+                                        # (robust_agg) are structural.
 
 
 @dataclass(frozen=True)
@@ -134,6 +144,23 @@ class ScenarioSpec:
     staleness_gamma: float = 1.0
     staleness_cap: float = 4.0
     late_policy: str = "fold"
+    # --- Byzantine adversary + switch-side defenses (DESIGN.md §18; packet
+    # transport only).  adversary=True builds an AdversaryConfig round core
+    # (which extends FaultConfig, so the chaos knobs above compose); the
+    # scalar attack/defense knobs are fleet-dynamic, robust_agg structural.
+    adversary: bool = False
+    byzantine_frac: float = 0.0
+    collusion_frac: float = 0.0
+    vote_stuff_frac: float = 0.0
+    poison_scale: float = 1.0
+    vote_budget: int = 0
+    clip_ticks: int = 0
+    robust_agg: str = "sum"        # sum | trim | median (slot close)
+    trim_frac: float = 0.0
+    rep_decay: float = 0.9
+    rep_threshold: float = float("inf")
+    rep_z_thresh: float = 3.0
+    quarantine_rounds: int = 0
 
     def __post_init__(self):
         check_interval("k_frac", self.k_frac, 0.0, 1.0, lo_open=True)
@@ -172,6 +199,33 @@ class ScenarioSpec:
         if self.async_agg and self.chaos:
             raise ValueError("async_agg and chaos are mutually exclusive "
                              "(one round core per cell)")
+        if self.async_agg and self.adversary:
+            raise ValueError("async_agg and adversary are mutually exclusive "
+                             "(one round core per cell)")
+        check_interval("byzantine_frac", self.byzantine_frac, 0.0, 1.0,
+                       hi_open=True)
+        check_interval("collusion_frac", self.collusion_frac, 0.0, 1.0,
+                       hi_open=True)
+        if self.collusion_frac > self.byzantine_frac:
+            raise ValueError(
+                f"collusion_frac must be <= byzantine_frac (the colluding "
+                f"cohort is a subset of the Byzantine set), got "
+                f"{self.collusion_frac}")
+        check_interval("vote_stuff_frac", self.vote_stuff_frac, 0.0, 1.0)
+        import math as _math
+        if not _math.isfinite(self.poison_scale):
+            raise ValueError(f"poison_scale must be finite, got "
+                             f"{self.poison_scale}")
+        check_at_least("vote_budget", self.vote_budget, 0)
+        check_at_least("clip_ticks", self.clip_ticks, 0)
+        check_choice("robust_agg", self.robust_agg, ("sum", "trim", "median"))
+        check_interval("trim_frac", self.trim_frac, 0.0, 0.5, hi_open=True)
+        check_interval("rep_decay", self.rep_decay, 0.0, 1.0)
+        if not self.rep_threshold > 0.0:
+            raise ValueError(f"rep_threshold must be > 0 (+inf disables "
+                             f"quarantine), got {self.rep_threshold}")
+        check_finite_at_least("rep_z_thresh", self.rep_z_thresh, 0.0)
+        check_at_least("quarantine_rounds", self.quarantine_rounds, 0)
         check_choice("staleness_mode", self.staleness_mode,
                      ("constant", "poly", "cap"))
         check_choice("late_policy", self.late_policy, ("fold", "bounce"))
@@ -194,7 +248,9 @@ class ScenarioSpec:
                             vote_mode=self.vote_mode,
                             compact_mode=self.compact_mode,
                             engine=self.engine,
-                            consensus_floor=self.consensus_floor)
+                            consensus_floor=self.consensus_floor,
+                            robust_agg=self.robust_agg,
+                            trim_frac=self.trim_frac)
 
     def agg_kwargs(self) -> dict:
         """Aggregator kwargs for the classic (eager) registry interface."""
@@ -208,8 +264,12 @@ class ScenarioSpec:
         (`dyn_scalars`), so cells differing only in ``a``/``a_frac`` bind
         the same core."""
         if self.algorithm == "fediac":
+            # trim_frac is normalized away like a: the robust packet core
+            # reads it from dyn, so trim cells of one robust_agg mode bind
+            # the same compiled core.
             cfg = replace(self.fediac_config(), a=None,
-                          a_frac=type(self).a_frac)
+                          a_frac=type(self).a_frac,
+                          trim_frac=type(self).trim_frac)
             return {"cfg": cfg, **dict(self.agg_overrides)}
         return dict(self.agg_overrides)
 
@@ -221,12 +281,33 @@ class ScenarioSpec:
 
     def net_config(self):
         """The :class:`repro.netsim.NetConfig` of a packet cell — a
-        :class:`repro.netsim.FaultConfig` when ``chaos`` is set, a
-        :class:`repro.netsim.AsyncConfig` when ``async_agg`` is set."""
+        :class:`repro.netsim.FaultConfig` when ``chaos`` is set, an
+        :class:`repro.netsim.AsyncConfig` when ``async_agg`` is set, a
+        :class:`repro.robust.AdversaryConfig` when ``adversary`` is set
+        (subsuming the chaos knobs — the fault fields compose)."""
         from repro.netsim import AsyncConfig, FaultConfig, NetConfig
         base = dict(loss=self.loss, participation=self.participation,
                     straggler_frac=self.straggler_frac,
                     n_leaves=self.n_leaves, seed=self.net_seed)
+        if self.adversary:
+            from repro.robust import AdversaryConfig
+            return AdversaryConfig(
+                ge_p_gb=self.ge_p_gb, ge_p_bg=self.ge_p_bg,
+                ge_loss_bad=self.ge_loss_bad, crash_rate=self.crash_rate,
+                crash_p2_frac=self.crash_p2_frac, dup_rate=self.dup_rate,
+                dedup=self.dedup, reorder_jitter_s=self.reorder_jitter_s,
+                register_policy=self.register_policy,
+                reg_reset_rate=self.reg_reset_rate,
+                quorum_floor=self.quorum_floor,
+                round_retries=self.round_retries, backoff_s=self.backoff_s,
+                byzantine_frac=self.byzantine_frac,
+                collusion_frac=self.collusion_frac,
+                vote_stuff_frac=self.vote_stuff_frac,
+                poison_scale=self.poison_scale,
+                vote_budget=self.vote_budget, clip_ticks=self.clip_ticks,
+                rep_decay=self.rep_decay, rep_threshold=self.rep_threshold,
+                rep_z_thresh=self.rep_z_thresh,
+                quarantine_rounds=self.quarantine_rounds, **base)
         if self.async_agg:
             return AsyncConfig(quorum_frac=self.quorum_frac,
                                round_deadline_s=self.round_deadline_s,
@@ -309,7 +390,7 @@ class ScenarioSpec:
         """
         excluded = (_FEDIAC_DYNAMIC + _PRICING_ONLY + _DATA_ONLY
                     + _NET_DYNAMIC + _FAULT_DYNAMIC + _ASYNC_DYNAMIC
-                    + ("lr0", "lr_tau"))
+                    + _ADVERSARY_DYNAMIC + ("lr0", "lr_tau"))
         items = tuple(sorted((k, v) for k, v in self.__dict__.items()
                              if k not in excluded))
         return (self.algorithm,) + items

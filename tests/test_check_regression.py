@@ -6,8 +6,8 @@ from __future__ import annotations
 
 from benchmarks.check_regression import (compare_aggregation, compare_async,
                                          compare_dataplane, compare_faults,
-                                         compare_obs, compare_sweep,
-                                         inject_drift)
+                                         compare_obs, compare_robust,
+                                         compare_sweep, inject_drift)
 
 
 def _tracked_stub():
@@ -57,6 +57,22 @@ def _tracked_stub():
             "throughput": {"speedup_high_straggler": 2.16,
                            "acc_within_band": True},
             "resume": {"resume_identical": True}}
+    attack_cell = {"name": "attack-clean", "final_acc": 0.6973,
+                   "wall_clock_s": 1.6, "traffic_mb": 3.3,
+                   "bit_identical": True}
+    robust = {"identity": {"bit_identical_zero_adversary": True,
+                           "fleet_bit_identical_all": True,
+                           "n_batch_signatures": 1,
+                           "cells": [attack_cell,
+                                     {**attack_cell,
+                                      "name": "attack-full-defended",
+                                      "final_acc": 0.6427}]},
+              "defense": {"clean_acc": 0.6973, "undefended_acc": 0.1067,
+                          "defended_acc": 0.6427, "defended_ratio": 0.9216,
+                          "undefended_ratio": 0.153,
+                          "defense_holds": True, "attack_collapses": True},
+              "overhead": {"overhead_ratio": 1.09, "overhead_max": 1.15,
+                           "within_budget": True}}
     return {
         "aggregation": {"cells": [agg_cell, stream_cell, shard_cell]},
         "dataplane": {"rounds": 12, "memory_transport_acc": 0.81,
@@ -71,6 +87,7 @@ def _tracked_stub():
         "faults": faults,
         "obs": obs,
         "async": asyn,
+        "robust": robust,
     }
 
 
@@ -110,6 +127,13 @@ def _fresh_stub(tracked):
                   "throughput": {"speedup_high_straggler": 1.9,
                                  "acc_within_band": True},
                   "resume": {"resume_identical": True}},
+        "robust": {"identity": {"bit_identical_zero_adversary": True,
+                                "fleet_bit_identical_all": True,
+                                "n_batch_signatures": 1, "cells": []},
+                   "defense": {"defended_ratio": 1.01,
+                               "undefended_ratio": 0.71},
+                   "overhead": {"overhead_ratio": 1.1,
+                                "within_budget": True}},
     }
 
 
@@ -123,6 +147,7 @@ def test_gate_green_on_matching_payloads():
     assert compare_faults(tracked["faults"], fresh["faults"]) == []
     assert compare_obs(tracked["obs"], fresh["obs"]) == []
     assert compare_async(tracked["async"], fresh["async"]) == []
+    assert compare_robust(tracked["robust"], fresh["robust"]) == []
 
 
 def test_gate_red_on_injected_drift():
@@ -135,6 +160,7 @@ def test_gate_red_on_injected_drift():
     assert compare_faults(drifted["faults"], fresh["faults"])
     assert compare_obs(drifted["obs"], fresh["obs"])
     assert compare_async(drifted["async"], fresh["async"])
+    assert compare_robust(drifted["robust"], fresh["robust"])
 
 
 def test_gate_red_on_specific_regressions():
@@ -275,6 +301,39 @@ def test_gate_red_on_specific_regressions():
     assert compare_async(tracked["async"], fresh["async"])
     # an async payload missing its sections entirely
     assert compare_async({}, _fresh_stub(tracked)["async"])
+    # the attack-clean anchor losing bit-identity with the plain dataplane
+    fresh = _fresh_stub(tracked)
+    fresh["robust"]["identity"]["bit_identical_zero_adversary"] = False
+    assert compare_robust(tracked["robust"], fresh["robust"])
+    # the attack grid splitting into several compiled programs
+    fresh = _fresh_stub(tracked)
+    fresh["robust"]["identity"]["n_batch_signatures"] = 5
+    assert compare_robust(tracked["robust"], fresh["robust"])
+    # the tracked defended cell slipping below the recovery floor
+    weak = _tracked_stub()
+    weak["robust"]["defense"]["defended_ratio"] = 0.85
+    fresh = _fresh_stub(tracked)
+    assert compare_robust(weak["robust"], fresh["robust"])
+    # the tracked attack no longer demonstrating damage
+    soft = _tracked_stub()
+    soft["robust"]["defense"]["undefended_ratio"] = 0.8
+    assert compare_robust(soft["robust"], fresh["robust"])
+    # the undefended run beating the defended one (defenses buy nothing)
+    inv = _tracked_stub()
+    inv["robust"]["defense"]["undefended_acc"] = 0.7
+    assert compare_robust(inv["robust"], fresh["robust"])
+    # the defense overhead blowing its budget: the fresh smoke gets the
+    # looser 1.25x ceiling, the tracked 40-rep run the tight 1.15x
+    fresh = _fresh_stub(tracked)
+    fresh["robust"]["overhead"]["overhead_ratio"] = 1.3
+    assert compare_robust(tracked["robust"], fresh["robust"])
+    fresh["robust"]["overhead"]["overhead_ratio"] = 1.2  # smoke noise: ok
+    assert compare_robust(tracked["robust"], fresh["robust"]) == []
+    slow = _tracked_stub()
+    slow["robust"]["overhead"]["overhead_ratio"] = 1.2  # tracked: gated
+    assert compare_robust(slow["robust"], fresh["robust"])
+    # a robust payload missing its sections entirely
+    assert compare_robust({}, _fresh_stub(tracked)["robust"])
 
 
 def test_accuracy_tolerates_cross_host_ulps():

@@ -12,6 +12,7 @@ import pytest
 
 from repro.core.fediac import FediACConfig
 from repro.netsim import FaultConfig, NetConfig
+from repro.robust import AdversaryConfig
 from repro.sweep import ScenarioSpec
 from repro.training import FLConfig
 from repro.validate import (check_at_least, check_choice,
@@ -37,6 +38,8 @@ def _rejects(cls, kw):
     {"alpha": float("inf")}, {"alpha": NAN},
     {"vote_mode": "best"}, {"compact_mode": "dense"},
     {"vote_wire": "tcp"}, {"granularity": "layer"},
+    {"robust_agg": "avg"}, {"trim_frac": 0.5}, {"trim_frac": -0.1},
+    {"trim_frac": NAN},
 ])
 def test_fediac_config_rejects(kw):
     _rejects(FediACConfig, kw)
@@ -68,6 +71,13 @@ def test_fl_config_rejects(kw):
     {"reg_reset_rate": -0.5},
     {"reorder_jitter_s": -1.0}, {"backoff_s": NAN},
     {"quorum_floor": -1}, {"round_retries": -1}, {"consensus_floor": -2},
+    {"byzantine_frac": 1.0}, {"byzantine_frac": -0.1},
+    {"collusion_frac": 0.3},                 # > byzantine_frac (0 default)
+    {"vote_stuff_frac": 1.5}, {"poison_scale": NAN},
+    {"vote_budget": -1}, {"clip_ticks": -1},
+    {"robust_agg": "huber"}, {"trim_frac": 0.5},
+    {"rep_decay": 1.2}, {"rep_threshold": 0.0}, {"rep_z_thresh": -1.0},
+    {"quarantine_rounds": -1},
 ])
 def test_scenario_spec_rejects(kw):
     _rejects(ScenarioSpec, kw)
@@ -100,6 +110,31 @@ def test_fault_config_rejects(kw):
         FaultConfig(**kw)
 
 
+@pytest.mark.parametrize("kw", [
+    {"byzantine_frac": -0.1}, {"byzantine_frac": 1.0},
+    {"collusion_frac": -0.2}, {"collusion_frac": 1.0},
+    {"collusion_frac": 0.3},                 # exceeds byzantine_frac=0
+    {"byzantine_frac": 0.1, "collusion_frac": 0.2},
+    {"vote_stuff_frac": -0.1}, {"vote_stuff_frac": 1.5},
+    {"poison_scale": float("inf")}, {"poison_scale": NAN},
+    {"vote_budget": -1}, {"clip_ticks": -2},
+    {"rep_decay": -0.1}, {"rep_decay": 1.5},
+    {"rep_threshold": 0.0}, {"rep_threshold": -2.0},
+    {"rep_z_thresh": -1.0}, {"rep_z_thresh": float("inf")},
+    {"quarantine_rounds": -1},
+    {"crash_rate": 2.0},                     # inherited FaultConfig bound
+    {"rto_s": 0.0},                          # inherited NetConfig bound
+])
+def test_adversary_config_rejects(kw):
+    with pytest.raises(ValueError):
+        AdversaryConfig(**kw)
+
+
+def test_adversary_and_async_mutually_exclusive():
+    with pytest.raises(ValueError, match="mutually exclusive"):
+        ScenarioSpec(adversary=True, async_agg=True)
+
+
 def test_boundary_values_accepted():
     FediACConfig(k_frac=1.0, capacity_frac=1.0, a_frac=1.0, a=1, bits=1,
                  consensus_floor=0)
@@ -109,6 +144,13 @@ def test_boundary_values_accepted():
     NetConfig(straggler_slowdown=1.0, vote_deadline_s=1e-6, max_retries=1)
     NetConfig(vote_deadline_s=None)
     FaultConfig(ge_p_gb=0.0, ge_p_bg=0.0)    # no bad state entered: legal
+    FediACConfig(robust_agg="median", trim_frac=0.49)
+    AdversaryConfig()                        # all-zero = plain packet core
+    AdversaryConfig(byzantine_frac=0.25, collusion_frac=0.25,
+                    vote_stuff_frac=1.0, poison_scale=-8.0,
+                    rep_decay=1.0, quarantine_rounds=0)
+    ScenarioSpec(adversary=True, chaos=True, byzantine_frac=0.25,
+                 robust_agg="trim", trim_frac=0.3)   # faults compose
 
 
 def test_helpers_message_shape():

@@ -308,6 +308,9 @@ def test_dataplane_to_metrics_covers_every_field():
     # forgotten emission path fails here instead of silently dropping.
     names = [f.name for f in dataclasses.fields(DataplaneStats)]
     assert "late_folds" in names and "late_bounces" in names
+    # §18 Byzantine-defense event counters ride the same introspection
+    assert {"stuffed_votes", "budget_rejected", "clipped_values",
+            "trimmed_values"} <= set(names)
     st = DataplaneStats(**{name: i + 1 for i, name in enumerate(names)})
     m = st.to_metrics()
     assert m == {name: float(i + 1) for i, name in enumerate(names)}
@@ -353,6 +356,22 @@ def test_async_stat_fields_reach_transport_stats(u_stack):
         assert f in m, f
         assert metric_kind(f) != "gauge" or f in ("buffer_occupancy",
                                                   "carry_weight"), f
+
+
+def test_robust_stat_fields_reach_transport_stats(u_stack):
+    from repro.robust import ROBUST_STAT_FIELDS, AdversaryConfig
+    tp = PacketTransport("fediac", {"cfg": FediACConfig(a=2)},
+                         net=AdversaryConfig(loss=0.0))
+    r = tp.round(u_stack, None, jax.random.PRNGKey(0), round_idx=0)
+    for f in ROBUST_STAT_FIELDS:
+        assert f in r.stats, f
+    m = r.to_metrics()
+    for f in ROBUST_STAT_FIELDS:
+        assert f in m, f
+        # injected/filtered event counts are counters; the cohort sizes
+        # (who is Byzantine / quarantined right now) are level gauges
+        assert metric_kind(f) != "gauge" or f in ("byzantine",
+                                                  "quarantined"), f
 
 
 def test_flhistory_structured_records_with_legacy_views():

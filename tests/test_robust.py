@@ -1,0 +1,485 @@
+"""Byzantine-robust voting and aggregation (DESIGN.md §18): the
+zero-adversary bit-identity invariant, the trimmed/median order-statistic
+close, switch-side defenses answering each attack family, and the
+reputation/quarantine state machine riding the checkpoint path.
+
+Property tests reuse the hypothesis-or-seeded-enumeration shim from
+``test_faults`` so every example replays deterministically in CI.
+"""
+
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import load_run_state
+from repro.core import engines
+from repro.core.fediac import (FediACConfig, aggregate_round,
+                               aggregate_stack)
+from repro.core.robust_agg import trim_count, trimmed_sum
+from repro.netsim import (FaultConfig, NetConfig, PacketTransport,
+                          chaos_packet_dyn, make_chaos_packet_core)
+from repro.robust import (ROBUST_STAT_FIELDS, AdversaryConfig,
+                          adversary_packet_dyn, init_reputation_state,
+                          make_robust_packet_core, reputation_update)
+from repro.training import FLConfig, run_federated
+from test_faults import given_examples, st
+
+MODES = [("topk", "topk"), ("topk", "block"),
+         ("threshold", "topk"), ("threshold", "block")]
+
+_N, _D = 8, 600
+
+
+def _probe_inputs():
+    rng = np.random.default_rng(1)
+    u = jnp.asarray(rng.standard_normal((_N, _D)), jnp.float32)
+    rates = jnp.full((_N,), 12.5e6, jnp.float32)
+    return u, rates
+
+
+def _run_rounds(cfg, net, rounds=1, u=None):
+    """Drive the robust core for ``rounds``, threading the reputation
+    carry; returns the per-round ``(delta, res, aux, state_in)`` list and
+    the final state."""
+    core = make_robust_packet_core(cfg, net, _N)
+    dyn = adversary_packet_dyn(cfg, net, _N, 1.0, 1e-5)
+    u0, rates = _probe_inputs()
+    if u is not None:
+        u0 = u
+    state = init_reputation_state(_N)
+    nk = jax.random.PRNGKey(net.seed)
+    out, uu = [], u0
+    for t in range(rounds):
+        key = jax.random.fold_in(jax.random.PRNGKey(9), t)
+        d, r, a, state_next = core(uu, state, key, nk, t, rates, dyn)
+        out.append((d, r, a, state))
+        state = state_next
+        uu = uu * 0.9 + d[None, :] + r
+    return out, state
+
+
+@pytest.fixture
+def u_stack():
+    return jax.random.normal(jax.random.PRNGKey(1), (8, 2048)) ** 3
+
+
+@pytest.fixture(scope="module")
+def small_fl():
+    from repro.data import classification, partition_dirichlet
+    data = classification(n=1500, dim=16, n_classes=10, seed=0)
+    train, test = data.test_split(0.25)
+    return partition_dirichlet(train, 6, beta=0.5, seed=0), test
+
+
+# ---------------------------------------------------------------------------
+# the zero-adversary invariant: robust core == chaos core, bitwise
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("vote_mode,compact_mode", MODES)
+def test_robust_core_zero_adversary_bit_identical_to_chaos(vote_mode,
+                                                           compact_mode):
+    """With every adversary/defense knob at its zero default the robust
+    core returns the chaos core's delta, residuals and every aux entry
+    bitwise — with the §14 faults *active* (loss, crashes, duplicates),
+    for all four vote x compact mode pairs — and every robust stat is
+    zero."""
+    cfg = FediACConfig(bits=12, a=3, alpha=0.1, vote_mode=vote_mode,
+                       compact_mode=compact_mode)
+    netkw = dict(loss=0.05, participation=0.9, crash_rate=0.1,
+                 dup_rate=0.1, seed=3)
+    ccore = make_chaos_packet_core(cfg, FaultConfig(**netkw), _N)
+    rcore = make_robust_packet_core(cfg, AdversaryConfig(**netkw), _N)
+    cd = chaos_packet_dyn(cfg, FaultConfig(**netkw), _N, 1.0, 1e-5)
+    rd = adversary_packet_dyn(cfg, AdversaryConfig(**netkw), _N, 1.0, 1e-5)
+    u, rates = _probe_inputs()
+    state = init_reputation_state(_N)
+    nk = jax.random.PRNGKey(3)
+    for t in range(2):
+        key = jax.random.fold_in(jax.random.PRNGKey(9), t)
+        d1, r1, a1 = ccore(u, key, nk, t, rates, cd)
+        d2, r2, a2, state = rcore(u, state, key, nk, t, rates, rd)
+        np.testing.assert_array_equal(np.asarray(d1), np.asarray(d2))
+        np.testing.assert_array_equal(np.asarray(r1), np.asarray(r2))
+        for k in a1:
+            np.testing.assert_array_equal(np.asarray(a1[k]),
+                                          np.asarray(a2[k]), err_msg=k)
+        for k in ("byzantine", "stuffed_votes", "budget_rejected",
+                  "clipped_values", "trimmed_values", "quarantined",
+                  "rep_flagged"):
+            assert int(a2[k]) == 0, k
+        u = u * 0.9 + d1[None, :] + r1
+    # the carry stays at its init: no suspicion without a signal source
+    assert not bool(jnp.any(state["quarantine"] > 0))
+
+
+@pytest.mark.parametrize("vote_mode,compact_mode", MODES)
+def test_robust_transport_lossless_matches_aggregate_stack(u_stack,
+                                                           vote_mode,
+                                                           compact_mode):
+    """The §9 core guarantee survives the robust dispatch: a zero-knob
+    AdversaryConfig under lossless full participation reproduces
+    ``aggregate_stack`` bitwise — delta, residuals and vote counts."""
+    cfg = FediACConfig(vote_mode=vote_mode, compact_mode=compact_mode, a=2)
+    key = jax.random.PRNGKey(42)
+    delta0, res0, counts0, traffic0 = aggregate_stack(u_stack, cfg, key)
+    tp = PacketTransport("fediac", {"cfg": cfg}, net=AdversaryConfig())
+    r = tp.round(u_stack, None, key, round_idx=0)
+    assert bool(jnp.all(delta0 == r.delta))
+    assert bool(jnp.all(res0 == r.residuals))
+    np.testing.assert_array_equal(np.asarray(counts0),
+                                  r.stats["vote_counts"])
+    assert r.traffic == traffic0
+    # the reputation carry rides RoundResult.state, starting cold
+    assert r.state is not None
+    assert not bool(jnp.any(r.state["quarantine"] > 0))
+
+
+def test_robust_transport_zero_knob_matches_plain(u_stack):
+    """The PacketTransport dispatch: a zero-knob AdversaryConfig rides
+    the robust core yet reproduces the plain round under loss and partial
+    participation, and surfaces the robust stats (all zero)."""
+    cfg = FediACConfig(a=2)
+    key = jax.random.PRNGKey(0)
+    netkw = dict(loss=0.1, participation=0.75, seed=2)
+    rp = PacketTransport("fediac", {"cfg": cfg},
+                         net=NetConfig(**netkw)).round(u_stack, None, key, 1)
+    rr = PacketTransport("fediac", {"cfg": cfg},
+                         net=AdversaryConfig(**netkw)).round(
+        u_stack, None, key, 1)
+    assert bool(jnp.all(rp.delta == rr.delta))
+    assert bool(jnp.all(rp.residuals == rr.residuals))
+    assert rp.wall_clock_s == rr.wall_clock_s
+    assert rp.upload_bytes == rr.upload_bytes
+    for k in ROBUST_STAT_FIELDS:
+        assert rr.stats[k] == 0, k
+
+
+def test_fl_robust_zero_knob_matches_plain_packet(small_fl):
+    """FL-level acceptance: an attack-free AdversaryConfig training run
+    is bit-identical to run_federated over the plain packet transport."""
+    clients, test = small_fl
+    kw = dict(n_clients=6, rounds=3, local_steps=2, aggregator="fediac",
+              agg_kwargs={"cfg": FediACConfig(a=2, bits=12)}, seed=0,
+              transport="packet")
+    h_plain = run_federated(clients, test,
+                            FLConfig(net=NetConfig(loss=0.02, seed=1), **kw))
+    h_rob = run_federated(clients, test,
+                          FLConfig(net=AdversaryConfig(loss=0.02, seed=1),
+                                   **kw))
+    assert h_plain.acc == h_rob.acc
+    assert h_plain.loss == h_rob.loss
+    assert h_plain.wall_clock == h_rob.wall_clock
+    assert h_plain.traffic_mb == h_rob.traffic_mb
+
+
+def test_attack_cells_batch_on_fleet_axis():
+    """Attack x defense scenarios ride the fleet: every attack_grid cell
+    shares one batch signature (all adversary knobs are dynamic, the trim
+    close is pinned structurally), and each batched cell's history equals
+    its sequential run_federated history exactly."""
+    from dataclasses import replace
+
+    from repro.sweep import run_cell_sequential, run_sweep
+    from repro.sweep.grids import attack_grid
+
+    grid = attack_grid()
+    assert len({s.batch_signature() for s in grid}) == 1
+    specs = [replace(grid[i], rounds=3) for i in (0, 3, 4)]
+    fleet = {c.spec.name: c.history for c in run_sweep(specs, (0,))}
+    for s in specs:
+        seq = run_cell_sequential(s, 0)
+        h = fleet[s.name]
+        assert h.acc == seq.acc, s.name
+        assert h.loss == seq.loss, s.name
+        assert h.wall_clock == seq.wall_clock, s.name
+        assert h.traffic_mb == seq.traffic_mb, s.name
+
+
+# ---------------------------------------------------------------------------
+# the order-statistic close: trim / median semantics
+# ---------------------------------------------------------------------------
+
+
+@given_examples(6, seed=st.integers(min_value=0, max_value=1000),
+                n_live=st.integers(min_value=1, max_value=8))
+def test_trim_zero_is_masked_sum_bitwise(seed, n_live):
+    """Property: at ``t == 0`` the order-statistic close keeps exactly
+    the live rows — the kept sum equals the plain masked sum bitwise for
+    any live mask (the attack-grid control cells rely on this)."""
+    rng = np.random.default_rng(seed)
+    v = jnp.asarray(rng.integers(-2**20, 2**20, size=(8, 33)), jnp.int32)
+    live = jnp.asarray(rng.permutation(np.arange(8)) < n_live)
+    s, kept = trimmed_sum(v, live, 0)
+    np.testing.assert_array_equal(
+        np.asarray(s),
+        np.asarray(jnp.sum(jnp.where(live[:, None], v, 0), axis=0)))
+    assert int(kept) == n_live
+
+
+@given_examples(8, seed=st.integers(min_value=0, max_value=1000),
+                f=st.integers(min_value=1, max_value=3))
+def test_trimmed_mean_bounded_by_honest_range(seed, f):
+    """Property (the §18 guarantee): with at most ``f`` adversarial
+    values per slot and trim depth ``t >= f``, the kept mean of every
+    slot lies within the honest values' range — no matter how extreme
+    the poisoned values are."""
+    n, c = 10, 17
+    rng = np.random.default_rng(seed)
+    honest = rng.integers(-1000, 1000, size=(n, c))
+    v = honest.copy()
+    bad = rng.choice(n, size=f, replace=False)
+    v[bad] = rng.choice([-2**28, 2**28 - 1], size=(f, c))
+    live = jnp.ones((n,), bool)
+    s, kept = trimmed_sum(jnp.asarray(v, jnp.int32), live, f)
+    mean = np.asarray(s, np.float64) / int(kept)
+    good = np.ones(n, bool)
+    good[bad] = False
+    lo = honest[good].min(axis=0)
+    hi = honest[good].max(axis=0)
+    assert np.all(mean >= lo) and np.all(mean <= hi)
+
+
+def test_median_close_exact_values():
+    """Median = maximal trim: the middle value for odd ``n_live``, the
+    two middle values' sum for even — pinned on exact small inputs."""
+    live5 = jnp.ones((5,), bool)
+    v5 = jnp.asarray([[5], [1], [9], [3], [7]], jnp.int32)
+    t5 = trim_count("median", 0.0, 5)
+    assert int(t5) == 2
+    s, kept = trimmed_sum(v5, live5, t5)
+    assert int(s[0]) == 5 and int(kept) == 1
+    v4 = jnp.asarray([[4], [1], [10], [7]], jnp.int32)
+    live4 = jnp.ones((4,), bool)
+    t4 = trim_count("median", 0.0, 4)
+    assert int(t4) == 1
+    s, kept = trimmed_sum(v4, live4, t4)
+    assert int(s[0]) == 11 and int(kept) == 2
+
+
+def test_trim_dead_rows_and_tie_break():
+    """Dead (non-committed) rows carry the dtype-max sentinel: they sort
+    strictly after every live value and never reach the kept sum, however
+    extreme their payload.  Equal live values break ties by client index
+    (stable argsort), so the close is deterministic."""
+    v = jnp.asarray([[2**31 - 1], [3], [5]], jnp.int32)
+    live = jnp.asarray([False, True, True])
+    s, kept = trimmed_sum(v, live, 0)
+    assert int(s[0]) == 8 and int(kept) == 2
+    # all-equal values, n=4, t=1: the stable rank keeps rows 1 and 2
+    veq = jnp.full((4, 1), 7, jnp.int32)
+    s, kept = trimmed_sum(veq, jnp.ones((4,), bool), 1)
+    assert int(s[0]) == 14 and int(kept) == 2
+    # trim_count clamps so at least one value survives per slot
+    assert int(trim_count("trim", 0.49, 2)) == 0
+    assert int(trim_count("trim", 0.9, 9)) == 4
+    assert int(trim_count("median", 0.0, 1)) == 0
+
+
+def test_aggregate_stack_trim_zero_identical_to_sum(u_stack):
+    """``robust_agg="trim"`` at ``trim_frac=0`` is value-identical to the
+    plain sum close through the full in-memory aggregation — every mode
+    pair, bitwise."""
+    key = jax.random.PRNGKey(7)
+    for vm, cm in MODES:
+        base = dict(vote_mode=vm, compact_mode=cm, a=2, bits=12)
+        ref = aggregate_stack(u_stack, FediACConfig(**base), key)
+        got = aggregate_stack(
+            u_stack, FediACConfig(robust_agg="trim", trim_frac=0.0, **base),
+            key)
+        for r, g in zip(ref[:3], got[:3]):
+            np.testing.assert_array_equal(np.asarray(r), np.asarray(g))
+        assert ref[3] == got[3]
+
+
+def test_engines_agree_under_robust_agg():
+    """Every registered engine (monolithic, stream, sharded) reproduces
+    the oracle bitwise under the trim and median closes — the client_sum
+    seam holds across the engine matrix."""
+    rng = np.random.default_rng(0)
+    u = jnp.asarray(rng.normal(size=(5, 144)).astype(np.float32))
+    key = jax.random.PRNGKey(13)
+    for mode, tf in (("trim", 0.25), ("median", 0.0)):
+        base = FediACConfig(k_frac=0.2, capacity_frac=0.25, bits=5,
+                            robust_agg=mode, trim_frac=tf)
+        ref = aggregate_stack(u, base, key)
+        for name in engines.names():
+            cfg = FediACConfig(**{**base.__dict__,
+                                  "engine": engines.get(name)})
+            got = aggregate_round(u, cfg, key)
+            for r, g in zip(ref[:3], got[:3]):
+                r, g = np.asarray(r), np.asarray(g)
+                assert r.shape == g.shape and np.array_equal(
+                    r.view(np.uint8), g.view(np.uint8)), (name, mode)
+            assert ref[3] == got[3], (name, mode)
+
+
+# ---------------------------------------------------------------------------
+# attacks move the round; the switch-side defenses answer
+# ---------------------------------------------------------------------------
+
+_CLEAN_KW = dict(loss=0.0, participation=1.0, seed=0)
+
+
+def test_attacks_perturb_the_round():
+    """Each attack family is live: Byzantine rounds report the cohort,
+    stuffed ballots and a delta that differs from the clean round's."""
+    cfg = FediACConfig(a=2, bits=12)
+    (clean,), _ = _run_rounds(cfg, AdversaryConfig(**_CLEAN_KW))
+    (att,), _ = _run_rounds(cfg, AdversaryConfig(
+        byzantine_frac=0.5, vote_stuff_frac=0.5, poison_scale=-4.0,
+        **_CLEAN_KW))
+    assert int(att[2]["byzantine"]) > 0
+    assert int(att[2]["stuffed_votes"]) > 0
+    assert int(np.sum(np.asarray(att[2]["byzantine_mask"]))) > 0
+    assert not bool(jnp.all(clean[0] == att[0]))
+
+
+def test_vote_budget_suppresses_stuffing():
+    """The per-client vote budget rejects ballots past the cap: stuffed
+    vote counts move back toward the clean round's GIA counts, and the
+    rejections are counted."""
+    cfg = FediACConfig(a=2, bits=12)
+    n_chunks = _D // cfg.vote_chunk
+    budget = int(np.ceil(cfg.k_frac * n_chunks)) + 1
+    attack = dict(byzantine_frac=0.5, vote_stuff_frac=0.9, **_CLEAN_KW)
+    (clean,), _ = _run_rounds(cfg, AdversaryConfig(**_CLEAN_KW))
+    (att,), _ = _run_rounds(cfg, AdversaryConfig(**attack))
+    (defended,), _ = _run_rounds(
+        cfg, AdversaryConfig(vote_budget=budget, **attack))
+    c0 = np.asarray(clean[2]["counts"], np.int64)
+    dist_att = np.abs(np.asarray(att[2]["counts"], np.int64) - c0).sum()
+    dist_def = np.abs(
+        np.asarray(defended[2]["counts"], np.int64) - c0).sum()
+    assert int(defended[2]["budget_rejected"]) > 0
+    assert dist_def < dist_att
+
+
+def test_trim_close_defends_sign_flip_poisoning():
+    """Coordinate-wise trimming answers the sign-flip/scaled-update
+    attack: the defended delta lands closer to the clean aggregate than
+    the undefended register sum under the same poisoned cohort."""
+    cfg_sum = FediACConfig(a=2, bits=12)
+    cfg_trim = FediACConfig(a=2, bits=12, robust_agg="trim", trim_frac=0.3)
+    attack = dict(byzantine_frac=0.3, poison_scale=-8.0, seed=1,
+                  loss=0.0, participation=1.0)
+    (clean,), _ = _run_rounds(cfg_sum, AdversaryConfig(
+        seed=1, loss=0.0, participation=1.0))
+    (att,), _ = _run_rounds(cfg_sum, AdversaryConfig(**attack))
+    (defended,), _ = _run_rounds(cfg_trim, AdversaryConfig(**attack))
+    d0 = np.asarray(clean[0], np.float64)
+    err_att = np.linalg.norm(np.asarray(att[0], np.float64) - d0)
+    err_def = np.linalg.norm(np.asarray(defended[0], np.float64) - d0)
+    assert int(defended[2]["trimmed_values"]) > 0
+    assert err_def < err_att
+
+
+def test_clip_ticks_clamps_scaled_updates():
+    """Int-domain magnitude clipping engages on the scaled-update attack
+    (clipped deposits are counted) and changes the aggregate; at 0 it is
+    the identity."""
+    cfg = FediACConfig(a=2, bits=12)
+    attack = dict(byzantine_frac=0.3, poison_scale=40.0, seed=1,
+                  loss=0.0, participation=1.0)
+    (att,), _ = _run_rounds(cfg, AdversaryConfig(**attack))
+    (clipped,), _ = _run_rounds(cfg, AdversaryConfig(
+        clip_ticks=64, **attack))
+    assert int(att[2]["clipped_values"]) == 0
+    assert int(clipped[2]["clipped_values"]) > 0
+    assert not bool(jnp.all(att[0] == clipped[0]))
+
+
+# ---------------------------------------------------------------------------
+# reputation and quarantine: the state machine and its checkpoint path
+# ---------------------------------------------------------------------------
+
+
+def test_reputation_update_state_machine():
+    """One update step, pinned: decay + masked signal accumulation, the
+    threshold trigger arming the quarantine counter and resetting the
+    score to probation (half threshold), then the counter draining."""
+    state = {"rep": jnp.asarray([0.0, 2.0], jnp.float32),
+             "quarantine": jnp.asarray([0, 0], jnp.int32)}
+    dyn = {"rep_decay": 0.5, "rep_threshold": 1.0, "quarantine_rounds": 3}
+    part = jnp.asarray([True, True])
+    sig = jnp.asarray([0.2, 0.5], jnp.float32)
+    st1, stats = reputation_update(state, part=part, signal=sig, dyn=dyn)
+    np.testing.assert_allclose(np.asarray(st1["rep"]), [0.2, 0.5])
+    np.testing.assert_array_equal(np.asarray(st1["quarantine"]), [0, 3])
+    assert int(stats["rep_flagged"]) == 1
+    assert int(stats["quarantined"]) == 1
+    # quarantined client sits out: no new signal, counter drains, score
+    # decays from probation — no re-trigger while suspended
+    st2, stats2 = reputation_update(
+        st1, part=jnp.asarray([True, False]),
+        signal=jnp.zeros(2, jnp.float32), dyn=dyn)
+    np.testing.assert_array_equal(np.asarray(st2["quarantine"]), [0, 2])
+    assert int(stats2["rep_flagged"]) == 0
+    np.testing.assert_allclose(np.asarray(st2["rep"]), [0.1, 0.25])
+
+
+def test_quarantine_excludes_and_readmits():
+    """Core-level engagement: a persistent attack drives flagged clients
+    into quarantine, quarantined clients never appear among that round's
+    participants, and the counter drains back to re-admission."""
+    cfg = FediACConfig(a=2, bits=12)
+    net = AdversaryConfig(byzantine_frac=0.4, vote_stuff_frac=0.8,
+                          poison_scale=-8.0, rep_decay=0.9,
+                          rep_threshold=1.0, rep_z_thresh=1.0,
+                          quarantine_rounds=2, loss=0.0,
+                          participation=1.0, seed=0)
+    rounds, _ = _run_rounds(cfg, net, rounds=8)
+    seen_quar = 0
+    readmitted = False
+    prev_q = None
+    for d, r, aux, state_in in rounds:
+        q = np.asarray(state_in["quarantine"])
+        part = np.asarray(aux["participants"])
+        assert not np.any(part & (q > 0))        # exclusion is absolute
+        seen_quar = max(seen_quar, int(np.sum(q > 0)))
+        if prev_q is not None and np.any((prev_q > 0) & (q == 0)):
+            readmitted = True
+        prev_q = q
+    assert seen_quar > 0                          # the defense engaged
+    assert readmitted                             # probation, not a ban
+
+
+_ADV_NET = AdversaryConfig(byzantine_frac=0.4, vote_stuff_frac=0.8,
+                           poison_scale=-8.0, rep_decay=0.9,
+                           rep_threshold=1.0, rep_z_thresh=1.0,
+                           quarantine_rounds=2, vote_budget=8, seed=4)
+
+
+def _adv_run(clients, test, rounds, ckpt=None, resume=False):
+    return run_federated(clients, test, FLConfig(
+        n_clients=6, rounds=rounds, local_steps=2, aggregator="fediac",
+        agg_kwargs={"cfg": FediACConfig(a=2, bits=12, robust_agg="trim",
+                                        trim_frac=0.25)},
+        seed=0, transport="packet", net=_ADV_NET,
+        ckpt_path=ckpt, resume=resume))
+
+
+def test_kill_and_resume_with_quarantine_state(small_fl):
+    """Crash-safe recovery composes with the reputation layer: kill a
+    defended run mid-quarantine, resume from the checkpoint — the
+    FLHistory equals the uninterrupted run's bit-exactly, and the
+    checkpointed agg_state carries a *non-empty* quarantine (the property
+    is not vacuously passing on cold state)."""
+    clients, test = small_fl
+    full = _adv_run(clients, test, 4)
+    with tempfile.TemporaryDirectory() as td:
+        ck = os.path.join(td, "byz.npz")
+        _adv_run(clients, test, 2, ckpt=ck)        # the "killed" run
+        st_ = load_run_state(ck)
+        resumed = _adv_run(clients, test, 4, ckpt=ck, resume=True)
+    assert st_["agg_state"] is not None
+    assert int(np.sum(np.asarray(st_["agg_state"]["quarantine"]) > 0)) > 0
+    assert np.any(np.asarray(st_["agg_state"]["rep"]) > 0)
+    assert resumed.acc == full.acc
+    assert resumed.loss == full.loss
+    assert resumed.wall_clock == full.wall_clock
+    assert resumed.traffic_mb == full.traffic_mb
